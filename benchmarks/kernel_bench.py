@@ -1,0 +1,92 @@
+"""Kernel micro-benchmarks.
+
+The container has no TPU, so Pallas timings here are *functional*
+(interpret mode).  What IS meaningful on CPU: the XLA reference paths'
+wall time (used by the serving/training examples) and the HLO-level
+arithmetic-intensity each kernel achieves, derived from its shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models.layers import chunked_attention
+
+from .util import Row, timeit
+
+__all__ = ["bench_kernels"]
+
+
+def _ai_attention(B, S, T, H, K, hd) -> float:
+    flops = 2 * 2 * B * H * S * T * hd
+    bytes_ = 2 * (B * S * H * hd + 2 * B * T * K * hd + B * S * H * hd)
+    return flops / bytes_
+
+
+def bench_kernels() -> list[Row]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # attention: XLA chunked path (the dry-run fallback)
+    B, S, H, K, hd = 2, 1024, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd), jnp.bfloat16)
+    fn = jax.jit(
+        lambda q, k, v: chunked_attention(q, k, v, causal=True, kv_chunk=256)
+    )
+    us = timeit(lambda: jax.block_until_ready(fn(q, k, v)))
+    rows.append(
+        Row(
+            "attn_xla_chunked_b2s1024h8kv2", us,
+            f"arith_intensity={_ai_attention(B, S, S, H, K, hd):.0f}flop/B",
+        )
+    )
+
+    # SSD chunked scan (jnp path)
+    B, S, nh, hp, ng, ds = 2, 1024, 8, 64, 1, 64
+    ks = [jax.random.fold_in(key, 10 + i) for i in range(6)]
+    x = jax.random.normal(ks[0], (B, S, nh, hp), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, ng, ds), jnp.bfloat16) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, ng, ds), jnp.bfloat16) * 0.3
+    D = jax.random.normal(ks[5], (nh,))
+    fn = jax.jit(lambda *a: ref.ssd_chunked_ref(*a, chunk=128))
+    us = timeit(lambda: jax.block_until_ready(fn(x, dt, A, Bm, Cm, D)))
+    intra_flops = 2 * B * nh * S * 128 * (ds + hp)
+    rows.append(
+        Row("ssd_chunked_b2s1024nh8", us,
+            f"intra_chunk_flops={intra_flops:.3g};chunk=128")
+    )
+
+    # RG-LRU associative scan (jnp path)
+    B, S, W = 2, 1024, 512
+    x = jax.random.normal(ks[0], (B, S, W))
+    r = jax.random.normal(ks[1], (B, S, W))
+    i = jax.random.normal(ks[2], (B, S, W))
+    lam = jax.random.normal(ks[3], (W,))
+    fn = jax.jit(lambda *a: ref.rglru_ref(*a))
+    us = timeit(lambda: jax.block_until_ready(fn(x, r, i, lam)))
+    rows.append(Row("rglru_assoc_scan_b2s1024w512", us, "log-depth scan"))
+
+    # Pallas kernels, interpret mode: correctness-path cost only
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    q32 = q.astype(jnp.float32)[:1, :256]
+    k32 = k.astype(jnp.float32)[:1, :256]
+    v32 = v.astype(jnp.float32)[:1, :256]
+    us = timeit(
+        lambda: jax.block_until_ready(
+            flash_attention_pallas(q32, k32, v32, causal=True, block_q=128,
+                                   block_kv=128, interpret=True)
+        ),
+        repeat=2,
+    )
+    rows.append(
+        Row("flash_attention_pallas_interpret_b1s256", us,
+            "functional only (no TPU in container)")
+    )
+    return rows

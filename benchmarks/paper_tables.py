@@ -1,0 +1,157 @@
+"""Paper tables/figures as benchmarks.
+
+One function per published artefact; each returns CSV rows with the
+reproduced statistic in `derived` and the scheduler wall time.
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper_examples import (
+    example1_fleet,
+    example1_tasks,
+    example2_fleet,
+    example2_tasks,
+    example3_fleet,
+    example3_tasks,
+)
+from repro.core import (
+    PADPSFRScheduler,
+    count_placeable,
+    erfair_context_switches,
+    place_shares,
+    sweep_fleet,
+)
+
+from .util import Row, timeit
+
+__all__ = [
+    "bench_example1",
+    "bench_example2",
+    "bench_example3",
+    "bench_fig5_trr",
+    "bench_fig6_workload",
+    "bench_fig7_avg_weight",
+    "bench_fig8_comparison",
+]
+
+
+def bench_example1() -> list[Row]:
+    """Table I + Fig 2: full schedule of Example 1."""
+    tasks, fleet = example1_tasks(), example1_fleet()
+    sched = PADPSFRScheduler(fleet)
+    us = timeit(lambda: sched.schedule(tasks), repeat=5)
+    res = sched.schedule(tasks, count_all_rejects=True)
+    shares = "/".join(str(round(s)) for s in res.combo.shares)
+    derived = (
+        f"TSS={res.n_tss};TFS={res.n_tfs};TNFS={res.n_tnfs};"
+        f"alg2_rejects={res.n_placement_rejects};rank={res.chosen_rank + 1};"
+        f"shares={shares};power={res.total_power:g};"
+        f"T3_split={':'.join(str(round(p)) for p in res.plan.splits[0].share_parts)}"
+    )
+    return [Row("example1_table1_fig2", us, derived)]
+
+
+def bench_example2() -> list[Row]:
+    """Fig 3: II(T3)=12 makes the Example-1 winner un-placeable."""
+    tasks, fleet = example2_tasks(), example2_fleet()
+
+    def probe():
+        return place_shares([48, 36, 24, 32, 24, 24], [2, 4, 12, 4, 6, 6], fleet)
+
+    us = timeit(probe)
+    plan = probe()
+    res = PADPSFRScheduler(fleet).schedule(tasks)
+    derived = (
+        f"paper_combo_feasible={plan.feasible};"
+        f"fallback_shares={'/'.join(str(round(s)) for s in res.combo.shares)};"
+        f"fallback_power={res.total_power:g}"
+    )
+    return [Row("example2_fig3", us, derived)]
+
+
+def bench_example3() -> list[Row]:
+    """Table II + Fig 4: Alveo-50 task set."""
+    tasks, fleet = example3_tasks(), example3_fleet()
+    sched = PADPSFRScheduler(fleet)
+    us = timeit(lambda: sched.schedule(tasks), repeat=20)
+    res = sched.schedule(tasks, count_all_rejects=True)
+    derived = (
+        f"TSS={res.n_tss};TFS={res.n_tfs};TNFS={res.n_tnfs};"
+        f"accepted={res.n_tfs - res.n_placement_rejects};"
+        f"shares={'/'.join(str(round(s)) for s in res.combo.shares)};"
+        f"power={res.total_power:g}"
+    )
+    return [Row("example3_table2_fig4", us, derived)]
+
+
+def _sweep_rows(metric: str, name: str) -> list[Row]:
+    tasks = example1_tasks()
+    base = example1_fleet()
+    n_fs = [3, 4, 5, 6]
+    t_cfgs = [2.0, 6.0, 10.0]
+
+    def run():
+        return sweep_fleet(tasks, base, n_fs, t_cfgs, with_placement=False)
+
+    us = timeit(run, repeat=2)
+    pts = run()
+    rows = []
+    for t_cfg in t_cfgs:
+        vals = [
+            f"{getattr(p, metric):.3g}"
+            for p in pts
+            if p.t_cfg == t_cfg
+        ]
+        rows.append(
+            Row(f"{name}_tcfg{t_cfg:g}", us / len(t_cfgs),
+                f"n_f={n_fs};{metric}={'/'.join(vals)}")
+        )
+    return rows
+
+
+def bench_fig5_trr() -> list[Row]:
+    """Fig 5: TRR(%) vs n_f for several t_cfg."""
+    return _sweep_rows("trr_eq7", "fig5_trr")
+
+
+def bench_fig6_workload() -> list[Row]:
+    """Fig 6: system workload threshold (%) vs n_f."""
+    return _sweep_rows("workload_threshold", "fig6_workload")
+
+
+def bench_fig7_avg_weight() -> list[Row]:
+    """Fig 7: average task weight threshold vs n_f."""
+    return _sweep_rows("avg_weight_threshold", "fig7_avg_weight")
+
+
+def bench_fig8_comparison() -> list[Row]:
+    """Fig 8: TRR of PADPS-FR vs refs [9]/[10] with honest capture/store.
+
+    Also reports the ER-fair uncontrolled context-switch count the paper
+    argues against (§I / §IV-C).
+    """
+    tasks = example1_tasks()
+    base = example1_fleet()
+    rows = []
+    for n_f in (4, 5, 6):
+        fleet = base.with_devices(n_f)
+
+        def ours():
+            return count_placeable(tasks, fleet)
+
+        us = timeit(ours, repeat=1, warmup=0)
+        n, _tfs, ours_ok = ours()
+        _, _, theirs_ok = count_placeable(
+            tasks, fleet, t_capture=12.0, t_store=12.0, repay_init=False
+        )
+        trr_ours = 100 * (n - ours_ok) / n
+        trr_theirs = 100 * (n - theirs_ok) / n
+        er = erfair_context_switches(tasks, fleet, quantum=1.0)
+        rows.append(
+            Row(
+                f"fig8_nf{n_f}", us,
+                f"TRR_ours={trr_ours:.1f}%;TRR_refs9_10={trr_theirs:.1f}%;"
+                f"erfair_switches={er}",
+            )
+        )
+    return rows

@@ -1,0 +1,76 @@
+"""Roofline report: render experiments/dryrun.json as the §Roofline table."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .util import Row
+
+__all__ = ["bench_roofline_report", "render_table", "load_results"]
+
+_DEFAULT = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun.json")
+
+
+def load_results(path: str = _DEFAULT) -> list[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+
+
+def render_table(rows: list[dict], mesh: str = "single") -> str:
+    """Markdown roofline table for one mesh."""
+    out = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "bottleneck | useful-FLOPs frac | roofline MFU | args/dev (GB) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") == "SKIP":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | — |"
+            )
+            continue
+        if r.get("status") != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL: {r.get('error','?')} |")
+            continue
+        out.append(
+            "| {arch} | {shape} | {c:.2f} | {m:.2f} | {x:.2f} | {b} | "
+            "{u:.2f} | {mfu:.4f} | {gb:.2f} |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                c=r["compute_s"] * 1e3,
+                m=r["memory_s"] * 1e3,
+                x=r["collective_s"] * 1e3,
+                b=r["bottleneck"],
+                u=r["useful_flops_frac"],
+                mfu=r["mfu"],
+                gb=r["arg_bytes"] / 1e9,
+            )
+        )
+    return "\n".join(out)
+
+
+def bench_roofline_report() -> list[Row]:
+    rows = load_results()
+    ok = [r for r in rows if r.get("status") == "OK"]
+    skip = [r for r in rows if r.get("status") == "SKIP"]
+    if not ok:
+        return [Row("roofline_report", 0.0, "no dryrun.json — run repro.launch.dryrun --all")]
+    by_bottleneck: dict[str, int] = {}
+    for r in ok:
+        by_bottleneck[r["bottleneck"]] = by_bottleneck.get(r["bottleneck"], 0) + 1
+    worst = min(
+        (r for r in ok if r["shape"] == "train_4k" and r["mesh"] == "single"),
+        key=lambda r: r["mfu"],
+        default=None,
+    )
+    derived = (
+        f"cells_ok={len(ok)};skips={len(skip)};bottlenecks={by_bottleneck};"
+        + (f"worst_train_mfu={worst['arch']}:{worst['mfu']:.4f}" if worst else "")
+    )
+    return [Row("roofline_report", 0.0, derived)]

@@ -1,0 +1,54 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One benchmark per paper table/figure (Tables I/II, Figs 2-8), plus the
+beyond-paper scheduler-scaling and kernel micro-benches and the roofline
+report over the dry-run artifacts.  Output: ``name,us_per_call,derived``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from .kernel_bench import bench_kernels
+from .paper_tables import (
+    bench_example1,
+    bench_example2,
+    bench_example3,
+    bench_fig5_trr,
+    bench_fig6_workload,
+    bench_fig7_avg_weight,
+    bench_fig8_comparison,
+)
+from .roofline_report import bench_roofline_report
+from .scheduler_scale import bench_scheduler_scale
+from .util import emit
+
+ALL = [
+    bench_example1,
+    bench_example2,
+    bench_example3,
+    bench_fig5_trr,
+    bench_fig6_workload,
+    bench_fig7_avg_weight,
+    bench_fig8_comparison,
+    bench_scheduler_scale,
+    bench_kernels,
+    bench_roofline_report,
+]
+
+
+def main() -> int:
+    rows = []
+    for fn in ALL:
+        try:
+            rows.extend(fn())
+        except Exception as e:  # a failing bench must not hide the others
+            from .util import Row
+
+            rows.append(Row(fn.__name__, float("nan"), f"ERROR:{type(e).__name__}:{e}"))
+    emit(rows)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Benchmark plumbing: timing + CSV rows."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+__all__ = ["timeit", "Row", "emit"]
+
+
+def timeit(fn: Callable, *, repeat: int = 5, warmup: int = 1) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class Row:
+    def __init__(self, name: str, us: float, derived: str = "") -> None:
+        self.name, self.us, self.derived = name, us, derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.1f},{self.derived}"
+
+
+def emit(rows) -> None:
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())

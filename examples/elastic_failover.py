@@ -1,0 +1,79 @@
+"""Elastic failover: slice loss -> PADPS-FR re-plan -> resume from ckpt.
+
+Simulates the full fault-tolerance loop on CPU:
+
+1. Plan 3 training jobs on a 4-slice fleet; start the highest-priority
+   one (reduced smollm) with checkpointing.
+2. Kill a slice mid-run (heartbeat silence): the controller re-plans on
+   3 slices — possibly shedding the lowest-priority job.
+3. Resume training from the last checkpoint; verify the loss curve
+   continues exactly where it left off.
+4. Slice returns: re-plan back to the 4-slice (lower-power) placement.
+
+Run:  PYTHONPATH=src python examples/elastic_failover.py
+"""
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.shapes import get_shape
+from repro.core import FleetSpec
+from repro.core.variants import JobSpec, make_task
+from repro.ft import ElasticController, FleetHealth
+from repro.launch.train import build_loop
+
+
+def main() -> int:
+    jobs = [
+        JobSpec(cfg=get_arch("smollm-135m"), shape=get_shape("train_4k"),
+                period_s=3600, steps_per_period=1000),
+        JobSpec(cfg=get_arch("mamba2-130m"), shape=get_shape("train_4k"),
+                period_s=3600, steps_per_period=800),
+        JobSpec(cfg=get_arch("qwen2-vl-2b"), shape=get_shape("train_4k"),
+                period_s=3600, steps_per_period=400),
+    ]
+    tasks = [make_task(j, chip_options=(16, 32, 64)) for j in jobs]
+    fleet = FleetSpec(n_f=4, t_slr=3600.0, t_cfg=45.0)
+    health = FleetHealth(4)
+    ctl = ElasticController(fleet, tasks, health=health)
+    print(f"initial plan ({ctl.current.plan and len(ctl.current.plan.scripts)} slices): "
+          f"{ctl.current.summary(tasks)}")
+
+    # --- training under the plan, phase 1 ---
+    ckpt = "/tmp/repro_failover_ckpt"
+    import shutil
+
+    shutil.rmtree(ckpt, ignore_errors=True)
+    loop, _ = build_loop("smollm-135m", steps=30, seq_len=64, batch=4,
+                         ckpt_dir=ckpt, log_every=0)
+    loop.config.total_steps = 15  # "crash" mid-run
+    loop.config.ckpt_every = 5
+    loop.run(jax.random.PRNGKey(0))
+    print(f"phase 1: trained to step {loop.history[-1]['step']}, "
+          f"loss {loop.history[-1]['loss']:.3f}")
+
+    # --- slice failure ---
+    ev = ctl.on_slice_down(3)
+    print(f"\nslice 3 DOWN -> re-plan on {ev.n_slices} slices: "
+          f"feasible={ev.result.feasible} dropped={ev.dropped_tasks} "
+          f"power={ev.result.total_power/1e3:.1f} kW")
+
+    # --- resume from checkpoint on the surviving fleet ---
+    loop2, _ = build_loop("smollm-135m", steps=30, seq_len=64, batch=4,
+                          ckpt_dir=ckpt, log_every=0)
+    loop2.run(jax.random.PRNGKey(0))
+    assert loop2.history[0]["step"] == 15, "must resume, not restart"
+    print(f"phase 2: resumed at step {loop2.history[0]['step']}, "
+          f"finished at {loop2.history[-1]['step']}, "
+          f"loss {loop2.history[-1]['loss']:.3f}")
+
+    # --- slice recovery ---
+    ev = ctl.on_slice_up(3)
+    print(f"\nslice 3 UP -> re-plan on {ev.n_slices} slices: "
+          f"power={ev.result.total_power/1e3:.1f} kW (back to optimum)")
+    print(f"\nevents: {[e.reason for e in ctl.events]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,49 @@
+"""End-to-end training driver: smollm-135m (~100M-class) for a few
+hundred steps with checkpointing, auto-resume and loss tracking.
+
+The synthetic stream has learnable structure (hash-chain tokens), so the
+loss demonstrably falls from ~ln(V) toward the noise floor.
+
+Run:  PYTHONPATH=src python examples/train_smollm.py [--steps 300]
+(Use --full on a real fleet; the reduced config keeps CPU wall time sane.)
+"""
+
+import argparse
+
+import jax
+
+from repro.launch.train import build_loop
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_smollm_ckpt")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    loop, _ = build_loop(
+        "smollm-135m",
+        full=args.full,
+        steps=args.steps,
+        seq_len=args.seq_len,
+        batch=args.batch,
+        lr=1e-3,
+        ckpt_dir=args.ckpt_dir,
+        log_every=20,
+    )
+    state = loop.run(jax.random.PRNGKey(0))
+
+    losses = [h["loss"] for h in loop.history]
+    n = max(len(losses) // 10, 1)
+    first, last = sum(losses[:n]) / n, sum(losses[-n:]) / n
+    print(f"\nsteps run: {len(losses)} (resumed at {loop.history[0]['step']})")
+    print(f"loss: {first:.4f} -> {last:.4f}  ({100 * (1 - last / first):.1f}% reduction)")
+    print(f"checkpoints in {args.ckpt_dir}: re-run to resume from step {int(state.step)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

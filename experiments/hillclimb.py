@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimb driver: one (cell, config) measurement per invocation.
+
+Each named iteration is a hypothesis (see EXPERIMENTS.md §Perf); this
+script lowers + compiles the cell with that configuration and appends
+the roofline terms to experiments/perf.json.
+
+  PYTHONPATH=src python experiments/hillclimb.py <cell> <iter>
+  PYTHONPATH=src python experiments/hillclimb.py --list
+"""
+
+import dataclasses
+import json
+import sys
+
+from repro.launch.dryrun import dryrun_cell
+from repro.models import ExecConfig
+
+
+def _ex(**kw) -> ExecConfig:
+    return ExecConfig(**{"remat": "full", "scan_layers": True, **kw})
+
+
+# cell -> iteration name -> kwargs for dryrun_cell
+MATRIX = {
+    "smollm": {
+        "arch": "smollm-135m",
+        "shape": "train_4k",
+        "mesh": "single",
+        "iters": {
+            "base": dict(ex=_ex(cp_attention="off")),
+            "cp": dict(ex=_ex(cp_attention="on")),
+            "cp_pbf16": dict(ex=_ex(cp_attention="on", attn_p_dtype="bfloat16")),
+            "cp_pbf16_unroll": dict(
+                ex=_ex(cp_attention="on", attn_p_dtype="bfloat16", unroll_causal=True)
+            ),
+            "cp_unroll": dict(ex=_ex(cp_attention="on", unroll_causal=True)),
+        },
+    },
+    "deepseek": {
+        "arch": "deepseek-67b",
+        "shape": "train_4k",
+        "mesh": "single",
+        "iters": {
+            "tp_dp": dict(rules_name="tp_dp", ex=_ex(cp_attention="off")),
+            "fsdp": dict(rules_name="fsdp_tp", ex=_ex(cp_attention="off")),
+            "fsdp_sp": dict(rules_name="fsdp_tp_sp", ex=_ex(cp_attention="off")),
+            "pbf16": dict(
+                rules_name="fsdp_tp_sp",
+                ex=_ex(cp_attention="off", attn_p_dtype="bfloat16"),
+            ),
+            "pbf16_unroll": dict(
+                rules_name="fsdp_tp_sp",
+                ex=_ex(cp_attention="off", attn_p_dtype="bfloat16", unroll_causal=True),
+            ),
+            "pbf16_chunk2k": dict(
+                rules_name="fsdp_tp_sp",
+                ex=_ex(cp_attention="off", attn_p_dtype="bfloat16", kv_chunk=2048),
+            ),
+            "chunk2k": dict(
+                rules_name="fsdp_tp_sp", ex=_ex(cp_attention="off", kv_chunk=2048)
+            ),
+            "chunk4k": dict(
+                rules_name="fsdp_tp_sp", ex=_ex(cp_attention="off", kv_chunk=4096)
+            ),
+        },
+    },
+    "dbrx": {
+        "arch": "dbrx-132b",
+        "shape": "train_4k",
+        "mesh": "single",
+        "iters": {
+            "base": dict(ex=_ex()),
+            "pbf16": dict(ex=_ex(attn_p_dtype="bfloat16")),
+            # expert-parallel dispatch buffer constraints (layers.py) —
+            # measured with the constraint code active:
+            "ep": dict(ex=_ex()),
+            "ep_chunk4k": dict(ex=_ex(kv_chunk=4096)),
+            # batched (vmap-free) dispatch: batch dim constrainable
+            "ep_batched": dict(ex=_ex()),
+            "ep_batched_chunk4k": dict(ex=_ex(kv_chunk=4096)),
+        },
+    },
+    "dbrx_multi": {
+        "arch": "dbrx-132b",
+        "shape": "train_4k",
+        "mesh": "multi",
+        "iters": {
+            "base": dict(ex=_ex()),
+            "compress": dict(ex=_ex(), compress_grads=True),
+        },
+    },
+}
+
+OUT = os.path.join(os.path.dirname(__file__), "perf.json")
+
+
+def main() -> int:
+    if "--list" in sys.argv:
+        for cell, spec in MATRIX.items():
+            print(cell, "->", ", ".join(spec["iters"]))
+        return 0
+    cell, it = sys.argv[1], sys.argv[2]
+    spec = MATRIX[cell]
+    kw = dict(spec["iters"][it])
+    row = dryrun_cell(spec["arch"], spec["shape"], spec["mesh"], **kw)
+    row["cell"] = cell
+    row["iter"] = it
+    ex = kw.get("ex")
+    row["ex"] = dataclasses.asdict(ex) if ex else {}
+    try:
+        with open(OUT) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        data = []
+    data = [r for r in data if not (r.get("cell") == cell and r.get("iter") == it)]
+    data.append(row)
+    with open(OUT, "w") as f:
+        json.dump(data, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

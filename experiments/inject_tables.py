@@ -1,0 +1,40 @@
+"""Render the §Roofline tables from dryrun.json into EXPERIMENTS.md."""
+
+import json
+import re
+import sys
+
+sys.path.insert(0, "src")
+from benchmarks.roofline_report import render_table  # noqa: E402
+
+
+def main():
+    rows = json.load(open("experiments/dryrun.json"))
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    rows = list(seen.values())
+    single = render_table(rows, "single")
+    multi = render_table(rows, "multi")
+
+    text = open("EXPERIMENTS.md").read()
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE_SINGLE -->.*?(?=\n### Multi-pod)",
+        "<!-- ROOFLINE_TABLE_SINGLE -->\n" + single + "\n",
+        text,
+        flags=re.S,
+    )
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE_MULTI -->.*?(?=\n## §Perf)",
+        "<!-- ROOFLINE_TABLE_MULTI -->\n" + multi + "\n",
+        text,
+        flags=re.S,
+    )
+    open("EXPERIMENTS.md", "w").write(text)
+    ok = sum(1 for r in rows if r.get("status") == "OK")
+    sk = sum(1 for r in rows if r.get("status") == "SKIP")
+    print(f"injected tables: {ok} OK rows, {sk} SKIP rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""moonshot-v1-16b-a3b — kimi/moonlight MoE, 64 experts top-6.
+
+[hf:moonshotai/Moonlight-16B-A3B; hf]  48L d_model=2048 16H (GQA kv=16)
+d_ff=1408 (per fine-grained expert) vocab=163840, MoE 64e top-6.
+"""
+
+from .base import ModelConfig, MoESpec, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="moonshot-v1-16b-a3b",
+        family="moe",
+        n_layers=48,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,
+        vocab=163840,
+        head_dim=128,
+        moe=MoESpec(n_experts=64, top_k=6),
+        rope="rope",
+        source="hf:moonshotai/Moonlight-16B-A3B",
+    )
+)

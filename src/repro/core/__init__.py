@@ -1,0 +1,57 @@
+# The paper's primary contribution: PADPS-FR — power-aware DP-fair/DP-wrap
+# scheduling of periodic hardware tasks on accelerator fleets (Algs 1-3),
+# plus the baselines and metrics it is evaluated against.
+
+from .task import FleetSpec, Task, TaskSetCombo, TaskVariant, combo_count
+from .feasibility import (
+    FeasibilityResult,
+    iter_feasible_pruned,
+    outer_sum,
+    search_feasible,
+)
+from .placement import DataSplit, DeviceScript, PlacementPlan, Segment, place_combo, place_shares
+from .scheduler import PADPSFRScheduler, ScheduleResult, select_lowest_power
+from .metrics import SweepPoint, avg_task_weight, sweep_fleet, system_workload, trr
+from .baselines import (
+    GreedyResult,
+    count_placeable,
+    edf_schedule,
+    erfair_context_switches,
+    llf_schedule,
+    preemptive_dpfair_schedule,
+)
+from .gantt import plan_rows, render_gantt
+
+__all__ = [
+    "FleetSpec",
+    "Task",
+    "TaskSetCombo",
+    "TaskVariant",
+    "combo_count",
+    "FeasibilityResult",
+    "iter_feasible_pruned",
+    "outer_sum",
+    "search_feasible",
+    "DataSplit",
+    "DeviceScript",
+    "PlacementPlan",
+    "Segment",
+    "place_combo",
+    "place_shares",
+    "PADPSFRScheduler",
+    "ScheduleResult",
+    "select_lowest_power",
+    "SweepPoint",
+    "avg_task_weight",
+    "sweep_fleet",
+    "system_workload",
+    "trr",
+    "GreedyResult",
+    "count_placeable",
+    "edf_schedule",
+    "erfair_context_switches",
+    "llf_schedule",
+    "preemptive_dpfair_schedule",
+    "plan_rows",
+    "render_gantt",
+]

@@ -1,0 +1,188 @@
+"""Algorithm 1 — Searching of Feasible Task Sets (paper §III-A1).
+
+Builds the TSS (all ``prod(nv_i)`` variant combinations), applies the
+workability condition (eq. 7)
+
+    sum_shr  <=  n_f * t_slr - n_t * t_cfg
+
+and partitions TSS into TFS (fit) / TNFS (not fit).
+
+Two engines are provided:
+
+* ``search_feasible`` — the paper's exhaustive enumeration, vectorised:
+  the sum-of-shares over the Cartesian product is an outer-sum computed
+  by numpy broadcasting, ~1000x faster than the paper's nested loops for
+  large products (beyond-paper optimisation; measured in
+  ``benchmarks/scheduler_scale.py``).
+* ``iter_feasible_pruned`` — branch-and-bound enumeration in ascending
+  power order that never materialises TSS; used when ``prod(nv_i)`` is
+  too large to hold (the paper's algorithm is O(prod nv_i) memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from .task import FleetSpec, Task, TaskSetCombo, combo_count, validate_tasks
+
+__all__ = [
+    "FeasibilityResult",
+    "search_feasible",
+    "iter_feasible_pruned",
+    "outer_sum",
+]
+
+
+@dataclasses.dataclass
+class FeasibilityResult:
+    """TFS/TNFS split plus the arrays needed downstream (Alg 2)."""
+
+    tasks: tuple[Task, ...]
+    fleet: FleetSpec
+    n_combos: int  # |TSS|
+    # Arrays over the full TSS, flattened in C order of variant indices.
+    sum_shr: np.ndarray  # (n_combos,)
+    total_power: np.ndarray  # (n_combos,)
+    fit_mask: np.ndarray  # (n_combos,) bool — eq. 7
+    budget: float  # RHS of eq. 7
+
+    @property
+    def n_tfs(self) -> int:
+        return int(self.fit_mask.sum())
+
+    @property
+    def n_tnfs(self) -> int:
+        return self.n_combos - self.n_tfs
+
+    def combo_at(self, flat_index: int) -> TaskSetCombo:
+        """Materialise one TSS row from its flat index."""
+        nvs = [t.nv for t in self.tasks]
+        idx = np.unravel_index(flat_index, nvs)
+        shares = tuple(
+            float(t.shares(self.fleet.t_slr)[j]) for t, j in zip(self.tasks, idx)
+        )
+        powers = tuple(float(t.variants[j].power) for t, j in zip(self.tasks, idx))
+        return TaskSetCombo(tuple(int(j) for j in idx), shares, powers)
+
+    def tfs_indices_by_power(self) -> np.ndarray:
+        """Flat indices of TFS rows, ascending total power (Alg 2 line 1).
+
+        Ties are broken by ascending sum-of-shares then flat index so the
+        ordering is deterministic.
+        """
+        tfs = np.flatnonzero(self.fit_mask)
+        # Stable sort: ties broken by TSS enumeration (flat-index) order,
+        # matching the paper's "Assc. Sort on TFS" over the generated list.
+        order = np.argsort(self.total_power[tfs], kind="stable")
+        return tfs[order]
+
+    def iter_tfs_by_power(self) -> Iterator[TaskSetCombo]:
+        for i in self.tfs_indices_by_power():
+            yield self.combo_at(int(i))
+
+
+def outer_sum(vectors: Sequence[np.ndarray]) -> np.ndarray:
+    """Sum over the Cartesian product of 1-D vectors, returned flat (C order).
+
+    outer_sum([a, b, c])[i*len(b)*len(c) + j*len(c) + k] == a[i]+b[j]+c[k]
+    """
+    acc = np.zeros((1,), dtype=np.float64)
+    for v in vectors:
+        acc = (acc[:, None] + np.asarray(v, dtype=np.float64)[None, :]).reshape(-1)
+    return acc
+
+
+def search_feasible(tasks: Sequence[Task], fleet: FleetSpec) -> FeasibilityResult:
+    """Algorithm 1, vectorised. Materialises |TSS| f64 arrays (twice).
+
+    Safe up to ~10^8 combinations on a 32 GB host; beyond that use
+    ``iter_feasible_pruned``.
+    """
+    tasks = tuple(tasks)
+    validate_tasks(tasks)
+    n_t = len(tasks)
+    n_combos = combo_count(tasks)
+    if n_combos > 200_000_000:
+        raise ValueError(
+            f"|TSS|={n_combos:,} too large to materialise; "
+            "use iter_feasible_pruned()"
+        )
+    share_vecs = [t.shares(fleet.t_slr) for t in tasks]
+    power_vecs = [t.powers() for t in tasks]
+    sum_shr = outer_sum(share_vecs)
+    total_power = outer_sum(power_vecs)
+    budget = fleet.workable_budget(n_t)
+    fit = sum_shr <= budget + 1e-9  # eq. 7 (tolerant <=)
+    return FeasibilityResult(
+        tasks=tasks,
+        fleet=fleet,
+        n_combos=n_combos,
+        sum_shr=sum_shr,
+        total_power=total_power,
+        fit_mask=fit,
+        budget=budget,
+    )
+
+
+def iter_feasible_pruned(
+    tasks: Sequence[Task], fleet: FleetSpec
+) -> Iterator[TaskSetCombo]:
+    """Yield TFS combos in ascending total-power order WITHOUT building TSS.
+
+    Best-first search over the variant lattice: each frontier node fixes the
+    variant of a prefix of tasks; its priority is its exact prefix power plus
+    the minimum achievable power of the suffix.  A node is pruned when its
+    prefix share plus the minimum achievable suffix share already violates
+    eq. 7 — the branch-and-bound step.  Memory is O(frontier), not O(|TSS|).
+
+    This is the engine behind fleet-scale scheduling (hundreds of jobs x
+    dozens of variants) where the paper's exhaustive TSS is intractable.
+    """
+    tasks = tuple(tasks)
+    validate_tasks(tasks)
+    n_t = len(tasks)
+    budget = fleet.workable_budget(n_t)
+
+    shares = [t.shares(fleet.t_slr) for t in tasks]
+    powers = [t.powers() for t in tasks]
+    # Per-task variant order by power (for monotone sibling expansion) and
+    # suffix minima for bounds.
+    order = [np.argsort(p, kind="stable") for p in powers]
+    min_pow = np.array([p.min() for p in powers])
+    min_shr = np.array([s.min() for s in shares])
+    suf_min_pow = np.concatenate([np.cumsum(min_pow[::-1])[::-1], [0.0]])
+    suf_min_shr = np.concatenate([np.cumsum(min_shr[::-1])[::-1], [0.0]])
+
+    # Node: (priority, tiebreak, depth, chosen tuple, prefix_pow, prefix_shr,
+    #        rank) where rank is the index into order[depth] *to try next*.
+    heap: list = []
+    counter = 0
+
+    def push(depth: int, chosen: tuple[int, ...], ppow: float, pshr: float) -> None:
+        nonlocal counter
+        if pshr + suf_min_shr[depth] > budget + 1e-9:
+            return  # bound: no completion can satisfy eq. 7
+        prio = ppow + suf_min_pow[depth]
+        heapq.heappush(heap, (prio, counter, depth, chosen, ppow, pshr))
+        counter += 1
+
+    push(0, (), 0.0, 0.0)
+    while heap:
+        _, _, depth, chosen, ppow, pshr = heapq.heappop(heap)
+        if depth == n_t:
+            shr = tuple(float(shares[k][j]) for k, j in enumerate(chosen))
+            pw = tuple(float(powers[k][j]) for k, j in enumerate(chosen))
+            yield TaskSetCombo(chosen, shr, pw)
+            continue
+        for rank in range(tasks[depth].nv):
+            j = int(order[depth][rank])
+            push(
+                depth + 1,
+                chosen + (j,),
+                ppow + float(powers[depth][j]),
+                pshr + float(shares[depth][j]),
+            )

@@ -1,0 +1,96 @@
+"""TPU power model + analytic roofline throughput for task variants.
+
+The paper characterises each task variant by measured (throughput,
+power) on synthesized bitstreams (Tables I/II).  On the TPU fleet we
+derive both from a calibrated analytic model over the same quantities
+the roofline deliverable uses — FLOPs, HBM bytes and collective bytes
+per step:
+
+    t_step  = max(compute term, memory term, collective term)
+    power   = n_chips * (idle + e_flop * flops/s + e_hbm * B/s + e_ici * B/s)
+
+Hardware constants are TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI); energy coefficients are calibrated so a fully
+compute-bound chip draws ~200 W and an idle chip ~75 W (documented
+assumption — the scheduler is agnostic to where the (th, pw) tables
+come from, and the paper's own tables ship as configs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["TPUSpec", "V5E", "PowerModel", "step_time_roofline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    name: str
+    peak_flops: float  # FLOP/s bf16 per chip
+    hbm_bw: float  # B/s per chip
+    ici_bw: float  # B/s per link
+    hbm_bytes: float  # HBM capacity per chip
+
+
+V5E = TPUSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16e9,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    """Energy model: P(chip) = idle + e_flop*F/s + e_hbm*B/s + e_ici*B/s."""
+
+    idle_w: float = 75.0
+    e_flop: float = 0.51e-12  # J/FLOP  -> ~100 W at 197 TFLOP/s
+    e_hbm: float = 30e-12  # J/B     -> ~25 W at 819 GB/s
+    e_ici: float = 10e-12  # J/B
+
+    def chip_power(
+        self, flops_per_s: float, hbm_Bps: float, ici_Bps: float
+    ) -> float:
+        return (
+            self.idle_w
+            + self.e_flop * flops_per_s
+            + self.e_hbm * hbm_Bps
+            + self.e_ici * ici_Bps
+        )
+
+    def job_power(
+        self,
+        n_chips: int,
+        step_time_s: float,
+        flops: float,
+        hbm_bytes: float,
+        ici_bytes: float,
+    ) -> float:
+        """Total W while the job runs (per-chip quantities / step)."""
+        if step_time_s <= 0:
+            return n_chips * self.idle_w
+        per_chip = self.chip_power(
+            flops / n_chips / step_time_s,
+            hbm_bytes / n_chips / step_time_s,
+            ici_bytes / n_chips / step_time_s,
+        )
+        return n_chips * per_chip
+
+
+def step_time_roofline(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    n_chips: int,
+    spec: TPUSpec = V5E,
+    *,
+    links_per_chip: int = 4,
+) -> tuple[float, dict[str, float]]:
+    """Roofline step time = max of the three terms (seconds) + the terms."""
+    compute = flops / (n_chips * spec.peak_flops)
+    memory = hbm_bytes / (n_chips * spec.hbm_bw)
+    collective = coll_bytes / (n_chips * links_per_chip * spec.ici_bw)
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    return max(terms.values()), terms

@@ -1,0 +1,147 @@
+"""Algorithm 2 top level + the PADPS-FR scheduler facade.
+
+``select_lowest_power`` walks the power-sorted TFS and returns the first
+combination whose placement simulation succeeds — by construction the
+minimum-power feasible configuration (paper §III-A2).  The facade bundles
+Alg 1 + Alg 2 + Alg 3 and reports the statistics the paper quotes
+(|TSS|, |TFS|, |TNFS|, placement rejects, chosen index).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Sequence
+
+from .feasibility import FeasibilityResult, iter_feasible_pruned, search_feasible
+from .placement import PlacementPlan, place_combo
+from .task import FleetSpec, Task, TaskSetCombo, combo_count
+
+__all__ = ["ScheduleResult", "select_lowest_power", "PADPSFRScheduler"]
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    feasible: bool
+    combo: TaskSetCombo | None
+    plan: PlacementPlan | None
+    chosen_rank: int  # 0-based rank in power-sorted TFS (-1 if none)
+    n_tss: int
+    n_tfs: int
+    n_tnfs: int
+    n_placement_rejects: int  # TFS rows Alg 2 rejected before success
+    total_power: float
+
+    def summary(self, tasks: Sequence[Task] | None = None) -> str:
+        if not self.feasible:
+            return (
+                f"INFEASIBLE: |TSS|={self.n_tss} |TFS|={self.n_tfs} "
+                f"|TNFS|={self.n_tnfs}; all TFS rows failed placement"
+            )
+        assert self.combo is not None
+        desc = self.combo.describe(tasks) if tasks else str(self.combo.variant_idx)
+        return (
+            f"|TSS|={self.n_tss} |TFS|={self.n_tfs} |TNFS|={self.n_tnfs} "
+            f"placement-rejects={self.n_placement_rejects} "
+            f"chosen-rank={self.chosen_rank} power={self.total_power:g} "
+            f"shares={[round(s, 4) for s in self.combo.shares]} [{desc}]"
+        )
+
+
+def select_lowest_power(
+    combos_by_power: Iterable[TaskSetCombo],
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    *,
+    count_all_rejects: bool = False,
+    **placement_kw,
+) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
+    """Alg 2 lines 2-10: first placeable combo in ascending-power order.
+
+    Returns (combo, plan, rank, rejects_before_success).  With
+    ``count_all_rejects`` the walk continues past the winner to count every
+    placement-rejected TFS row (the paper's "156 rejected" statistic).
+    """
+    rejects = 0
+    winner: tuple[TaskSetCombo, PlacementPlan, int] | None = None
+    for rank, combo in enumerate(combos_by_power):
+        plan = place_combo(combo, tasks, fleet, **placement_kw)
+        if plan.feasible:
+            if winner is None:
+                winner = (combo, plan, rank)
+            if not count_all_rejects:
+                break
+        else:
+            rejects += 1
+    if winner is None:
+        return None, None, -1, rejects
+    return winner[0], winner[1], winner[2], rejects
+
+
+class PADPSFRScheduler:
+    """Power-Aware DP-fair Scheduling with Full Reconfiguration.
+
+    The paper's contribution as a reusable component: construct with a
+    :class:`FleetSpec`, call :meth:`schedule` with the periodic task set.
+    ``exhaustive=None`` auto-selects the vectorised exhaustive engine for
+    small variant products and the branch-and-bound streaming engine for
+    large ones.
+    """
+
+    def __init__(
+        self,
+        fleet: FleetSpec,
+        *,
+        exhaustive: bool | None = None,
+        exhaustive_limit: int = 2_000_000,
+    ) -> None:
+        self.fleet = fleet
+        self.exhaustive = exhaustive
+        self.exhaustive_limit = exhaustive_limit
+
+    def feasibility(self, tasks: Sequence[Task]) -> FeasibilityResult:
+        return search_feasible(tasks, self.fleet)
+
+    def _combo_stream(
+        self, tasks: Sequence[Task]
+    ) -> tuple[Iterator[TaskSetCombo], FeasibilityResult | None]:
+        n = combo_count(tasks)
+        use_exhaustive = (
+            self.exhaustive
+            if self.exhaustive is not None
+            else n <= self.exhaustive_limit
+        )
+        if use_exhaustive:
+            feas = search_feasible(tasks, self.fleet)
+            return feas.iter_tfs_by_power(), feas
+        return iter_feasible_pruned(tasks, self.fleet), None
+
+    def schedule(
+        self,
+        tasks: Sequence[Task],
+        *,
+        count_all_rejects: bool = False,
+        **placement_kw,
+    ) -> ScheduleResult:
+        tasks = tuple(tasks)
+        stream, feas = self._combo_stream(tasks)
+        combo, plan, rank, rejects = select_lowest_power(
+            stream,
+            tasks,
+            self.fleet,
+            count_all_rejects=count_all_rejects,
+            **placement_kw,
+        )
+        n_tss = combo_count(tasks)
+        n_tfs = feas.n_tfs if feas is not None else -1
+        n_tnfs = feas.n_tnfs if feas is not None else -1
+        return ScheduleResult(
+            feasible=combo is not None,
+            combo=combo,
+            plan=plan,
+            chosen_rank=rank,
+            n_tss=n_tss,
+            n_tfs=n_tfs,
+            n_tnfs=n_tnfs,
+            n_placement_rejects=rejects,
+            total_power=combo.total_power if combo else float("inf"),
+        )

@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline."""
+
+from .pipeline import SyntheticLM, make_batch_fn
+
+__all__ = ["SyntheticLM", "make_batch_fn"]

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the perf-critical compute hot-spots, each with a
+# pure-jnp oracle in ref.py and a jit'd dispatch wrapper in ops.py:
+#   flash_attention  — tiled online-softmax attention (causal/GQA/window)
+#   ssd_scan         — Mamba-2 SSD chunked dual form
+#   rglru_scan       — RG-LRU gated linear recurrence
+from . import ref
+
+__all__ = ["ref"]

@@ -1,0 +1,200 @@
+"""Pallas TPU flash attention: tiled online-softmax, causal/GQA/window.
+
+TPU-native design (not a CUDA port):
+
+* Grid ``(B * H, n_q_blocks, n_kv_blocks)`` — the kv axis is innermost,
+  so the f32 running-max / denominator / accumulator live in VMEM
+  scratch across kv steps (TPU grid steps execute sequentially on a
+  core; scratch persists between them).
+* GQA without materialised repeat: the K/V BlockSpec ``index_map``
+  folds the query head onto its kv head (``h // group``), so each q
+  head streams its kv head's tiles straight from HBM.
+* Block shapes default to (512, head_dim) q-tiles x (512, head_dim)
+  kv-tiles — 128-aligned in the lane dimension for the MXU, and sized
+  so q/k/v tiles + f32 accumulator fit comfortably in ~16 MB VMEM.
+* Causal masking is block-aware: fully-masked kv tiles are skipped with
+  ``pl.when`` (no FLOPs, no VMEM traffic beyond the prefetch).
+
+Validated against ``ref.attention_ref`` in interpret mode (tests sweep
+shapes/dtypes); on CPU the public wrapper in ``ops.py`` always selects
+interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scratch,
+    l_scratch,
+    acc_scratch,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    q_offset: int,
+    block_q: int,
+    block_kv: int,
+    seq_q: int,
+    seq_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, _NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_kv
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (block_q, hd)
+        k = k_ref[0].astype(jnp.float32)  # (block_kv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (block_q, block_kv)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = kpos < seq_kv
+        if causal:
+            mask = mask & (qpos >= kpos)
+        if window > 0:
+            mask = mask & (qpos - kpos < window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scratch[...]  # (block_q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scratch[...] = l_scratch[...] * corr + p.sum(axis=1, keepdims=True)
+        m_scratch[...] = m_new
+        acc_scratch[...] = acc_scratch[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    if causal:
+        # static grid — use pl.when for the runtime block skip
+        @pl.when(q_start + block_q - 1 >= k_start)
+        def _run():
+            _compute()
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scratch[...], 1e-30)
+        o_ref[0] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "q_offset",
+        "block_q",
+        "block_kv",
+        "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, T, K, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    n_q = pl.cdiv(S, block_q)
+    n_kv = pl.cdiv(T, block_kv)
+
+    # Pad to block multiples: Pallas blocks are clipped dynamic-slice
+    # style at array edges, which would misalign partial tiles.  The
+    # kv mask (kpos < seq_kv) hides the padding; padded q rows are
+    # sliced off below.
+    Sp, Tp = n_q * block_q, n_kv * block_kv
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+
+    # (B*H, Sp, hd) query-head-major; k/v stay (B*K, Tp, hd)
+    qr = jnp.moveaxis(q, 2, 1).reshape(B * H, Sp, hd)
+    kr = jnp.moveaxis(k, 2, 1).reshape(B * K, Tp, hd)
+    vr = jnp.moveaxis(v, 2, 1).reshape(B * K, Tp, hd)
+
+    def kv_index(bh, qi, ki):
+        b, h = bh // H, bh % H
+        return (b * K + h // g, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_kv=block_kv,
+        seq_q=S,
+        seq_kv=T,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd), kv_index),
+            pl.BlockSpec((1, block_kv, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+        # m, l, acc — f32 VMEM scratch persisting across kv grid steps
+        scratch_shapes=_scratches(block_q, hd),
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    return jnp.moveaxis(out.reshape(B, H, Sp, hd), 1, 2)[:, :S]
+
+
+def _scratches(block_q: int, hd: int):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, hd), jnp.float32),
+    ]

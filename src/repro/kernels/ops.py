@@ -1,0 +1,82 @@
+"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Pallas path compiles natively; everywhere else (this CPU
+container, the dry-run) the wrappers run the kernels in ``interpret``
+mode — or, for the model forward paths, the models call the jnp
+references directly (``repro.models`` uses ``ExecConfig.attn_impl``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .rglru_scan import rglru_scan_pallas
+from .ssd_scan import ssd_scan_pallas
+
+__all__ = ["flash_attention", "ssd_scan", "rglru_scan", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    q_offset=0,
+    kv_len=None,
+    causal=True,
+    window=0,
+    block_q=512,
+    block_kv=512,
+):
+    """Flash attention with automatic fallback.
+
+    The Pallas kernel covers the static full-sequence cases (train /
+    prefill).  Decode (S == 1 with a runtime ``kv_len``) and traced
+    ``q_offset`` fall back to the chunked-XLA path, which is
+    memory-bound anyway and gains nothing from a custom kernel.
+    """
+    from repro.models.layers import chunked_attention
+
+    S = q.shape[1]
+    if S == 1 or kv_len is not None or not isinstance(q_offset, int):
+        return chunked_attention(
+            q, k, v, q_offset=q_offset, kv_len=kv_len, causal=causal,
+            window=window, kv_chunk=min(1024, k.shape[1]),
+        )
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=not on_tpu(),
+    )
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk=128, return_state=False):
+    """Mamba-2 SSD chunked scan (Pallas on TPU, interpret elsewhere)."""
+    S = x.shape[1]
+    if S % chunk != 0:
+        while S % chunk:
+            chunk -= 1
+    return ssd_scan_pallas(
+        x, dt, A, Bm, Cm, D, chunk=chunk, return_state=return_state,
+        interpret=not on_tpu(),
+    )
+
+
+def rglru_scan(x, r_gate, i_gate, log_lambda, *, c=8.0, return_state=False):
+    """RG-LRU blocked scan (Pallas on TPU, interpret elsewhere)."""
+    return rglru_scan_pallas(
+        x, r_gate, i_gate, log_lambda, c=c, return_state=return_state,
+        interpret=not on_tpu(),
+    )

@@ -1,0 +1,270 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(`tests/test_kernels.py` sweeps shapes/dtypes with assert_allclose) and
+the implementations the models fall back to on non-TPU backends (the
+multi-pod dry-run lowers these; the Pallas path is selected with
+``impl='pallas'`` on TPU).
+
+* ``attention_ref``    — exact softmax attention (GQA, causal, window).
+* ``ssd_ref``          — Mamba-2 SSD, naive O(S^2) materialised form.
+* ``ssd_chunked_ref``  — SSD chunked dual form (the TPU-native
+  reformulation: intra-chunk quadratic matmuls + inter-chunk state
+  recurrence).  Mathematically identical to ``ssd_ref``.
+* ``rglru_ref``        — RG-LRU gated linear recurrence (Griffin).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "attention_ref",
+    "ssd_ref",
+    "ssd_chunked_ref",
+    "ssd_decode_step",
+    "rglru_ref",
+    "rglru_decode_step",
+]
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_offset: int = 0,
+    kv_len: jax.Array | None = None,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Exact attention oracle.  q: (B,S,H,hd), k/v: (B,T,K,hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, g, hd) / math.sqrt(hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32))
+    qpos = q_offset + jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window > 0:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality, arXiv:2405.21060)
+# ---------------------------------------------------------------------------
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, nh, hp)
+    dt: jax.Array,  # (B, S, nh)       — softplus already applied
+    A: jax.Array,  # (nh,)             — negative decay rates
+    Bm: jax.Array,  # (B, S, ng, ds)
+    Cm: jax.Array,  # (B, S, ng, ds)
+    D: jax.Array,  # (nh,)             — skip connection
+) -> jax.Array:
+    """Naive SSD: y_t = sum_{s<=t} C_t^T (prod_{r=s+1..t} a_r) B_s x_s dt_s.
+
+    Materialises the (S, S) semiseparable matrix per head — O(S^2) memory;
+    oracle only.  Heads are grouped onto B/C groups: ng divides nh.
+    """
+    Bb, S, nh, hp = x.shape
+    ng = Bm.shape[2]
+    rep = nh // ng
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)  # (B,S,nh,ds)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+
+    logdecay = dtf * Af[None, None, :]  # (B,S,nh) log a_t
+    cum = jnp.cumsum(logdecay, axis=1)  # (B,S,nh)
+    # L[t, s] = exp(cum[t] - cum[s]) for s <= t else 0
+    diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B, t, s, nh)
+    Lmask = jnp.tril(jnp.ones((S, S), bool))
+    Lmat = jnp.where(Lmask[None, :, :, None], jnp.exp(diff), 0.0)
+    # scores G[t,s] = C_t . B_s
+    G = jnp.einsum("bthd,bshd->btsh", Cf, Bf)  # (B,t,s,nh)
+    M = G * Lmat
+    y = jnp.einsum("btsh,bshp,bsh->bthp", M, xf, dtf)
+    y = y + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_chunked_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    D: jax.Array,
+    *,
+    chunk: int = 64,
+    initial_state: jax.Array | None = None,
+    return_state: bool = False,
+):
+    """Chunked dual form: O(S * chunk) memory, MXU-friendly matmuls.
+
+    Splits the sequence into chunks; within a chunk the quadratic form of
+    ``ssd_ref`` applies; across chunks a (nh, hp, ds) state is carried:
+
+        state_{c+1} = decay_chunk * state_c + B_c^T (x_c dt_c decay_in)
+        y_c         = intra(x_c) + C_c (decay_out * state_c)
+    """
+    Bb, S, nh, hp = x.shape
+    ng, ds = Bm.shape[2], Bm.shape[3]
+    rep = nh // ng
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    xf = x.astype(jnp.float32).reshape(Bb, nc, chunk, nh, hp)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, chunk, nh)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2).reshape(Bb, nc, chunk, nh, ds)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2).reshape(Bb, nc, chunk, nh, ds)
+
+    logdec = dtf * Af[None, None, None, :]  # (B,nc,C,nh)
+    cum = jnp.cumsum(logdec, axis=2)  # within-chunk cumulative
+    total = cum[:, :, -1, :]  # (B,nc,nh) — full-chunk log decay
+
+    # --- intra-chunk (quadratic, per chunk) ---
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,t,s,nh)
+    Lmask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(Lmask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    G = jnp.einsum("bcthd,bcshd->bctsh", Cf, Bf)
+    y_intra = jnp.einsum("bctsh,bcshp,bcsh->bcthp", G * Lmat, xf, dtf)
+
+    # --- chunk states ---
+    # decay from position s to end of chunk: exp(total - cum_s)
+    dec_in = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,C,nh)
+    states = jnp.einsum("bcshd,bcsh,bcshp->bchdp", Bf, dtf * dec_in, xf)
+    # (B, nc, nh, ds, hp) — per-chunk outgoing state contribution
+
+    # --- inter-chunk recurrence over chunks ---
+    dec_chunk = jnp.exp(total)  # (B,nc,nh)
+
+    def scan_body(carry, inp):
+        st_in, dc = inp  # (B,nh,ds,hp), (B,nh)
+        new = carry * dc[:, :, None, None] + st_in
+        return new, carry  # emit state *entering* the chunk
+
+    init = (
+        jnp.zeros((Bb, nh, ds, hp), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    final_state, state_in = lax.scan(
+        scan_body,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(dec_chunk, 1, 0)),
+    )
+    state_in = jnp.moveaxis(state_in, 0, 1)  # (B,nc,nh,ds,hp)
+
+    # --- inter-chunk output: y += C_t * decay(0..t) * state_in ---
+    dec_out = jnp.exp(cum)  # (B,nc,C,nh) decay from chunk start to t (inclusive)
+    y_inter = jnp.einsum("bcthd,bcth,bchdp->bcthp", Cf, dec_out, state_in)
+
+    y = (y_intra + y_inter).reshape(Bb, S, nh, hp)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, nh, ds, hp) f32
+    x: jax.Array,  # (B, nh, hp)
+    dt: jax.Array,  # (B, nh)
+    A: jax.Array,  # (nh,)
+    Bm: jax.Array,  # (B, ng, ds)
+    Cm: jax.Array,  # (B, ng, ds)
+    D: jax.Array,  # (nh,)
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence (O(1) decode).  Returns (y, new_state)."""
+    nh = x.shape[1]
+    ng = Bm.shape[1]
+    rep = nh // ng
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)  # (B,nh,ds)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    a = jnp.exp(dtf * A.astype(jnp.float32)[None, :])  # (B,nh)
+    upd = jnp.einsum("bhd,bhp->bhdp", Bf, xf * dtf[..., None])
+    new_state = state * a[:, :, None, None] + upd
+    y = jnp.einsum("bhd,bhdp->bhp", Cf, new_state)
+    y = y + xf * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma, arXiv:2402.19427)
+# ---------------------------------------------------------------------------
+
+
+def rglru_ref(
+    x: jax.Array,  # (B, S, W)
+    r_gate: jax.Array,  # (B, S, W) — recurrence gate pre-sigmoid
+    i_gate: jax.Array,  # (B, S, W) — input gate pre-sigmoid
+    log_lambda: jax.Array,  # (W,)  — learnable decay logits
+    *,
+    c: float = 8.0,
+    initial_state: jax.Array | None = None,
+    return_state: bool = False,
+):
+    """RG-LRU:  a_t = exp(-c * softplus(Λ) * sigmoid(r_t)),
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(i_t) * x_t).
+
+    Associative-scan formulation (parallel over S).
+    """
+    xf = x.astype(jnp.float32)
+    rf = jax.nn.sigmoid(r_gate.astype(jnp.float32))
+    i_f = jax.nn.sigmoid(i_gate.astype(jnp.float32))
+    lam = jax.nn.softplus(log_lambda.astype(jnp.float32))[None, None, :]
+    log_a = -c * lam * rf  # (B,S,W), log of decay in (0,1)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_f * xf)
+
+    if initial_state is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * initial_state.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    a_sc, h = lax.associative_scan(combine, (a, gated), axis=1)
+    h = h.astype(x.dtype)
+    if return_state:
+        return h, h[:, -1].astype(jnp.float32)
+    return h
+
+
+def rglru_decode_step(
+    state: jax.Array,  # (B, W) f32
+    x: jax.Array,  # (B, W)
+    r_gate: jax.Array,
+    i_gate: jax.Array,
+    log_lambda: jax.Array,
+    *,
+    c: float = 8.0,
+) -> tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    rf = jax.nn.sigmoid(r_gate.astype(jnp.float32))
+    i_f = jax.nn.sigmoid(i_gate.astype(jnp.float32))
+    lam = jax.nn.softplus(log_lambda.astype(jnp.float32))[None, :]
+    a = jnp.exp(-c * lam * rf)
+    h = a * state + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_f * xf)
+    return h.astype(x.dtype), h

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: Mamba-2 SSD, chunked dual form.
+
+TPU-native rethink of the GPU selective-scan: instead of a warp-level
+sequential scan, the sequence is blocked into chunks where
+
+* the *intra-chunk* term is a (chunk x chunk) masked matmul — MXU work,
+* the *inter-chunk* term is a (ds, hp) state carried in VMEM scratch
+  across the innermost (sequential) grid axis.
+
+Grid: ``(B, nh, n_chunks)`` — chunks innermost so the state scratch
+persists between steps of the same (batch, head).
+
+Validated in interpret mode against ``ref.ssd_chunked_ref`` /
+``ref.ssd_ref`` over shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, chunk, hp)
+    dt_ref,  # (1, 1, chunk)
+    a_ref,  # (1,)
+    b_ref,  # (1, 1, chunk, ds)
+    c_ref,  # (1, 1, chunk, ds)
+    d_ref,  # (1,)
+    y_ref,  # (1, 1, chunk, hp)
+    st_ref,  # (1, 1, ds, hp) — final state output
+    state,  # VMEM scratch (ds, hp) f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+    n_c = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (chunk, hp)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (chunk,)
+    A = a_ref[0].astype(jnp.float32)  # ()
+    Bc = b_ref[0, 0].astype(jnp.float32)  # (chunk, ds)
+    Cc = c_ref[0, 0].astype(jnp.float32)
+    D = d_ref[0].astype(jnp.float32)
+
+    logdec = dt * A  # (chunk,)
+    cum = jnp.cumsum(logdec)  # (chunk,)
+    total = cum[-1]
+
+    # intra-chunk quadratic form
+    diff = cum[:, None] - cum[None, :]  # (t, s)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    Lmat = jnp.where(tri, jnp.exp(diff), 0.0)
+    G = jax.lax.dot_general(
+        Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (t, s)
+    xdt = x * dt[:, None]  # (chunk, hp)
+    y = jax.lax.dot_general(
+        G * Lmat, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # inter-chunk: contribution of the carried state
+    y = y + jax.lax.dot_general(
+        Cc * jnp.exp(cum)[:, None],
+        state[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # state update: state' = exp(total) * state + B^T (x dt decay_in)
+    dec_in = jnp.exp(total - cum)  # (chunk,)
+    contrib = jax.lax.dot_general(
+        Bc,
+        xdt * dec_in[:, None],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (ds, hp)
+    new_state = jnp.exp(total) * state[...] + contrib
+    state[...] = new_state
+
+    y = y + x * D
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_c - 1)
+    def _emit_state():
+        st_ref[0, 0] = new_state.astype(st_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "return_state", "interpret")
+)
+def ssd_scan_pallas(
+    x: jax.Array,  # (B, S, nh, hp)
+    dt: jax.Array,  # (B, S, nh)
+    A: jax.Array,  # (nh,)
+    Bm: jax.Array,  # (B, S, ng, ds)
+    Cm: jax.Array,  # (B, S, ng, ds)
+    D: jax.Array,  # (nh,)
+    *,
+    chunk: int = 128,
+    return_state: bool = False,
+    interpret: bool = False,
+):
+    Bb, S, nh, hp = x.shape
+    ng, ds = Bm.shape[2], Bm.shape[3]
+    rep = nh // ng
+    assert S % chunk == 0, (S, chunk)
+    n_c = S // chunk
+
+    xt = jnp.moveaxis(x, 1, 2)  # (B, nh, S, hp)
+    dtt = jnp.moveaxis(dt, 1, 2)  # (B, nh, S)
+    Bt = jnp.moveaxis(Bm, 1, 2)  # (B, ng, S, ds)
+    Ct = jnp.moveaxis(Cm, 1, 2)
+
+    grid = (Bb, nh, n_c)
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hp), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, chunk, ds), lambda b, h, c, _r=rep: (b, h // _r, c, 0)),
+            pl.BlockSpec((1, 1, chunk, ds), lambda b, h, c, _r=rep: (b, h // _r, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hp), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, ds, hp), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, nh, S, hp), x.dtype),
+            jax.ShapeDtypeStruct((Bb, nh, ds, hp), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((ds, hp))],
+        interpret=interpret,
+    )(xt, dtt, A, Bt, Ct, D)
+
+    y = jnp.moveaxis(y, 1, 2)  # (B, S, nh, hp)
+    if return_state:
+        return y, st
+    return y
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the step function the shape demands
+(train_step / prefill_step / serve_step), derives in/out shardings from
+the logical-axis rules, lowers from ShapeDtypeStructs (no allocation),
+compiles for the production mesh, and records
+
+* ``memory_analysis()``  — proves the cell fits per-device HBM,
+* ``cost_analysis()``    — FLOPs / bytes for §Roofline,
+* parsed collective bytes + op counts (from the HLO text),
+* the three roofline terms + bottleneck + MFU estimate.
+
+Results are appended to a JSON file so a sweep can resume.  Skipped
+cells (long_500k on full-attention archs) are recorded as SKIP rows.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun.json
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, list_archs
+from repro.configs.shapes import SHAPES, cell_applicability, get_shape
+from repro.models import ExecConfig, Model
+from repro.models.model import (
+    decode_input_specs,
+    prefill_batch_specs,
+    train_batch_specs,
+)
+from repro.optim import AdamW
+from repro.roofline import analyze_compiled
+from repro.sharding import (
+    PRESETS,
+    activation_sharding,
+    batch_axes_tree,
+    state_axes_tree,
+    tree_shardings,
+)
+from repro.train.step import TrainState, make_train_step, train_state_axes
+from repro.launch.mesh import make_production_mesh
+
+__all__ = ["dryrun_cell", "main"]
+
+
+def _abstract_train_state(model: Model, *, compress: bool = False) -> TrainState:
+    params = model.abstract_params()
+    sds = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t
+    )
+    return TrainState(
+        params=params,
+        opt_state={"m": sds(params), "v": sds(params)},
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        ef_residual=sds(params) if compress else None,
+    )
+
+
+def _model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * shape.tokens
+
+
+def default_rules(kind: str) -> str:
+    """Shape-aware preset: training/prefill wants FSDP + sequence-parallel
+    activations; decode wants the KV-cache time axis on 'model' (GQA kv
+    head counts don't fill a 16-wide axis)."""
+    return "sp_serve" if kind == "decode" else "fsdp_tp_sp"
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    *,
+    rules_name: str = "auto",
+    ex: ExecConfig | None = None,
+    compress_grads: bool = False,
+    verbose: bool = True,
+) -> dict:
+    """Lower + compile one cell; returns the result-row dict."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    ok, reason = cell_applicability(cfg, shape)
+    if not ok:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "SKIP", "reason": reason,
+        }
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    if rules_name == "auto":
+        rules_name = default_rules(shape.kind)
+    rules = PRESETS[rules_name]
+    model = Model(cfg, ex or ExecConfig(remat=cfg.remat, scan_layers=True))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    # In/out shardings are explicit NamedShardings; the activation_sharding
+    # context additionally pins intermediate activations at block
+    # boundaries (without it GSPMD de-shards the batch — see
+    # sharding/ctx.py).
+    with activation_sharding(mesh, rules):
+        if shape.kind == "train":
+            state = _abstract_train_state(model, compress=compress_grads)
+            batch = train_batch_specs(cfg, shape)
+            axes = train_state_axes(model, compress=compress_grads)
+            state_sh = tree_shardings(state, axes, mesh, rules)
+            batch_sh = tree_shardings(batch, batch_axes_tree(batch), mesh, rules)
+            step = make_train_step(model, AdamW(1e-4), compress_grads=compress_grads)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, NamedSharding(mesh, P())),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state, batch)
+        elif shape.kind == "prefill":
+            params = model.abstract_params("bfloat16")
+            batch = prefill_batch_specs(cfg, shape)
+            p_sh = tree_shardings(params, model.param_axes(), mesh, rules)
+            b_sh = tree_shardings(batch, batch_axes_tree(batch), mesh, rules)
+            step = lambda p, b: model.prefill(p, b)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            params = model.abstract_params("bfloat16")
+            inputs = decode_input_specs(cfg, shape)
+            p_sh = tree_shardings(params, model.param_axes(), mesh, rules)
+            st_sh = tree_shardings(
+                inputs["state"], state_axes_tree(inputs["state"]), mesh, rules
+            )
+            tok_sh = tree_shardings(
+                inputs["tokens"], ("batch",), mesh, rules
+            )
+            idx_sh = NamedSharding(mesh, P())
+            from repro.sharding import resolve_spec
+
+            logits_sh = NamedSharding(
+                mesh,
+                resolve_spec(
+                    ("batch", "vocab"),
+                    (shape.global_batch, cfg.vocab),
+                    mesh,
+                    rules,
+                ),
+            )
+            step = lambda p, st, tok, idx: model.decode_step(p, st, tok, idx)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, st_sh, tok_sh, idx_sh),
+                out_shardings=(logits_sh, st_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                params, inputs["state"], inputs["tokens"], inputs["idx"]
+            )
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # Exact resident argument bytes per device from the sharding specs
+    # (XLA's memory_analysis().argument_size_in_bytes is unreliable for
+    # some partitioned modules on the host backend).
+    import numpy as _np
+
+    def _shard_bytes(tree_abs, tree_sh) -> float:
+        tot = 0.0
+        for sds, sh in zip(jax.tree.leaves(tree_abs), jax.tree.leaves(tree_sh)):
+            shard = sh.shard_shape(sds.shape)
+            tot += float(_np.prod(shard)) * sds.dtype.itemsize
+        return tot
+
+    if shape.kind == "train":
+        args_per_dev = _shard_bytes(state, state_sh) + _shard_bytes(batch, batch_sh)
+    elif shape.kind == "prefill":
+        args_per_dev = _shard_bytes(params, p_sh) + _shard_bytes(batch, b_sh)
+    else:
+        args_per_dev = (
+            _shard_bytes(params, p_sh)
+            + _shard_bytes(inputs["state"], st_sh)
+            + _shard_bytes(inputs["tokens"], tok_sh)
+        )
+
+    hlo = compiled.as_text()
+    res = analyze_compiled(
+        compiled,
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        n_chips=n_chips,
+        model_flops=_model_flops(cfg, shape),
+        hlo_text=hlo,
+    )
+    mem = compiled.memory_analysis()
+    row = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "OK",
+        "rules": rules_name,
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": res.flops_per_device,
+        "hbm_bytes_per_device": res.hbm_bytes_per_device,
+        "coll_bytes_per_device": res.coll_bytes_per_device,
+        "coll_per_op": res.coll.per_op if res.coll else {},
+        "coll_counts": res.coll.per_op_count if res.coll else {},
+        "arg_bytes": args_per_dev,
+        "xla_arg_bytes": float(getattr(mem, "argument_size_in_bytes", 0) or 0),
+        "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0) or 0),
+        "out_bytes": float(getattr(mem, "output_size_in_bytes", 0) or 0),
+        **{k: v for k, v in res.to_row().items() if k not in ("arch", "shape", "mesh", "chips")},
+    }
+    if verbose:
+        t = res.terms()
+        print(
+            f"[{arch} x {shape_name} x {mesh_name}] OK chips={n_chips} "
+            f"compile={t_compile:.1f}s "
+            f"compute={t['compute']*1e3:.2f}ms memory={t['memory']*1e3:.2f}ms "
+            f"coll={t['collective']*1e3:.2f}ms bottleneck={res.bottleneck()} "
+            f"mfu={res.mfu():.3f} "
+            f"args/dev={args_per_dev/1e9:.2f}GB"
+        )
+    return row
+
+
+def _load(out):
+    try:
+        with open(out) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--rules", default="auto", choices=["auto"] + list(PRESETS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--force", action="store_true", help="recompute existing rows")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in list_archs() for s in SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required without --all")
+        cells = [(args.arch, args.shape)]
+
+    results = _load(args.out) if args.out else []
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("rules", "fsdp_tp")) for r in results}
+
+    failures = 0
+    for arch, shape in cells:
+        for mesh_name in meshes:
+            key = (arch, shape, mesh_name, args.rules)
+            if not args.force and key in done:
+                continue
+            try:
+                row = dryrun_cell(arch, shape, mesh_name, rules_name=args.rules)
+            except Exception as e:
+                traceback.print_exc()
+                row = {
+                    "arch": arch, "shape": shape, "mesh": mesh_name,
+                    "rules": args.rules, "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                }
+                failures += 1
+            if row.get("status") == "SKIP":
+                print(f"[{arch} x {shape} x {mesh_name}] SKIP — {row['reason']}")
+            results = [r for r in results if (r["arch"], r["shape"], r["mesh"], r.get("rules", "fsdp_tp")) != key]
+            results.append(row)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

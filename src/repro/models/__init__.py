@@ -1,0 +1,38 @@
+"""Pure-JAX model zoo for the assigned architectures.
+
+Families: dense GQA transformer, MoE, Mamba-2 SSD, RG-LRU hybrid,
+encoder-decoder, VLM (M-RoPE).  All layer-stacked + lax.scan'd, with
+logical-axis parameter specs consumed by ``repro.sharding``.
+"""
+
+from .model import (
+    ExecConfig,
+    Model,
+    cross_entropy,
+    decode_input_specs,
+    prefill_batch_specs,
+    train_batch_specs,
+)
+from .params import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    logical_axes,
+    param_bytes,
+    param_count,
+)
+
+__all__ = [
+    "ExecConfig",
+    "Model",
+    "cross_entropy",
+    "decode_input_specs",
+    "prefill_batch_specs",
+    "train_batch_specs",
+    "ParamSpec",
+    "abstract_params",
+    "init_params",
+    "logical_axes",
+    "param_bytes",
+    "param_count",
+]

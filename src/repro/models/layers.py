@@ -1,0 +1,368 @@
+"""Shared neural layers: norms, rotary embeddings, attention, MLP, MoE.
+
+All functions are pure; parameters arrive as (sub)trees built from the
+spec builders in the sibling model files.  Activations compute in
+``cfg.dtype`` (bf16 on TPU) with f32 softmax/norm accumulators.
+
+The attention entry point dispatches between the pure-XLA chunked
+online-softmax implementation (used for CPU dry-runs and as the oracle)
+and the Pallas TPU kernel (``repro.kernels``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "rms_norm",
+    "make_rope_freqs",
+    "apply_rope",
+    "apply_mrope",
+    "chunked_attention",
+    "swiglu",
+    "moe_layer",
+    "moe_aux_loss",
+]
+
+_NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf / rms) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and Qwen2-VL's multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def make_rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    # x: (..., hd); cos/sin: broadcastable (..., hd//2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """Standard RoPE.  x: (B, S, H, hd); positions: (B, S) int."""
+    freqs = make_rope_freqs(x.shape[-1], theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, hd//2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: tuple[int, ...],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  positions: (B, S, 3) = (t, h, w) ids.
+
+    The ``head_dim//2`` frequency slots are partitioned into
+    ``sections`` (e.g. 16/24/24); slot ``i`` rotates by the position
+    stream its section is assigned to.  Text tokens carry t == h == w,
+    reducing exactly to standard RoPE.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = make_rope_freqs(x.shape[-1], theta)  # (half,)
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )  # (half,) in {0,1,2}
+    pos = positions.astype(jnp.float32)  # (B, S, 3)
+    pos_per_slot = jnp.take(pos, sec_id, axis=-1)  # (B, S, half)
+    ang = pos_per_slot * freqs  # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+# ---------------------------------------------------------------------------
+# Attention — chunked online-softmax (flash-attention algorithm in XLA)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    causal: bool = True,
+    window: int = 0,
+    kv_chunk: int = 1024,
+    unroll_causal: bool = False,
+    p_dtype: str = "float32",
+) -> jax.Array:
+    """GQA attention with bounded memory: O(S * kv_chunk) score tiles.
+
+    q: (B, S, H, hd);  k, v: (B, T, K, hd) with H = K * group.
+    ``q_offset``: absolute position of q[0] (prefill continuation /
+    decode).  ``kv_len``: valid prefix length of k/v (decode caches);
+    None means all T positions are valid.  ``window`` > 0 enables
+    sliding-window (local) masking:  qpos - kpos < window.
+
+    ``unroll_causal`` unrolls the kv-chunk loop and *skips chunks that
+    are entirely masked* for every query — the compute-roofline
+    optimisation recorded in EXPERIMENTS.md §Perf (a lax.scan must
+    execute every chunk; unrolling lets dead chunks disappear from the
+    HLO).  Only valid when q_offset is a static int.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, S, K, g, hd)
+
+    nc = -(-T // kv_chunk)
+    Tp = nc * kv_chunk
+    if Tp != T:
+        pad = [(0, 0), (0, Tp - T), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    kc = jnp.moveaxis(k.reshape(B, nc, kv_chunk, K, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, kv_chunk, K, hd), 1, 0)
+
+    qpos = q_offset + jnp.arange(S)
+    valid_len = T if kv_len is None else kv_len
+
+    def chunk_scores(carry, kci, vci, c0):
+        m, l, acc = carry
+        s = jnp.einsum(
+            "bskgd,bckd->bkgsc", qf, kci.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        kpos = c0 + jnp.arange(kv_chunk)
+        mask = kpos[None, :] < valid_len
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        if window > 0:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        mc = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - mc[..., None])
+        corr = jnp.exp(m - mc)
+        l = l * corr + p.sum(axis=-1)
+        # p @ v in p_dtype (bf16 halves the dominant score traffic; the
+        # accumulator stays f32 via preferred_element_type)
+        pdt = jnp.dtype(p_dtype)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgsc,bckd->bkgsd", p.astype(pdt), vci.astype(pdt),
+            preferred_element_type=jnp.float32,
+        )
+        return mc, l, acc
+
+    m0 = jnp.full((B, K, g, S), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, g, S), jnp.float32)
+    a0 = jnp.zeros((B, K, g, S, hd), jnp.float32)
+
+    if unroll_causal and isinstance(q_offset, int):
+        carry = (m0, l0, a0)
+        for c in range(nc):
+            c0 = c * kv_chunk
+            # Skip chunks fully beyond the causal horizon of ALL queries.
+            if causal and c0 > q_offset + S - 1:
+                continue
+            # Skip chunks fully outside every query's window.
+            if window > 0 and (q_offset - (c0 + kv_chunk - 1)) >= window:
+                continue
+            carry = chunk_scores(carry, kc[c], vc[c], c0)
+        m, l, acc = carry
+    else:
+        def body(carry, xs):
+            kci, vci, c0 = xs
+            return chunk_scores(carry, kci, vci, c0), None
+
+        starts = jnp.arange(nc) * kv_chunk
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, starts))
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, K, g, S, hd)
+    out = jnp.moveaxis(out, 3, 1)  # (B, S, K, g, hd)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    from repro.sharding.ctx import shard
+
+    g = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, w_down.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Mixture-of-Experts — sort-based capacity dispatch (TPU-native:
+# contiguous expert slabs -> dense batched matmuls on the MXU, instead
+# of a GPU-style scatter of warp-sized groups).
+# ---------------------------------------------------------------------------
+
+
+def _route_group(
+    xg: jax.Array,
+    router: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    top_k: int,
+    capacity: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Route one group of tokens (vmapped).  xg: (S, D)."""
+    from repro.sharding.ctx import shard
+
+    S, D = xg.shape
+    E = router.shape[1]
+    logits = xg.astype(jnp.float32) @ router.astype(jnp.float32)  # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, top_k)  # (S, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    e_flat = idx.reshape(-1)  # token-major (S*k,)
+    t_flat = jnp.repeat(jnp.arange(S), top_k)
+    order = jnp.argsort(e_flat, stable=True)
+    e_s, t_s = e_flat[order], t_flat[order]
+    w_s = w.reshape(-1)[order]
+
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(S * top_k) - starts[e_s]
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, capacity)  # overflow -> sacrificial slot
+
+    buf = jnp.zeros((E, capacity + 1, D), xg.dtype)
+    buf = buf.at[e_s, pos_c].set(xg[t_s] * keep[:, None].astype(xg.dtype))
+    buf = buf[:, :capacity]
+    # Expert parallelism: each device runs only its local experts; GSPMD
+    # otherwise replicates the FFN and all-reduces outputs (4 TB/dev
+    # measured on dbrx — §Perf).  The vmap batch dim stays unconstrained.
+    buf = shard(buf, "expert", None, None)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(xg.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(xg.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xg.dtype) * u
+    h = shard(h, "expert", None, None)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xg.dtype))  # (E, cap, D)
+    y = shard(y, "expert", None, None)
+
+    y_tok = y[e_s, pos_c] * (keep[:, None] * w_s[:, None]).astype(xg.dtype)
+    out = jnp.zeros((S, D), xg.dtype).at[t_s].add(y_tok)
+    return out, probs
+
+
+def moe_layer(
+    x: jax.Array,
+    router: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float,
+    impl: str = "vmap",
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed MoE over groups = batch rows.  x: (B, S, D).
+
+    Returns (out, router_probs (B, S, E)) — probs feed the load-balance
+    auxiliary loss.  Expert weights: (E, D, F) / (E, F, D); dispatch is
+    per-group (sort-based, static capacity ceil(S*k/E*cf)).
+
+    Two dispatch implementations (§Perf measured both on dbrx train_4k):
+    * ``vmap`` (default): per-group routing under vmap with the expert
+      dim constrained to 'model'.  GSPMD replicates the unconstrained
+      vmap batch dim inside the expert FFN (compute 6x), but collectives
+      stay sane — net best (MFU 0.067 vs 0.033 unconstrained).
+    * ``batched``: explicit batch dim, fully constrainable buffer — but
+      the 3-D data-dependent scatter forces GSPMD into a degenerate
+      all-gather plan (collective 7 -> 173 s).  Kept as the measured
+      refutation; the production fix is a shard_map'd all-to-all
+      dispatch (future work).
+    """
+    from repro.sharding.ctx import shard
+
+    B, S, D = x.shape
+    E = router.shape[1]
+    capacity = max(1, int(math.ceil(S * top_k / E * capacity_factor)))
+    x = shard(x, "batch", "seq", None)
+
+    if impl == "vmap":
+        fn = lambda xg: _route_group(xg, router, w_gate, w_up, w_down, top_k, capacity)
+        out, probs = jax.vmap(fn)(x)
+        return shard(out, "batch", "seq", None), shard(probs, "batch", "seq", None)
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), router.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, S, E)
+    w, idx = lax.top_k(probs, top_k)  # (B, S, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    SK = S * top_k
+    e_flat = idx.reshape(B, SK)  # token-major per row
+    t_flat = jnp.broadcast_to(jnp.repeat(jnp.arange(S), top_k)[None], (B, SK))
+    order = jnp.argsort(e_flat, axis=1, stable=True)
+    e_s = jnp.take_along_axis(e_flat, order, axis=1)
+    t_s = jnp.take_along_axis(t_flat, order, axis=1)
+    w_s = jnp.take_along_axis(w.reshape(B, SK), order, axis=1)
+
+    counts = jax.nn.one_hot(e_flat, E, dtype=jnp.int32).sum(axis=1)  # (B, E)
+    starts = jnp.cumsum(counts, axis=1) - counts
+    pos = jnp.arange(SK)[None] - jnp.take_along_axis(starts, e_s, axis=1)
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, capacity)  # overflow -> sacrificial slot
+
+    b_idx = jnp.arange(B)[:, None]
+    x_sorted = jnp.take_along_axis(x, t_s[..., None], axis=1)  # (B, SK, D)
+    buf = jnp.zeros((B, E, capacity + 1, D), x.dtype)
+    buf = buf.at[b_idx, e_s, pos_c].set(x_sorted * keep[..., None].astype(x.dtype))
+    buf = buf[:, :, :capacity]
+    # Expert parallelism: batch->data, expert->model — each device runs
+    # only its local experts on its local groups.  Without the explicit
+    # constraint GSPMD replicates the expert FFN and all-reduces outputs
+    # (measured: 4 TB/dev of all-reduce on dbrx train_4k — see §Perf).
+    buf = shard(buf, "batch", "expert", None, None)
+
+    g = jnp.einsum("becd,edf->becf", buf, w_gate.astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", buf, w_up.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", "expert", None, None)
+    y = jnp.einsum("becf,efd->becd", h, w_down.astype(x.dtype))  # (B, E, cap, D)
+    y = shard(y, "batch", "expert", None, None)
+
+    y_tok = y[b_idx, e_s, pos_c] * (keep[..., None] * w_s[..., None]).astype(x.dtype)
+    out = jnp.zeros((B, S, D), x.dtype).at[b_idx, t_s].add(y_tok)
+    return shard(out, "batch", "seq", None), shard(probs, "batch", "seq", None)
+
+
+def moe_aux_loss(probs: jax.Array, top_k: int) -> jax.Array:
+    """Switch-style load-balance loss over all routed tokens.
+
+    probs: (..., E) router softmax.  loss = E * mean(frac_tokens_e * mean_prob_e).
+    """
+    E = probs.shape[-1]
+    flat = probs.reshape(-1, E)
+    # differentiable proxy for assignment fraction: top-k hard mask
+    _, idx = lax.top_k(flat, top_k)
+    hard = jnp.zeros_like(flat).at[jnp.arange(flat.shape[0])[:, None], idx].set(1.0)
+    frac = hard.mean(axis=0) / top_k
+    mean_prob = flat.mean(axis=0)
+    return E * jnp.sum(frac * mean_prob)

@@ -1,0 +1,197 @@
+"""Unified model facade over all assigned architecture families.
+
+``Model`` dispatches on ``cfg.family`` to the family implementation and
+exposes the four lowered entry points the launcher/dry-run consume:
+
+* ``loss``         — training objective (next-token CE + MoE aux)
+* ``forward``      — full-sequence logits (prefill without cache)
+* ``prefill``      — full sequence -> (last_logits, decode state)
+* ``decode_step``  — one token + state -> (logits, state)
+
+plus abstract-input builders (``train_batch_specs`` etc.) so every
+(arch x shape) cell lowers from ``ShapeDtypeStruct``s with zero
+allocation.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from . import encdec, rglru, ssm, transformer
+from .params import abstract_params, init_params, logical_axes, param_count
+from .transformer import ExecConfig
+
+__all__ = [
+    "Model",
+    "ExecConfig",
+    "cross_entropy",
+    "train_batch_specs",
+    "prefill_batch_specs",
+    "decode_input_specs",
+    "VLM_PATCHES",
+]
+
+VLM_PATCHES = 256  # vision-frontend stub: fixed patch-embedding prefix
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE.  logits: (B,S,V); labels: (B,S) (already aligned)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, ex: ExecConfig | None = None) -> None:
+        self.cfg = cfg
+        self.ex = ex or ExecConfig(remat=cfg.remat, scan_layers=cfg.scan_layers)
+
+    # ---- parameters -----------------------------------------------------
+    def specs(self) -> dict:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return ssm.ssm_specs(cfg)
+        if cfg.family == "hybrid":
+            return rglru.hybrid_specs(cfg)
+        if cfg.family == "encdec":
+            return encdec.encdec_specs(cfg)
+        return transformer.lm_specs(cfg)
+
+    def init(self, key: jax.Array) -> dict:
+        return init_params(self.specs(), key)
+
+    def abstract_params(self, dtype: str | None = None) -> dict:
+        tree = abstract_params(self.specs())
+        if dtype is not None:
+            dt = jnp.dtype(dtype)
+            tree = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dt), tree)
+        return tree
+
+    def param_axes(self) -> dict:
+        return logical_axes(self.specs())
+
+    def n_params(self) -> int:
+        return param_count(self.specs())
+
+    # ---- training / full forward ----------------------------------------
+    def forward(self, params: dict, batch: dict) -> jax.Array:
+        cfg, ex = self.cfg, self.ex
+        if cfg.family == "ssm":
+            logits, _ = ssm.ssm_forward(cfg, ex, params, batch)
+        elif cfg.family == "hybrid":
+            logits, _ = rglru.hybrid_forward(cfg, ex, params, batch)
+        elif cfg.family == "encdec":
+            logits, _ = encdec.encdec_forward(cfg, ex, params, batch)
+        else:
+            logits, _ = transformer.lm_forward(cfg, ex, params, batch)
+        return logits
+
+    def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        cfg, ex = self.cfg, self.ex
+        if cfg.family == "ssm":
+            logits, aux = ssm.ssm_forward(cfg, ex, params, batch)
+        elif cfg.family == "hybrid":
+            logits, aux = rglru.hybrid_forward(cfg, ex, params, batch)
+        elif cfg.family == "encdec":
+            logits, aux = encdec.encdec_forward(cfg, ex, params, batch)
+        else:
+            logits, aux = transformer.lm_forward(cfg, ex, params, batch)
+        ce = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        loss = ce + self.ex.moe_aux_coef * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ---- serving ---------------------------------------------------------
+    def prefill(self, params: dict, batch: dict):
+        """Returns (last_token_logits, decode_state)."""
+        cfg, ex = self.cfg, self.ex
+        if cfg.family == "ssm":
+            logits, _, state = ssm.ssm_forward(cfg, ex, params, batch, return_state=True)
+        elif cfg.family == "hybrid":
+            logits, _, state = rglru.hybrid_forward(cfg, ex, params, batch, return_state=True)
+        elif cfg.family == "encdec":
+            logits, _, state = encdec.encdec_forward(cfg, ex, params, batch, return_cache=True)
+        else:
+            logits, _, state = transformer.lm_forward(cfg, ex, params, batch, return_cache=True)
+        return logits[:, -1], state
+
+    def decode_step(self, params: dict, state, tokens: jax.Array, idx: jax.Array):
+        cfg, ex = self.cfg, self.ex
+        if cfg.family == "ssm":
+            return ssm.ssm_decode_step(cfg, ex, params, state, tokens, idx)
+        if cfg.family == "hybrid":
+            return rglru.hybrid_decode_step(cfg, ex, params, state, tokens, idx)
+        if cfg.family == "encdec":
+            return encdec.encdec_decode_step(cfg, ex, params, state, tokens, idx)
+        return transformer.lm_decode_step(cfg, ex, params, state, tokens, idx)
+
+    def init_state(self, batch_size: int, max_len: int, enc_len: int | None = None):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return ssm.init_ssm_state(cfg, batch_size)
+        if cfg.family == "hybrid":
+            return rglru.init_hybrid_state(cfg, batch_size)
+        if cfg.family == "encdec":
+            return encdec.init_encdec_cache(cfg, batch_size, max_len, enc_len or max_len)
+        return transformer.init_cache(cfg, batch_size, max_len)
+
+    def abstract_state(self, batch_size: int, max_len: int, enc_len: int | None = None):
+        zeros = jax.eval_shape(
+            lambda: self.init_state(batch_size, max_len, enc_len)
+        )
+        return zeros
+
+
+# ---------------------------------------------------------------------------
+# Abstract input builders (ShapeDtypeStruct — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    emb_dt = cfg.dtype
+    if cfg.family == "encdec":
+        return {
+            "enc_embeds": _sds((B, S, cfg.d_model), emb_dt),
+            "tokens": _sds((B, S), "int32"),
+            "labels": _sds((B, S), "int32"),
+        }
+    if cfg.family == "vlm":
+        P = VLM_PATCHES
+        return {
+            "tokens": _sds((B, S - P), "int32"),
+            "patch_embeds": _sds((B, P, cfg.d_model), emb_dt),
+            "positions": _sds((B, S, 3), "int32"),
+            "labels": _sds((B, S), "int32"),
+        }
+    return {
+        "tokens": _sds((B, S), "int32"),
+        "labels": _sds((B, S), "int32"),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    """Inputs for one serve_step: new token ids + fill index + state."""
+    B, T = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    state = model.abstract_state(B, T, enc_len=min(T, 4096))
+    return {
+        "tokens": _sds((B,), "int32"),
+        "idx": _sds((), "int32"),
+        "state": state,
+    }

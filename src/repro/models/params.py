@@ -1,0 +1,165 @@
+"""Parameter specification trees with logical sharding axes.
+
+Every model in the zoo describes its parameters as a nested dict of
+:class:`ParamSpec` (shape, dtype, logical axes, initializer).  From one
+spec tree we derive
+
+* ``init_params``  — materialised arrays (PRNG-split deterministically
+  by tree path),
+* ``logical_axes`` — a matching tree of logical-axis tuples consumed by
+  ``repro.sharding.rules`` to build ``NamedSharding``s,
+* ``abstract_params`` — ``ShapeDtypeStruct``s for allocation-free
+  lowering (the multi-pod dry-run).
+
+Logical axis names used across the zoo:
+
+``layers``  stacked-layer leading axis (scanned, never sharded)
+``embed``   model width d_model            -> fsdp-style 'data' shard
+``heads``   query heads x head_dim         -> 'model'
+``kv``      kv heads x head_dim            -> 'model'
+``mlp``     feed-forward hidden            -> 'model'
+``vocab``   vocabulary                     -> 'model'
+``expert``  MoE expert                     -> 'model' (expert parallel)
+``state``   SSM/LRU recurrent state width  -> 'model'
+``conv``    conv kernel taps               -> replicated
+``None``    replicated dimension
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ParamSpec",
+    "init_params",
+    "logical_axes",
+    "abstract_params",
+    "param_bytes",
+    "param_count",
+    "map_specs",
+]
+
+Initializer = str  # "normal" | "zeros" | "ones" | "embed" | "lecun" | "recurrent"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: Initializer = "lecun"
+    dtype: str = "float32"
+    # fan-in override for stacked specs where the leading 'layers' axis
+    # must not count toward the initializer's fan computation
+    fan_in_dims: tuple[int, ...] | None = None
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def map_specs(fn: Callable[[tuple[str, ...], ParamSpec], Any], specs: Any) -> Any:
+    """Map over a spec tree with path, preserving dict structure."""
+
+    def rec(node: Any, path: tuple[str, ...]) -> Any:
+        if _is_spec(node):
+            return fn(path, node)
+        if isinstance(node, dict):
+            return {k: rec(v, path + (k,)) for k, v in node.items()}
+        raise TypeError(f"unexpected node at {path}: {type(node)}")
+
+    return rec(specs, ())
+
+
+def _fan_in(spec: ParamSpec) -> int:
+    dims = spec.fan_in_dims
+    if dims is None:
+        # default: all but the last dim (weights are [..., in, out] or [in, out])
+        if len(spec.shape) <= 1:
+            return max(1, int(np.prod(spec.shape)))
+        dims = tuple(range(len(spec.shape) - 1))
+        # skip a leading stacked-layer axis
+        if spec.axes and spec.axes[0] == "layers" and len(spec.shape) > 2:
+            dims = tuple(d for d in dims if d != 0)
+    return max(1, int(np.prod([spec.shape[d] for d in dims])))
+
+
+def _init_one(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        # GPT-2-style 0.02 std: keeps tied-embedding logits O(1) at init
+        return (0.02 * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+    if spec.init == "normal":
+        return (0.02 * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+    if spec.init == "lecun":
+        scale = 1.0 / math.sqrt(_fan_in(spec))
+        return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+    if spec.init == "recurrent":
+        # RG-LRU / SSM log-recurrence parameters: uniform in a stable range
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        return jnp.log(u / (1.0 - u)).astype(dtype)  # logit of decay
+    raise ValueError(f"unknown initializer {spec.init}")
+
+
+def _path_seed(path: tuple[str, ...]) -> int:
+    # Deterministic, order-independent folding of the tree path.
+    h = 0
+    for p in path:
+        for ch in p:
+            h = (h * 1000003 + ord(ch)) % (2**31 - 1)
+        h = (h * 1000003 + 7) % (2**31 - 1)
+    return h
+
+
+def init_params(specs: Any, key: jax.Array) -> Any:
+    """Materialise a parameter tree from a spec tree (path-keyed PRNG)."""
+
+    def build(path: tuple[str, ...], spec: ParamSpec) -> jax.Array:
+        return _init_one(jax.random.fold_in(key, _path_seed(path)), spec)
+
+    return map_specs(build, specs)
+
+
+def logical_axes(specs: Any) -> Any:
+    return map_specs(lambda _p, s: s.axes, specs)
+
+
+def abstract_params(specs: Any) -> Any:
+    return map_specs(
+        lambda _p, s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)), specs
+    )
+
+
+def param_count(specs: Any) -> int:
+    total = 0
+
+    def add(_p: tuple[str, ...], s: ParamSpec) -> None:
+        nonlocal total
+        total += int(np.prod(s.shape))
+
+    map_specs(add, specs)
+    return total
+
+
+def param_bytes(specs: Any) -> int:
+    total = 0
+
+    def add(_p: tuple[str, ...], s: ParamSpec) -> None:
+        nonlocal total
+        total += int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+
+    map_specs(add, specs)
+    return total

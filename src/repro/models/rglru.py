@@ -1,0 +1,391 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local
+(sliding-window) attention blocks in a repeating pattern (rec, rec, attn).
+
+Long-context decode is bounded: recurrent layers carry an O(W) state and
+attention layers keep a ring-buffer KV cache of ``local_window`` slots —
+this is the second arch that RUNS ``long_500k``.
+
+Layer stacking: the repeating pattern is scanned as *super-blocks*
+(one scan step = rec + rec + attn), with any pattern remainder applied
+unscanned; HLO size stays O(pattern), not O(L).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref as kref
+from repro.sharding.ctx import shard
+from .layers import apply_rope, rms_norm, swiglu
+from .params import ParamSpec
+from .transformer import ExecConfig, attn_specs, mlp_specs
+
+__all__ = [
+    "hybrid_specs",
+    "hybrid_forward",
+    "hybrid_decode_step",
+    "init_hybrid_state",
+]
+
+_N_DIAG_BLOCKS = 8  # Griffin's block-diagonal gate projections
+
+
+def _pattern_split(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    pat = cfg.block_pattern
+    n_super = cfg.n_layers // len(pat)
+    rest = cfg.layer_kinds()[n_super * len(pat) :]
+    return n_super, rest
+
+
+def rec_block_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    nb = _N_DIAG_BLOCKS
+    wb = W // nb
+    K = 4  # temporal conv width
+    s = {
+        "ln1": ParamSpec((L, D), ("layers", "embed"), init="zeros"),
+        "w_gate_br": ParamSpec((L, D, W), ("layers", "embed", "state")),
+        "w_rec_br": ParamSpec((L, D, W), ("layers", "embed", "state")),
+        "conv_w": ParamSpec((L, K, W), ("layers", "conv", "state"), init="normal"),
+        "conv_b": ParamSpec((L, W), ("layers", "state"), init="zeros"),
+        # block-diagonal RG-LRU gate projections
+        "wa": ParamSpec((L, nb, wb, wb), ("layers", None, "state", None)),
+        "wx": ParamSpec((L, nb, wb, wb), ("layers", None, "state", None)),
+        "ba": ParamSpec((L, W), ("layers", "state"), init="zeros"),
+        "bx": ParamSpec((L, W), ("layers", "state"), init="zeros"),
+        "log_lambda": ParamSpec((L, W), ("layers", "state"), init="recurrent"),
+        "w_out": ParamSpec((L, W, D), ("layers", "state", "embed")),
+        "ln2": ParamSpec((L, D), ("layers", "embed"), init="zeros"),
+        "mlp": None,  # filled below
+    }
+    s["mlp"] = mlp_specs(cfg, L)
+    return s
+
+
+def attn_block_specs(cfg: ModelConfig, L: int) -> dict[str, Any]:
+    return {
+        "ln1": ParamSpec((L, cfg.d_model), ("layers", "embed"), init="zeros"),
+        "attn": attn_specs(cfg, L),
+        "ln2": ParamSpec((L, cfg.d_model), ("layers", "embed"), init="zeros"),
+        "mlp": mlp_specs(cfg, L),
+    }
+
+
+def hybrid_specs(cfg: ModelConfig) -> dict[str, Any]:
+    n_super, rest = _pattern_split(cfg)
+    pat = cfg.block_pattern
+    super_specs = {
+        str(i): (
+            rec_block_specs(cfg, n_super)
+            if kind == "rec"
+            else attn_block_specs(cfg, n_super)
+        )
+        for i, kind in enumerate(pat)
+    }
+    rest_specs = {
+        str(i): (
+            rec_block_specs(cfg, 1) if kind == "rec" else attn_block_specs(cfg, 1)
+        )
+        for i, kind in enumerate(rest)
+    }
+    s: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), init="embed"),
+        "final_ln": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "super": super_specs,
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+    if rest_specs:
+        s["rest"] = rest_specs
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_diag(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B,S,W) @ block-diag w: (nb, wb, wb) + b."""
+    B, S, W = x.shape
+    nb, wb = w.shape[0], w.shape[1]
+    xb = x.reshape(B, S, nb, wb)
+    y = jnp.einsum("bsnw,nwv->bsnv", xb, w.astype(x.dtype))
+    return y.reshape(B, S, W) + b.astype(x.dtype)
+
+
+def _rec_block(cfg: ModelConfig, ex: ExecConfig, p: dict, h, *, state, return_state):
+    """Griffin recurrent block.  state: {'conv': (B,3,W), 'h': (B,W)} or None."""
+    dt = h.dtype
+    W = cfg.lru_width or cfg.d_model
+    h = shard(h, "batch", "act_seq", None)
+    hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", hn, p["w_gate_br"].astype(dt)).astype(jnp.float32)
+    ).astype(dt)
+    gate = shard(gate, "batch", "seq", "state")
+    xr = shard(jnp.einsum("bsd,dw->bsw", hn, p["w_rec_br"].astype(dt)), "batch", "seq", "state")
+
+    new_state = {}
+    if state is None:
+        from .ssm import _causal_conv
+
+        xc = _causal_conv(xr, p["conv_w"]) + p["conv_b"].astype(dt)
+        if return_state:
+            new_state["conv"] = xr[:, -(p["conv_w"].shape[0] - 1) :].astype(dt)
+    else:
+        from .ssm import _conv_step
+
+        xc1, new_state["conv"] = _conv_step(state["conv"], xr[:, 0], p["conv_w"])
+        xc = (xc1 + p["conv_b"].astype(dt))[:, None]
+
+    r_gate = _block_diag(xc, p["wa"], p["ba"])
+    i_gate = _block_diag(xc, p["wx"], p["bx"])
+
+    if state is None:
+        if ex.attn_impl == "pallas":
+            from repro.kernels import ops
+
+            out = ops.rglru_scan(
+                xc, r_gate, i_gate, p["log_lambda"], return_state=return_state
+            )
+        else:
+            out = kref.rglru_ref(
+                xc, r_gate, i_gate, p["log_lambda"], return_state=return_state
+            )
+        if return_state:
+            y, new_state["h"] = out
+        else:
+            y = out
+    else:
+        y1, new_state["h"] = kref.rglru_decode_step(
+            state["h"], xc[:, 0], r_gate[:, 0], i_gate[:, 0], p["log_lambda"]
+        )
+        y = y1[:, None]
+
+    y = y * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(dt))
+    h = shard(h + out, "batch", "act_seq", None)
+    hn2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    h = h + swiglu(hn2, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return shard(h, "batch", "act_seq", None), (
+        new_state if (state is not None or return_state) else None
+    )
+
+
+def _ring_positions(idx: jax.Array, window: int) -> jax.Array:
+    """Absolute position held by each ring slot after writing pos ``idx``.
+
+    Slot s holds p_s = idx - ((idx - s) mod window); p_s < 0 => never written.
+    """
+    s = jnp.arange(window)
+    return idx - jnp.mod(idx - s, window)
+
+
+def _attn_block(cfg: ModelConfig, ex: ExecConfig, p: dict, h, *, state, idx, return_state):
+    """Local-attention block with ring-buffer KV cache for decode."""
+    from .transformer import _attn_dispatch
+
+    dt = h.dtype
+    Wwin = cfg.local_window
+    h = shard(h, "batch", "act_seq", None)
+    hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+    a = p["attn"]
+    q = shard(jnp.einsum("bsd,dhk->bshk", hn, a["wq"].astype(dt)), "batch", "seq", "heads", None)
+    k = shard(jnp.einsum("bsd,dhk->bshk", hn, a["wk"].astype(dt)), "batch", "seq", "kv", None)
+    v = shard(jnp.einsum("bsd,dhk->bshk", hn, a["wv"].astype(dt)), "batch", "seq", "kv", None)
+
+    new_state = {}
+    if state is None:
+        B, S = hn.shape[0], hn.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        out = _attn_dispatch(
+            ex, q, k, v, q_offset=0, kv_len=None, causal=True, window=Wwin
+        )
+        if return_state:
+            # build the ring from the last `window` positions
+            ring_pos = _ring_positions(jnp.asarray(S - 1), Wwin)  # (W,)
+            safe = jnp.clip(ring_pos, 0, S - 1)
+            new_state["ck"] = jnp.take(k, safe, axis=1).astype(dt)
+            new_state["cv"] = jnp.take(v, safe, axis=1).astype(dt)
+    else:
+        B = hn.shape[0]
+        pos = jnp.broadcast_to(idx[None, None], (B, 1))
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        slot = jnp.mod(idx, Wwin)
+        ck = lax.dynamic_update_slice_in_dim(state["ck"], k.astype(dt), slot, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(state["cv"], v.astype(dt), slot, axis=1)
+        new_state["ck"], new_state["cv"] = ck, cv
+        # Ring semantics: slots hold exactly the last `window` positions
+        # (<= idx); slots never written have ring_pos < 0 and are masked.
+        ring_pos = _ring_positions(idx, Wwin)  # (W,)
+        out = _ring_attention(q, ck, cv, ring_pos)
+
+    o = jnp.einsum("bshk,hkd->bsd", out, a["wo"].astype(dt))
+    h = shard(h + o, "batch", "act_seq", None)
+    hn2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    h = h + swiglu(hn2, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return shard(h, "batch", "act_seq", None), (
+        new_state if (state is not None or return_state) else None
+    )
+
+
+def _ring_attention(q, ck, cv, ring_pos):
+    """Decode attention over a ring cache with per-slot validity mask.
+
+    q: (B,1,H,hd), ck/cv: (B,W,K,hd), ring_pos: (W,) — slots with
+    ring_pos < 0 are masked out.
+    """
+    import math as _math
+
+    B, S, H, hd = q.shape
+    K = ck.shape[2]
+    g = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, g, hd) / _math.sqrt(hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qf, ck.astype(jnp.float32))
+    s = jnp.where(ring_pos[None, None, None, None, :] >= 0, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, cv.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Model assembly
+# ---------------------------------------------------------------------------
+
+
+def _apply_kind(cfg, ex, kind, p, h, *, state, idx, return_state):
+    if kind == "rec":
+        return _rec_block(cfg, ex, p, h, state=state, return_state=return_state)
+    return _attn_block(cfg, ex, p, h, state=state, idx=idx, return_state=return_state)
+
+
+def init_hybrid_state(cfg: ModelConfig, batch_size: int, dtype=None) -> dict:
+    """Decode state: per pattern position, stacked over super-blocks."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    W = cfg.lru_width or cfg.d_model
+    hd = cfg.resolved_head_dim
+    n_super, rest = _pattern_split(cfg)
+    pat = cfg.block_pattern
+
+    def one(kind, L):
+        if kind == "rec":
+            return {
+                "conv": jnp.zeros((L, batch_size, 3, W), dt),
+                "h": jnp.zeros((L, batch_size, W), jnp.float32),
+            }
+        return {
+            "ck": jnp.zeros((L, batch_size, cfg.local_window, cfg.n_kv_heads, hd), dt),
+            "cv": jnp.zeros((L, batch_size, cfg.local_window, cfg.n_kv_heads, hd), dt),
+        }
+
+    st: dict[str, Any] = {"super": {str(i): one(k, n_super) for i, k in enumerate(pat)}}
+    if rest:
+        st["rest"] = {str(i): one(k, 1) for i, k in enumerate(rest)}
+    return st
+
+
+def hybrid_forward(
+    cfg: ModelConfig,
+    ex: ExecConfig,
+    params: dict,
+    batch: dict,
+    *,
+    return_state: bool = False,
+):
+    dt = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    pat = cfg.block_pattern
+    n_super, rest = _pattern_split(cfg)
+
+    def body(carry, xs):
+        h = carry
+        sts = {}
+        for i, kind in enumerate(pat):
+            h, st = _apply_kind(
+                cfg, ex, kind, xs[str(i)], h, state=None, idx=None,
+                return_state=return_state,
+            )
+            sts[str(i)] = st if st is not None else ()
+        return h, sts
+
+    body = ex.remat_wrap(body)
+    if ex.scan_layers and n_super > 0:
+        h, super_states = lax.scan(body, h, params["super"])
+    else:
+        sts_list = []
+        for j in range(n_super):
+            p_j = jax.tree.map(lambda a: a[j], params["super"])
+            h, sts = body(h, p_j)
+            sts_list.append(sts)
+        super_states = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *sts_list) if return_state else {}
+        )
+
+    rest_states: dict = {}
+    for i, kind in enumerate(rest):
+        p_i = params["rest"][str(i)]
+        p_i = jax.tree.map(lambda a: a[0], p_i)  # unstack L=1
+        h, st = _apply_kind(
+            cfg, ex, kind, p_i, h, state=None, idx=None, return_state=return_state
+        )
+        if return_state:
+            rest_states[str(i)] = jax.tree.map(lambda a: a[None], st)
+
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(dt))
+    aux = jnp.zeros((), jnp.float32)
+    if return_state:
+        state = {"super": super_states}
+        if rest_states:
+            state["rest"] = rest_states
+        return logits, aux, state
+    return logits, aux
+
+
+def hybrid_decode_step(cfg: ModelConfig, ex: ExecConfig, params: dict, state, tokens, idx):
+    dt = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"], tokens[:, None], axis=0).astype(dt)
+    pat = cfg.block_pattern
+    n_super, rest = _pattern_split(cfg)
+
+    def body(carry, xs):
+        h = carry
+        p, st = xs
+        new_sts = {}
+        for i, kind in enumerate(pat):
+            h, new_st = _apply_kind(
+                cfg, ex, kind, p[str(i)], h, state=st[str(i)], idx=idx,
+                return_state=False,
+            )
+            new_sts[str(i)] = new_st
+        return h, new_sts
+
+    if n_super > 0:
+        h, new_super = lax.scan(body, h, (params["super"], state["super"]))
+    else:
+        new_super = {}
+
+    new_rest: dict = {}
+    for i, kind in enumerate(rest):
+        p_i = jax.tree.map(lambda a: a[0], params["rest"][str(i)])
+        st_i = jax.tree.map(lambda a: a[0], state["rest"][str(i)])
+        h, new_st = _apply_kind(
+            cfg, ex, kind, p_i, h, state=st_i, idx=idx, return_state=False
+        )
+        new_rest[str(i)] = jax.tree.map(lambda a: a[None], new_st)
+
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(dt))[:, 0]
+    new_state = {"super": new_super}
+    if new_rest:
+        new_state["rest"] = new_rest
+    return logits, new_state

@@ -1,0 +1,241 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), attention-free LM.
+
+TPU-native formulation: the *chunked dual form* (intra-chunk quadratic
+matmuls on the MXU + inter-chunk state recurrence) instead of the GPU
+selective-scan.  Decode carries an O(1) per-layer state — this is the
+arch that RUNS the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref as kref
+from repro.sharding.ctx import shard
+from .layers import rms_norm
+from .params import ParamSpec
+from .transformer import ExecConfig
+
+__all__ = [
+    "ssm_specs",
+    "ssm_forward",
+    "ssm_decode_step",
+    "init_ssm_state",
+    "abstract_ssm_state",
+]
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    ng = 1  # single B/C group (mamba2-130m)
+    return di, nh, ng, cfg.ssm_state
+
+
+def block_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    D = cfg.d_model
+    di, nh, ng, ds = _dims(cfg)
+    K = cfg.ssm_conv
+    return {
+        "ln": ParamSpec((L, D), ("layers", "embed"), init="zeros"),
+        "w_z": ParamSpec((L, D, di), ("layers", "embed", "mlp")),
+        "w_x": ParamSpec((L, D, di), ("layers", "embed", "mlp")),
+        "w_B": ParamSpec((L, D, ng * ds), ("layers", "embed", "state")),
+        "w_C": ParamSpec((L, D, ng * ds), ("layers", "embed", "state")),
+        "w_dt": ParamSpec((L, D, nh), ("layers", "embed", None)),
+        "dt_bias": ParamSpec((L, nh), ("layers", None), init="zeros"),
+        "conv_x": ParamSpec((L, K, di), ("layers", "conv", "mlp"), init="normal"),
+        "conv_B": ParamSpec((L, K, ng * ds), ("layers", "conv", "state"), init="normal"),
+        "conv_C": ParamSpec((L, K, ng * ds), ("layers", "conv", "state"), init="normal"),
+        "A_log": ParamSpec((L, nh), ("layers", None), init="zeros"),
+        "Dskip": ParamSpec((L, nh), ("layers", None), init="ones"),
+        "gn": ParamSpec((L, di), ("layers", "mlp"), init="zeros"),
+        "w_out": ParamSpec((L, di, D), ("layers", "mlp", "embed")),
+    }
+
+
+def ssm_specs(cfg: ModelConfig) -> dict[str, Any]:
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), init="embed"),
+        "final_ln": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "blocks": block_specs(cfg, cfg.n_layers),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + pad[:, k : k + S] * w[k].astype(x.dtype)
+    return out
+
+
+def _conv_step(state: jax.Array, x: jax.Array, w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-token conv.  state: (B, K-1, C), x: (B, C).  -> (y, new_state)."""
+    full = jnp.concatenate([state, x[:, None]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", full, w.astype(x.dtype))
+    return y, full[:, 1:]
+
+
+def _block(cfg: ModelConfig, ex: ExecConfig, p: dict, h, *, state, return_state):
+    """One mamba2 block.  h: (B, S, D).  state: dict or None."""
+    di, nh, ng, ds = _dims(cfg)
+    hp = cfg.ssm_head_dim
+    dt_ = h.dtype
+    h = shard(h, "batch", "act_seq", None)
+    hn = rms_norm(h, p["ln"], cfg.norm_eps)
+
+    z = shard(jnp.einsum("bsd,de->bse", hn, p["w_z"].astype(dt_)), "batch", "seq", "mlp")
+    x = shard(jnp.einsum("bsd,de->bse", hn, p["w_x"].astype(dt_)), "batch", "seq", "mlp")
+    Bm = shard(jnp.einsum("bsd,de->bse", hn, p["w_B"].astype(dt_)), "batch", "seq", "state")
+    Cm = shard(jnp.einsum("bsd,de->bse", hn, p["w_C"].astype(dt_)), "batch", "seq", "state")
+    dt = shard(jnp.einsum("bsd,dh->bsh", hn, p["w_dt"].astype(dt_)), "batch", "seq", None)
+
+    new_state = {}
+    if state is None:
+        xc = _causal_conv(x, p["conv_x"])
+        Bc = _causal_conv(Bm, p["conv_B"])
+        Cc = _causal_conv(Cm, p["conv_C"])
+        if return_state:
+            K = cfg.ssm_conv
+            # conv tail: last K-1 *pre-conv* inputs
+            new_state["conv_x"] = x[:, -(K - 1) :].astype(dt_)
+            new_state["conv_B"] = Bm[:, -(K - 1) :].astype(dt_)
+            new_state["conv_C"] = Cm[:, -(K - 1) :].astype(dt_)
+    else:
+        # decode: S == 1
+        xc1, new_state["conv_x"] = _conv_step(state["conv_x"], x[:, 0], p["conv_x"])
+        Bc1, new_state["conv_B"] = _conv_step(state["conv_B"], Bm[:, 0], p["conv_B"])
+        Cc1, new_state["conv_C"] = _conv_step(state["conv_C"], Cm[:, 0], p["conv_C"])
+        xc, Bc, Cc = xc1[:, None], Bc1[:, None], Cc1[:, None]
+
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt_)
+    Bc = jax.nn.silu(Bc.astype(jnp.float32)).astype(dt_)
+    Cc = jax.nn.silu(Cc.astype(jnp.float32)).astype(dt_)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    B_, S_ = xc.shape[0], xc.shape[1]
+    xh = xc.reshape(B_, S_, nh, hp)
+    Bg = Bc.reshape(B_, S_, ng, ds)
+    Cg = Cc.reshape(B_, S_, ng, ds)
+
+    if state is None:
+        if ex.attn_impl == "pallas":
+            from repro.kernels import ops
+
+            out = ops.ssd_scan(
+                xh, dtp, A, Bg, Cg, p["Dskip"].astype(jnp.float32),
+                chunk=cfg.ssm_chunk, return_state=return_state,
+            )
+        else:
+            chunk = min(cfg.ssm_chunk, S_)
+            while S_ % chunk:  # largest divisor of S not exceeding ssm_chunk
+                chunk -= 1
+            out = kref.ssd_chunked_ref(
+                xh, dtp, A, Bg, Cg, p["Dskip"].astype(jnp.float32),
+                chunk=chunk, return_state=return_state,
+            )
+        if return_state:
+            y, new_state["ssm"] = out
+        else:
+            y = out
+    else:
+        y1, new_state["ssm"] = kref.ssd_decode_step(
+            state["ssm"], xh[:, 0], dtp[:, 0], A, Bg[:, 0], Cg[:, 0],
+            p["Dskip"].astype(jnp.float32),
+        )
+        y = y1[:, None]
+
+    y = y.reshape(B_, S_, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    y = shard(rms_norm(y, p["gn"], cfg.norm_eps), "batch", "seq", "mlp")
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    return shard(h + out, "batch", "act_seq", None), (
+        new_state if (state is not None or return_state) else None
+    )
+
+
+def init_ssm_state(cfg: ModelConfig, batch_size: int, dtype=None) -> dict:
+    """Zero decode state, stacked over layers."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    di, nh, ng, ds = _dims(cfg)
+    hp = cfg.ssm_head_dim
+    L, K = cfg.n_layers, cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((L, batch_size, K - 1, di), dt),
+        "conv_B": jnp.zeros((L, batch_size, K - 1, ng * ds), dt),
+        "conv_C": jnp.zeros((L, batch_size, K - 1, ng * ds), dt),
+        "ssm": jnp.zeros((L, batch_size, nh, ds, hp), jnp.float32),
+    }
+
+
+def abstract_ssm_state(cfg: ModelConfig, batch_size: int, dtype=None) -> dict:
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        init_ssm_state(cfg, batch_size, dtype),
+        is_leaf=lambda x: isinstance(x, jax.Array),
+    )
+
+
+def ssm_forward(
+    cfg: ModelConfig,
+    ex: ExecConfig,
+    params: dict,
+    batch: dict,
+    *,
+    return_state: bool = False,
+):
+    """Full-sequence forward.  Returns (logits, aux) or (logits, aux, state)."""
+    dt = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+
+    def body(carry, p):
+        h = carry
+        h, st = _block(cfg, ex, p, h, state=None, return_state=return_state)
+        return h, (st if st is not None else ())
+
+    body = ex.remat_wrap(body)
+    if ex.scan_layers:
+        h, states = lax.scan(body, h, params["blocks"])
+    else:
+        sts = []
+        for i in range(cfg.n_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            h, st = body(h, p_i)
+            sts.append(st)
+        states = jax.tree.map(lambda *xs: jnp.stack(xs), *sts) if return_state else ()
+
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(dt))
+    aux = jnp.zeros((), jnp.float32)
+    if return_state:
+        return logits, aux, states
+    return logits, aux
+
+
+def ssm_decode_step(cfg: ModelConfig, ex: ExecConfig, params: dict, state: dict, tokens, idx):
+    """One decode token.  tokens: (B,), idx unused (state is position-free)."""
+    del idx
+    dt = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"], tokens[:, None], axis=0).astype(dt)
+
+    def body(carry, xs):
+        h = carry
+        p, st = xs
+        h, new_st = _block(cfg, ex, p, h, state=st, return_state=False)
+        return h, new_st
+
+    h, new_states = lax.scan(body, h, (params["blocks"], state))
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(dt))[:, 0]
+    return logits, new_states

@@ -1,0 +1,391 @@
+"""Decoder-only transformer family: dense GQA, MoE, and VLM (M-RoPE).
+
+Layer-stacked parameters scanned with ``lax.scan`` (HLO size is O(1) in
+depth — essential for the 95-layer deepseek-67b dry-run), configurable
+remat policy, and a unified KV-cache decode path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding.ctx import shard
+from .layers import (
+    apply_mrope,
+    apply_rope,
+    chunked_attention,
+    moe_aux_loss,
+    moe_layer,
+    rms_norm,
+    swiglu,
+)
+from .params import ParamSpec
+
+__all__ = ["ExecConfig", "block_specs", "lm_specs", "lm_forward", "lm_decode_step", "init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """Execution knobs orthogonal to the architecture."""
+
+    attn_impl: str = "xla"  # xla | pallas
+    kv_chunk: int = 1024
+    unroll_causal: bool = False  # skip dead causal chunks (see §Perf)
+    remat: str = "full"  # none | dots | full
+    scan_layers: bool = True
+    moe_aux_coef: float = 0.01
+    # §Perf levers:
+    # context-parallel attention — shard the QUERY sequence over 'model'
+    # when the head count doesn't divide the axis (smollm: 9 heads on a
+    # 16-wide axis otherwise replicates all attention compute 16x).
+    cp_attention: str = "auto"  # auto | on | off
+    # post-softmax probability dtype for the p @ v matmul (bf16 halves
+    # the dominant score-tensor traffic; max/denominator stay f32)
+    attn_p_dtype: str = "float32"
+    # MoE dispatch implementation (see layers.moe_layer §Perf notes)
+    moe_impl: str = "vmap"  # vmap | batched
+
+    def remat_wrap(self, fn):
+        if self.remat == "none":
+            return fn
+        if self.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.checkpoint_dots, prevent_cse=False
+            )
+        if self.remat == "full":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+            )
+        raise ValueError(self.remat)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    D, H, K = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    s: dict[str, ParamSpec] = {
+        "wq": ParamSpec((L, D, H, hd), ("layers", "embed", "heads", None)),
+        "wk": ParamSpec((L, D, K, hd), ("layers", "embed", "kv", None)),
+        "wv": ParamSpec((L, D, K, hd), ("layers", "embed", "kv", None)),
+        "wo": ParamSpec((L, H, hd, D), ("layers", "heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((L, H, hd), ("layers", "heads", None), init="zeros")
+        s["bk"] = ParamSpec((L, K, hd), ("layers", "kv", None), init="zeros")
+        s["bv"] = ParamSpec((L, K, hd), ("layers", "kv", None), init="zeros")
+    return s
+
+
+def mlp_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((L, D, F), ("layers", "embed", "mlp")),
+        "w_up": ParamSpec((L, D, F), ("layers", "embed", "mlp")),
+        "w_down": ParamSpec((L, F, D), ("layers", "mlp", "embed")),
+    }
+
+
+def moe_specs(cfg: ModelConfig, L: int) -> dict[str, ParamSpec]:
+    assert cfg.moe is not None
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    return {
+        "router": ParamSpec((L, D, E), ("layers", "embed", None)),
+        "w_gate": ParamSpec((L, E, D, F), ("layers", "expert", "embed", None)),
+        "w_up": ParamSpec((L, E, D, F), ("layers", "expert", "embed", None)),
+        "w_down": ParamSpec((L, E, F, D), ("layers", "expert", None, "embed")),
+    }
+
+
+def block_specs(cfg: ModelConfig, L: int) -> dict[str, Any]:
+    s: dict[str, Any] = {
+        "ln1": ParamSpec((L, cfg.d_model), ("layers", "embed"), init="zeros"),
+        "ln2": ParamSpec((L, cfg.d_model), ("layers", "embed"), init="zeros"),
+        "attn": attn_specs(cfg, L),
+    }
+    s["moe" if cfg.family == "moe" else "mlp"] = (
+        moe_specs(cfg, L) if cfg.family == "moe" else mlp_specs(cfg, L)
+    )
+    return s
+
+
+def lm_specs(cfg: ModelConfig) -> dict[str, Any]:
+    V, D = cfg.vocab, cfg.d_model
+    s: dict[str, Any] = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), init="embed"),
+        "final_ln": ParamSpec((D,), ("embed",), init="zeros"),
+        "blocks": block_specs(cfg, cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((D, V), ("embed", "vocab"))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attention(cfg: ModelConfig, ex: ExecConfig, p: dict, hn, pos, *, cache, cache_idx):
+    """Shared attention path.  Returns (attn_out, new_cache)."""
+    dt = hn.dtype
+    q = jnp.einsum("bsd,dhk->bshk", hn, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", hn, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", hn, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    # Context-parallel attention (§Perf): when heads don't fill the
+    # 'model' axis, shard the query sequence over it instead — scores go
+    # (B, K, g, S/model, T) per device rather than replicated.
+    from repro.sharding.ctx import mesh_axis_size
+
+    tp = mesh_axis_size("model")
+    cp = ex.cp_attention == "on" or (
+        ex.cp_attention == "auto"
+        and tp is not None
+        and cache is None  # full-sequence paths only
+        and cfg.n_heads % tp != 0
+    )
+    q = shard(q, "batch", "act_seq" if cp else "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv", None)
+    v = shard(v, "batch", "seq", "kv", None)
+
+    if cfg.rope == "mrope":
+        q = apply_mrope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+
+    if cache is None:
+        out = _attn_dispatch(
+            ex, q, k, v, q_offset=0, kv_len=None, causal=True, window=0
+        )
+        new_cache = (k, v)  # prefill fills the cache
+    else:
+        ck, cv = cache
+        ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_idx, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_idx, axis=1)
+        out = _attn_dispatch(
+            ex,
+            q,
+            ck.astype(dt),
+            cv.astype(dt),
+            q_offset=cache_idx,
+            kv_len=cache_idx + q.shape[1],
+            causal=True,
+            window=0,
+        )
+        new_cache = (ck, cv)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), new_cache
+
+
+def _attn_dispatch(ex: ExecConfig, q, k, v, *, q_offset, kv_len, causal, window):
+    if ex.attn_impl == "pallas":  # TPU path
+        from repro.kernels import ops
+
+        return ops.flash_attention(
+            q, k, v, q_offset=q_offset, kv_len=kv_len, causal=causal, window=window
+        )
+    S, T = q.shape[1], k.shape[1]
+    chunk = T if S == 1 else min(ex.kv_chunk, T)
+    return chunked_attention(
+        q,
+        k,
+        v,
+        q_offset=q_offset,
+        kv_len=kv_len,
+        causal=causal,
+        window=window,
+        kv_chunk=chunk,
+        unroll_causal=ex.unroll_causal and isinstance(q_offset, int),
+        p_dtype=ex.attn_p_dtype,
+    )
+
+
+def _block_apply(cfg: ModelConfig, ex: ExecConfig, p: dict, h, aux, pos, *, cache, cache_idx):
+    h = shard(h, "batch", "act_seq", None)
+    hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+    attn_out, new_cache = _attention(cfg, ex, p["attn"], hn, pos, cache=cache, cache_idx=cache_idx)
+    h = h + attn_out
+    h = shard(h, "batch", "act_seq", None)
+    hn2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m = p["moe"]
+        y, probs = moe_layer(
+            hn2,
+            m["router"],
+            m["w_gate"],
+            m["w_up"],
+            m["w_down"],
+            top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity,
+            impl=ex.moe_impl,
+        )
+        aux = aux + moe_aux_loss(probs, cfg.moe.top_k)
+    else:
+        m = p["mlp"]
+        y = swiglu(hn2, m["w_gate"], m["w_up"], m["w_down"])
+    return shard(h + y, "batch", "act_seq", None), aux, new_cache
+
+
+def _scan_blocks(
+    cfg: ModelConfig,
+    ex: ExecConfig,
+    blocks: dict,
+    h,
+    pos,
+    *,
+    cache,
+    cache_idx,
+    collect_kv: bool = False,
+):
+    """Run all L blocks.  ``cache`` is the stacked (L, ...) kv cache or None.
+
+    ``collect_kv`` gathers each layer's fresh K/V as scan outputs (prefill);
+    training leaves it off so no (L, B, S, K, hd) buffer is materialised.
+    """
+
+    def body(carry, xs):
+        h, aux = carry
+        if cache is None:
+            p = xs
+            c = None
+        else:
+            p, ck, cv = xs
+            c = (ck, cv)
+        h, aux, new_c = _block_apply(cfg, ex, p, h, aux, pos, cache=c, cache_idx=cache_idx)
+        keep = cache is not None or collect_kv
+        ys = new_c if (new_c is not None and keep) else ()
+        return (h, aux), ys
+
+    body = ex.remat_wrap(body)
+    aux0 = jnp.zeros((), jnp.float32)
+    if ex.scan_layers:
+        xs = blocks if cache is None else (blocks, cache[0], cache[1])
+        (h, aux), ys = lax.scan(body, (h, aux0), xs)
+        new_cache = ys if cache is not None or ys else None
+    else:
+        carry = (h, aux0)
+        ks, vs = [], []
+        L = cfg.n_layers
+        for i in range(L):
+            p_i = jax.tree.map(lambda a: a[i], blocks)
+            xs = p_i if cache is None else (p_i, cache[0][i], cache[1][i])
+            carry, ys = body(carry, xs)
+            if ys:
+                ks.append(ys[0])
+                vs.append(ys[1])
+        h, aux = carry
+        new_cache = (jnp.stack(ks), jnp.stack(vs)) if ks else None
+    return h, aux, new_cache
+
+
+def _logits(cfg: ModelConfig, params: dict, h) -> jax.Array:
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _embed_inputs(cfg: ModelConfig, params: dict, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Token (+ modality prefix) embedding.  Returns (h, positions)."""
+    dt = jnp.dtype(cfg.dtype)
+    tok = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    if cfg.modality == "vision" and "patch_embeds" in batch:
+        h = jnp.concatenate([batch["patch_embeds"].astype(dt), tok], axis=1)
+    else:
+        h = tok
+    h = shard(h, "batch", "act_seq", None)
+    B, S = h.shape[0], h.shape[1]
+    if cfg.rope == "mrope":
+        pos = batch.get("positions")
+        if pos is None:
+            p1 = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, 1))
+            pos = jnp.broadcast_to(p1, (B, S, 3))
+    else:
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    return h, pos
+
+
+def lm_forward(
+    cfg: ModelConfig,
+    ex: ExecConfig,
+    params: dict,
+    batch: dict,
+    *,
+    return_cache: bool = False,
+):
+    """Full-sequence forward (train / prefill).
+
+    Returns (logits, aux_loss) or (logits, aux_loss, cache) — cache is the
+    stacked (L, B, S, K, hd) K/V pair for decode continuation.
+    """
+    h, pos = _embed_inputs(cfg, params, batch)
+    h, aux, kv = _scan_blocks(
+        cfg,
+        ex,
+        params["blocks"],
+        h,
+        pos,
+        cache=None,
+        cache_idx=None,
+        collect_kv=return_cache,
+    )
+    logits = _logits(cfg, params, h)
+    if return_cache:
+        return logits, aux, kv
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    """Zero KV cache, stacked over layers: (L, B, T, K, hd) x2."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def abstract_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    sds = jax.ShapeDtypeStruct(shape, dt)
+    return (sds, sds)
+
+
+def lm_decode_step(
+    cfg: ModelConfig,
+    ex: ExecConfig,
+    params: dict,
+    cache,
+    tokens: jax.Array,  # (B,) next-token ids
+    idx: jax.Array,  # () int32 — current cache fill
+):
+    """One decode step: append token at ``idx``, return (logits, cache)."""
+    B = tokens.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"], tokens[:, None], axis=0).astype(dt)  # (B,1,D)
+    if cfg.rope == "mrope":
+        p1 = jnp.broadcast_to(idx[None, None, None], (B, 1, 3))
+        pos = p1
+    else:
+        pos = jnp.broadcast_to(idx[None, None], (B, 1))
+    h, _aux, new_cache = _scan_blocks(
+        cfg, ex, params["blocks"], h, pos, cache=cache, cache_idx=idx
+    )
+    logits = _logits(cfg, params, h)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,62 @@
+"""Gradient compression for cross-pod data-parallel reduction.
+
+int8 block quantisation with error feedback: gradients are quantised
+per 256-value block before the (slow, cross-pod ICI) all-reduce and the
+quantisation residual is added back into the next step's gradient.
+Cuts cross-pod collective bytes 4x (recorded in §Perf for the
+collective-bound cell).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_int8", "decompress_int8", "ErrorFeedback"]
+
+_BLOCK = 256
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantisation.  Returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, shape: tuple[int, ...], dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+class ErrorFeedback:
+    """Stateful error-feedback wrapper (state lives in the train state)."""
+
+    @staticmethod
+    def init(params: Any) -> Any:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any) -> tuple[Any, Any]:
+        """Quantise (grad + residual); return (dequantised grads, new residual)."""
+
+        def one(g, r):
+            gf = g.astype(jnp.float32) + r
+            q, s = compress_int8(gf)
+            deq = decompress_int8(q, s, gf.shape, jnp.float32)
+            return deq.astype(g.dtype), gf - deq
+
+        pairs = jax.tree.map(one, grads, residual)
+        newg = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        newr = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return newg, newr

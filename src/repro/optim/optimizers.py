@@ -1,0 +1,183 @@
+"""Optimizers as pure pytree transforms (optax-style, self-contained).
+
+Optimizer state mirrors the parameter tree, so the sharding rules that
+shard a parameter shard its moments identically — with the FSDP preset
+this is ZeRO-style optimizer-state sharding for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "AdamW",
+    "SGD",
+    "Adafactor",
+    "global_norm",
+    "clip_by_global_norm",
+]
+
+OptState = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params, step) ->
+    (new_params, new_state)."""
+
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jax.Array], tuple[Any, OptState]]
+
+
+def AdamW(
+    lr: float | Schedule = 1e-3,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    sched = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        if grad_clip > 0:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr_t = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            mhat = m_new / c1
+            vhat = v_new / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr_t * (step_ + weight_decay * pf)
+            return pf.astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init=init, update=update)
+
+
+def SGD(lr: float | Schedule = 1e-2, *, momentum: float = 0.9, grad_clip: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if grad_clip > 0:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr_t = sched(step)
+
+        def upd(g, mo, p):
+            mo_new = momentum * mo + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * mo_new).astype(p.dtype), mo_new
+
+        flat = jax.tree.map(upd, grads, state["mom"], params)
+        new_p = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mom": new_m}
+
+    return Optimizer(init=init, update=update)
+
+
+def Adafactor(
+    lr: float | Schedule = 1e-3,
+    *,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Memory-frugal Adafactor-lite: factored second moment for matrices
+    (row/col running averages), full for vectors.  Halves optimizer HBM
+    vs AdamW on the big dense archs."""
+    sched = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t**-0.8
+
+        def upd(g, f, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p.shape):
+                row = beta * f["row"] + (1 - beta) * g2.mean(axis=-1)
+                col = beta * f["col"] + (1 - beta) * g2.mean(axis=-2)
+                rms_approx = (
+                    row[..., None]
+                    * col[..., None, :]
+                    / jnp.maximum(row.mean(axis=-1, keepdims=True)[..., None], eps)
+                )
+                upd_ = gf / jnp.sqrt(rms_approx + eps)
+                new_f = {"row": row, "col": col}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                upd_ = gf / jnp.sqrt(v + eps)
+                new_f = {"v": v}
+            # update clipping (Adafactor's RMS clip)
+            rms_u = jnp.sqrt(jnp.mean(upd_ * upd_))
+            upd_ = upd_ / jnp.maximum(1.0, rms_u / clip_threshold)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr_t * (upd_ + weight_decay * pf)
+            return pf.astype(p.dtype), new_f
+
+        is_state = lambda x: isinstance(x, dict) and ("row" in x or "v" in x)
+        flat = jax.tree.map(upd, grads, state["f"], params, is_leaf=None)
+        # flat leaves are tuples (p, f)
+        new_p = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_f = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"f": new_f}
+
+    return Optimizer(init=init, update=update)

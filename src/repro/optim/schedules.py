@@ -1,0 +1,33 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant_lr", "cosine_lr", "linear_warmup_cosine"]
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(peak: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak * (final_frac + (1 - final_frac) * cos)
+
+    return sched
+
+
+def linear_warmup_cosine(
+    peak: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return sched

@@ -1,0 +1,17 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .analysis import (
+    CollectiveStats,
+    RooflineResult,
+    collective_bytes,
+    analyze_compiled,
+    roofline_terms,
+)
+
+__all__ = [
+    "CollectiveStats",
+    "RooflineResult",
+    "collective_bytes",
+    "analyze_compiled",
+    "roofline_terms",
+]

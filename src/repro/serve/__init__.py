@@ -1,0 +1,5 @@
+"""Serving: prefill/decode step factories + batched engine."""
+
+from .engine import ServeEngine, ServeConfig, make_prefill_step, make_decode_step
+
+__all__ = ["ServeEngine", "ServeConfig", "make_prefill_step", "make_decode_step"]

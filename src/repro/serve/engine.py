@@ -1,0 +1,116 @@
+"""Batched serving engine.
+
+``make_prefill_step`` / ``make_decode_step`` are the functions the
+dry-run lowers for the prefill_* / decode_* / long_* shapes.  The
+engine batches requests, prefills them together, and decodes greedily
+(or by sampling) with a fixed-size state — KV caches are allocated at
+``max_len`` up front so every decode step has a static shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+__all__ = ["ServeConfig", "ServeEngine", "make_prefill_step", "make_decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 1024
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: int = -1  # -1 = never stop early
+
+
+def make_prefill_step(model: Model) -> Callable:
+    """(params, batch) -> (last_logits, state)."""
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill
+
+
+def make_decode_step(model: Model) -> Callable:
+    """(params, state, tokens, idx) -> (logits, state)."""
+
+    def decode(params, state, tokens, idx):
+        return model.decode_step(params, state, tokens, idx)
+
+    return decode
+
+
+def _pad_cache_to(state: Any, family: str, max_len: int) -> Any:
+    """Grow transformer/encdec prefill caches (length S) to max_len."""
+
+    def pad_kv(arr):
+        cur = arr.shape[2]
+        if cur >= max_len:
+            return arr
+        pad = [(0, 0)] * arr.ndim
+        pad[2] = (0, max_len - cur)
+        return jnp.pad(arr, pad)
+
+    if family in ("dense", "moe", "vlm"):
+        return (pad_kv(state[0]), pad_kv(state[1]))
+    if family == "encdec":
+        return {"self": (pad_kv(state["self"][0]), pad_kv(state["self"][1])),
+                "cross": state["cross"]}
+    return state  # ssm / hybrid states are fixed-size
+
+
+class ServeEngine:
+    """Prefill-then-decode engine over a fixed request batch."""
+
+    def __init__(self, model: Model, params: Any, config: ServeConfig | None = None,
+                 *, jit: bool = True) -> None:
+        self.model = model
+        self.params = params
+        self.config = config or ServeConfig()
+        prefill = make_prefill_step(model)
+        decode = make_decode_step(model)
+        if jit:
+            prefill = jax.jit(prefill)
+            decode = jax.jit(decode, donate_argnums=(1,))
+        self._prefill = prefill
+        self._decode = decode
+
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        if self.config.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.config.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(
+        self,
+        batch: dict,
+        max_new_tokens: int,
+        *,
+        key: jax.Array | None = None,
+    ) -> jnp.ndarray:
+        """Prefill `batch` then decode greedily.  Returns (B, new) tokens."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        prompt_len = batch["tokens"].shape[1]
+        if self.model.cfg.family == "vlm":
+            prompt_len += batch["patch_embeds"].shape[1]
+        last_logits, state = self._prefill(self.params, batch)
+        state = _pad_cache_to(state, self.model.cfg.family, self.config.max_len)
+        tokens = self._sample(last_logits, key)
+        out = [tokens]
+        done = jnp.zeros(tokens.shape, bool)
+        for t in range(1, max_new_tokens):
+            idx = jnp.int32(prompt_len + t - 1)
+            logits, state = self._decode(self.params, state, tokens, idx)
+            key, sub = jax.random.split(key)
+            tokens = self._sample(logits, sub)
+            if self.config.eos_id >= 0:
+                done = done | (tokens == self.config.eos_id)
+                if bool(done.all()):
+                    out.append(tokens)
+                    break
+            out.append(tokens)
+        return jnp.stack(out, axis=1)

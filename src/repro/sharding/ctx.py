@@ -1,0 +1,66 @@
+"""Activation sharding constraints (MaxText's with_logical_constraint).
+
+Without explicit constraints, GSPMD propagates the FSDP weight sharding
+into activations: the batch dimension de-shards and every device
+computes the full global batch (measured: smollm train_4k activations
+at f32[256,4096,...] per device — 16x redundant compute and 300 GB
+score copies).  ``shard(x, *logical_axes)`` pins activations at block
+boundaries; it is a no-op unless an ``activation_sharding`` context is
+active, so CPU tests and eager runs are untouched.
+
+Activation dims use the same logical names as weights where the mapping
+coincides (batch/heads/kv/mlp/state/vocab/seq) and ``None`` for the
+embedding dim — 'embed' maps to the data axis for *weights* (FSDP), but
+activations must keep 'data' for the batch dimension.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding
+
+from .rules import ShardingRules, resolve_spec
+
+__all__ = ["activation_sharding", "shard"]
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: ShardingRules):
+    """Enable shard() constraints during tracing/lowering."""
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_ctx():
+    """(mesh, rules) of the active activation_sharding context, or None."""
+    return _CTX.get()
+
+
+def mesh_axis_size(name: str) -> int | None:
+    """Size of a mesh axis in the active context (None if inactive/absent)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    mesh, _rules = ctx
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name)
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (trace-time)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard(): {len(axes)} axes for rank-{x.ndim} value")
+    spec = resolve_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

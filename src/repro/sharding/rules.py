@@ -1,0 +1,230 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Models annotate every parameter/input dimension with a *logical* axis
+name; a rules table maps logical axes to mesh axes.  ``jax.jit``
+in/out shardings are derived from the table — never hand-written per
+model — so a sharding-strategy change for the §Perf hillclimb is a
+one-line rule edit that applies to all 10 architectures at once.
+
+Resolution is shape-aware: a mesh axis that does not evenly divide its
+dimension, or that was already consumed by an earlier dimension of the
+same tensor, is dropped (replicating that dimension).  This keeps every
+(arch x shape x mesh) cell compilable — e.g. seamless' vocab 256206 is
+not divisible by 16 and silently falls back to replicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "ShardingRules",
+    "TP_DP_RULES",
+    "FSDP_TP_RULES",
+    "PRESETS",
+    "resolve_spec",
+    "tree_shardings",
+    "batch_axes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> candidate mesh axes (applied left to right)."""
+
+    name: str
+    table: Mapping[str, tuple[str, ...]]
+
+    def lookup(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        return tuple(self.table.get(logical, ()))
+
+
+# Baseline: plain TP over 'model' + DP batch over ('pod','data').
+# Weights replicated across the data axis — the paper-era default
+# (its tasks were single-device programs; DP is the 'more CUs' variant).
+TP_DP_RULES = ShardingRules(
+    "tp_dp",
+    {
+        "batch": ("pod", "data"),
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+        "state": ("model",),
+        "embed": (),
+        "layers": (),
+        "conv": (),
+        "seq": (),
+        "act_seq": (),
+    },
+)
+
+# Beyond-paper: 2-D weight sharding — FSDP over 'data' on the embed
+# dimension on top of TP. Params/optimizer memory drops by the data-axis
+# size; XLA inserts all-gathers on use (ZeRO-3 semantics).
+FSDP_TP_RULES = ShardingRules(
+    "fsdp_tp",
+    {
+        "batch": ("pod", "data"),
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+        "state": ("model",),
+        "embed": ("data",),
+        "layers": (),
+        "conv": (),
+        "seq": (),
+        "act_seq": (),
+    },
+)
+
+# + Megatron-style sequence parallelism: the residual stream (and the
+# remat-saved per-layer activations — the HBM make-or-break at 95 layers
+# x 4k seq) shards its sequence dim over 'model' between blocks; XLA
+# inserts the all-gather before qkv/mlp and reduce-scatter after.
+FSDP_TP_SP_RULES = ShardingRules(
+    "fsdp_tp_sp",
+    {
+        "batch": ("pod", "data"),
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+        "state": ("model",),
+        "embed": ("data",),
+        "layers": (),
+        "conv": (),
+        "seq": (),
+        "act_seq": ("model",),
+    },
+)
+
+# Sequence-parallel variant for long-context serving: KV-cache time axis
+# sharded over 'model' (kv heads too few to fill the axis on GQA archs).
+SP_SERVE_RULES = ShardingRules(
+    "sp_serve",
+    {
+        "batch": ("pod", "data"),
+        "heads": ("model",),
+        "kv": (),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+        "state": ("model",),
+        "embed": ("data",),
+        "layers": (),
+        "conv": (),
+        "seq": ("model",),
+        "act_seq": (),
+    },
+)
+
+PRESETS: dict[str, ShardingRules] = {
+    r.name: r
+    for r in (TP_DP_RULES, FSDP_TP_RULES, FSDP_TP_SP_RULES, SP_SERVE_RULES)
+}
+
+
+def resolve_spec(
+    axes: Sequence[str | None],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: ShardingRules,
+) -> PartitionSpec:
+    """Logical axes + shape -> PartitionSpec, dropping non-dividing axes."""
+    used: set[str] = set()
+    parts: list[Any] = []
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, logical in zip(shape, axes):
+        cand = [
+            a
+            for a in rules.lookup(logical)
+            if a in mesh_sizes and a not in used
+        ]
+        picked: list[str] = []
+        rem = dim
+        for a in cand:
+            if rem % mesh_sizes[a] == 0 and rem >= mesh_sizes[a]:
+                picked.append(a)
+                used.add(a)
+                rem //= mesh_sizes[a]
+        if not picked:
+            parts.append(None)
+        elif len(picked) == 1:
+            parts.append(picked[0])
+        else:
+            parts.append(tuple(picked))
+    # trim trailing Nones (canonical form)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PartitionSpec(*parts)
+
+
+def tree_shardings(
+    abstract: Any, axes_tree: Any, mesh: Mesh, rules: ShardingRules
+) -> Any:
+    """NamedSharding tree matching an abstract (ShapeDtypeStruct) tree."""
+
+    def one(leaf, axes):
+        spec = resolve_spec(tuple(axes), leaf.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    # axes_tree has `abstract` as a structural prefix: each abstract leaf
+    # (ShapeDtypeStruct) pairs with its whole axes tuple.
+    return jax.tree.map(one, abstract, axes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Logical axes of model inputs / states
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(name: str, ndim: int) -> tuple[str | None, ...]:
+    """Logical axes for a batch input by name/rank."""
+    if name == "tokens":
+        return ("batch", "seq")[:ndim] if ndim == 2 else ("batch",)
+    if name == "labels":
+        return ("batch", "seq")
+    if name in ("enc_embeds", "patch_embeds"):
+        return ("batch", "seq", "embed")
+    if name == "positions":
+        return ("batch", "seq", None)
+    if name == "idx":
+        return ()
+    raise KeyError(name)
+
+
+def cache_axes(leaf_shape: tuple[int, ...]) -> tuple[str | None, ...]:
+    """KV-cache/state leaves: (layers, batch, time, kv, hd)-style."""
+    n = len(leaf_shape)
+    if n == 5:
+        return ("layers", "batch", "seq", "kv", None)
+    if n == 4:  # ssm state (L, B, nh|ds, ...) or conv (L, B, k, C)
+        return ("layers", "batch", None, "state")
+    if n == 3:
+        return ("layers", "batch", "state")
+    return tuple([None] * n)
+
+
+def state_axes_tree(state: Any) -> Any:
+    """Logical axes for a decode-state tree (shape-driven heuristics)."""
+
+    def one(leaf):
+        return cache_axes(tuple(leaf.shape))
+
+    return jax.tree.map(one, state)
+
+
+def batch_axes_tree(batch: Any) -> Any:
+    return {k: batch_axes(k, len(v.shape)) for k, v in batch.items()}

@@ -1,0 +1,107 @@
+"""Training loop: checkpoint auto-resume, async saves, health hooks.
+
+Deterministic end to end: data is a pure function of the step counter
+(see ``repro.data``), so kill -9 at any point + restart reproduces the
+exact same loss curve — asserted in tests/test_train_loop.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.ft.straggler import StragglerDetector
+
+from .step import TrainState, init_train_state, make_train_step
+
+__all__ = ["TrainLoopConfig", "TrainLoop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    log_every: int = 10
+    ckpt_dir: str = ""
+    keep: int = 3
+    microbatch: int = 0
+    compress_grads: bool = False
+    predicted_step_time: float = 0.0  # straggler baseline (0 = off)
+
+
+class TrainLoop:
+    def __init__(
+        self,
+        model,
+        optimizer,
+        batch_fn: Callable[[int], dict],
+        config: TrainLoopConfig,
+        *,
+        jit: bool = True,
+        donate: bool = True,
+    ) -> None:
+        self.model = model
+        self.optimizer = optimizer
+        self.batch_fn = batch_fn
+        self.config = config
+        step = make_train_step(
+            model,
+            optimizer,
+            microbatch=config.microbatch,
+            compress_grads=config.compress_grads,
+        )
+        if jit:
+            step = jax.jit(step, donate_argnums=(0,) if donate else ())
+        self.step_fn = step
+        self.ckpt = (
+            CheckpointManager(config.ckpt_dir, keep=config.keep)
+            if config.ckpt_dir
+            else None
+        )
+        self.straggler = StragglerDetector()
+        self.history: list[dict] = []
+
+    def init_or_resume(self, key: jax.Array) -> TrainState:
+        state = init_train_state(
+            self.model, self.optimizer, key, compress=self.config.compress_grads
+        )
+        if self.ckpt is not None:
+            restored = self.ckpt.restore(state)
+            if restored is not None:
+                tree, meta = restored
+                state = jax.tree.map(jnp.asarray, tree)
+                if not isinstance(state, TrainState):
+                    state = TrainState(**state) if isinstance(state, dict) else tree
+        return state
+
+    def run(self, key: jax.Array, *, on_step=None) -> TrainState:
+        cfg = self.config
+        state = self.init_or_resume(key)
+        start = int(state.step)
+        for step in range(start, cfg.total_steps):
+            batch = {k: jnp.asarray(v) for k, v in self.batch_fn(step).items()}
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            metrics.update(step=step, step_time=dt)
+            self.history.append(metrics)
+            if cfg.predicted_step_time > 0:
+                self.straggler.observe(0, dt, cfg.predicted_step_time)
+            if on_step is not None:
+                on_step(step, metrics)
+            if cfg.log_every and step % cfg.log_every == 0:
+                print(
+                    f"step {step:6d}  loss {metrics['loss']:.4f}  "
+                    f"gnorm {metrics['grad_norm']:.3f}  {dt*1e3:.1f} ms"
+                )
+            if self.ckpt is not None and cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
+                self.ckpt.save(int(state.step), state)
+        if self.ckpt is not None:
+            self.ckpt.save(int(state.step), state, sync=True)
+        return state

@@ -1,0 +1,114 @@
+"""Train-step factory: loss -> grads -> (optionally compressed) update.
+
+The produced step is a pure function ``(state, batch) -> (state,
+metrics)`` — jit it with shardings from ``repro.sharding`` (the dry-run
+does) or run it eagerly on CPU for the smoke tests.
+
+Features:
+* microbatch gradient accumulation (``lax.scan`` over the split batch),
+* optional int8 + error-feedback gradient compression on the DP
+  all-reduce path (cross-pod traffic / 4),
+* metrics: loss, CE, MoE aux, grad global-norm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.compression import ErrorFeedback
+from repro.optim.optimizers import Optimizer, global_norm
+
+__all__ = ["TrainState", "make_train_step", "train_state_axes"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    ef_residual: Any = None  # error-feedback state (compression on)
+
+
+def train_state_axes(model: Model, *, compress: bool = False) -> TrainState:
+    """Logical-axes tree matching TrainState (for sharding resolution)."""
+    p_axes = model.param_axes()
+    # AdamW/SGD moments mirror params exactly
+    opt_axes = {"m": p_axes, "v": p_axes}
+    return TrainState(
+        params=p_axes,
+        opt_state=opt_axes,
+        step=(),
+        ef_residual=p_axes if compress else None,
+    )
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    *,
+    microbatch: int = 0,
+    compress_grads: bool = False,
+) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    loss_fn = lambda p, b: model.loss(p, b)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        """Microbatched grads: mean over `microbatch` slices of the batch."""
+        nb = microbatch
+        split = jax.tree.map(lambda x: x.reshape((nb, x.shape[0] // nb) + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            loss_a, grads_a = carry
+            loss, _m, grads = grads_of(params, mb)
+            return (
+                loss_a + loss / nb,
+                jax.tree.map(lambda a, g: a + g / nb, grads_a, grads),
+            ), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros), split)
+        return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}, grads
+
+    def step_fn(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if microbatch and microbatch > 1:
+            loss, metrics, grads = accumulate(state.params, batch)
+        else:
+            loss, metrics, grads = grads_of(state.params, batch)
+
+        ef = state.ef_residual
+        if compress_grads:
+            grads, ef = ErrorFeedback.apply(grads, ef)
+
+        gnorm = global_norm(grads)
+        new_params, new_opt = optimizer.update(grads, state.opt_state, state.params, state.step)
+        new_state = TrainState(
+            params=new_params,
+            opt_state=new_opt,
+            step=state.step + 1,
+            ef_residual=ef,
+        )
+        out = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return new_state, out
+
+    return step_fn
+
+
+def init_train_state(
+    model: Model, optimizer: Optimizer, key: jax.Array, *, compress: bool = False
+) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+        ef_residual=ErrorFeedback.init(params) if compress else None,
+    )

@@ -1,0 +1,166 @@
+"""Checkpointing + fault-tolerance tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, load_pytree, save_pytree
+from repro.configs.paper_examples import example1_fleet, example1_tasks
+from repro.core.task import FleetSpec, Task, TaskVariant
+from repro.ft import ElasticController, FleetHealth, SliceState, StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# checkpoint primitives
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.int32), "c": jnp.zeros((5,), jnp.bfloat16)},
+    }
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(str(tmp_path / "ck"), t, meta={"step": 7})
+    loaded, meta = load_pytree(str(tmp_path / "ck"), t)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a, dtype=np.float32),
+                                      np.asarray(b, dtype=np.float32))
+
+
+def test_atomic_publication(tmp_path):
+    """A directory missing its manifest is never considered LATEST."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), sync=True)
+    # simulate a torn write of step 2
+    os.makedirs(tmp_path / "step_00000002")
+    with open(tmp_path / "LATEST", "w") as f:
+        f.write("2")
+    assert mgr.latest_step() == 1  # falls back past the torn step
+
+
+def test_manager_async_save_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        mgr.save(step, _tree())
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_manager_keep_every(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=1, keep_every=2)
+    for step in (1, 2, 3, 4, 5):
+        mgr.save(step, _tree(), sync=True)
+    steps = mgr.all_steps()
+    assert 5 in steps and 2 in steps and 4 in steps
+
+
+def test_restore_into_like(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(3, t, sync=True)
+    like = jax.tree.map(jnp.zeros_like, t)
+    restored, meta = mgr.restore(like)
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+
+
+def test_restore_none_when_empty(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.restore(_tree()) is None
+
+
+# ---------------------------------------------------------------------------
+# health / elastic / straggler
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_health_state_machine():
+    clock = FakeClock()
+    h = FleetHealth(3, timeout=30, suspect=10, clock=clock)
+    assert h.n_up == 3
+    clock.t = 15.0
+    h.heartbeat(0)
+    states = h.poll()
+    assert states[0] == SliceState.UP
+    assert states[1] == SliceState.SUSPECT
+    clock.t = 45.0
+    h.heartbeat(0)
+    states = h.poll()
+    assert states[0] == SliceState.UP
+    assert states[1] == SliceState.DOWN
+    assert h.n_up == 1
+    h.revive(1)
+    assert h.poll()[1] == SliceState.UP
+
+
+def test_elastic_replan_on_failure_and_recovery():
+    tasks, fleet = example1_tasks(), example1_fleet()
+    ctl = ElasticController(fleet, tasks)
+    assert ctl.current.feasible
+    p0 = ctl.current.total_power
+
+    ev = ctl.on_slice_down(3)  # 4 -> 3 slices
+    assert ev.n_slices == 3
+    # fewer devices: either still feasible at >= power, or tasks shed
+    if ev.result.feasible and not ev.dropped_tasks:
+        assert ev.result.total_power >= p0 - 1e-9
+
+    ev2 = ctl.on_slice_up(3)
+    assert ev2.n_slices == 4
+    assert ev2.result.feasible
+    assert ev2.result.total_power == pytest.approx(p0)
+
+
+def test_elastic_sheds_tasks_when_overloaded():
+    # tiny fleet that cannot host all tasks -> shed lowest priority
+    tasks = example1_tasks()
+    fleet = FleetSpec(n_f=2, t_slr=60.0, t_cfg=6.0)
+    ctl = ElasticController(fleet, tasks)
+    assert ctl.current.feasible
+    assert ctl.events[0].dropped_tasks  # had to shed something
+    kept = {t.name for t in ctl.active_tasks}
+    assert "T1" in kept  # highest priority survives
+
+
+def test_elastic_poll_triggers_on_heartbeat_loss():
+    clock = FakeClock()
+    health = FleetHealth(4, timeout=30, suspect=10, clock=clock)
+    ctl = ElasticController(example1_fleet(), example1_tasks(), health=health)
+    n_events = len(ctl.events)
+    clock.t = 31.0
+    for j in (0, 1, 2):
+        health.heartbeat(j)  # slice 3 silent
+    ev = ctl.poll()
+    assert ev is not None and ev.n_slices == 3
+    assert len(ctl.events) == n_events + 1
+    assert ctl.poll() is None  # no further change, no replan
+
+
+def test_straggler_detection_and_reset():
+    det = StragglerDetector(threshold=1.5, patience=3)
+    for _ in range(10):
+        flagged = det.observe(0, step_time=1.0, predicted=1.0)
+    assert not flagged
+    for _ in range(10):
+        flagged = det.observe(1, step_time=5.0, predicted=1.0)
+    assert flagged
+    assert det.stragglers() == [1]
+    det.reset(1)
+    assert det.stragglers() == []

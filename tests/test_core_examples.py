@@ -1,0 +1,140 @@
+"""Paper-exact reproduction tests: Examples 1-3 (§IV-A, Tables I/II, Figs 2-4)."""
+
+import pytest
+
+from repro.configs.paper_examples import (
+    example1_fleet,
+    example1_tasks,
+    example2_fleet,
+    example2_tasks,
+    example3_fleet,
+    example3_tasks,
+)
+from repro.core import (
+    PADPSFRScheduler,
+    place_shares,
+    render_gantt,
+    search_feasible,
+)
+
+
+class TestExample1:
+    """Table I: 6 tasks, nv=[2,4,4,4,4,2], t_slr=60, n_f=4, t_cfg=6."""
+
+    @pytest.fixture(scope="class")
+    def result(self):
+        sched = PADPSFRScheduler(example1_fleet())
+        return sched.schedule(example1_tasks(), count_all_rejects=True)
+
+    def test_tss_size_is_1024(self, result):
+        assert result.n_tss == 1024
+
+    def test_eq7_split_620_404(self, result):
+        # paper: 620 task sets satisfy eq. 7, 404 do not
+        assert result.n_tfs == 620
+        assert result.n_tnfs == 404
+
+    def test_chosen_combo_is_paper_5th(self, result):
+        # paper: the 5th power-sorted combination [48,36,24,32,24,24] wins
+        assert result.feasible
+        assert result.chosen_rank == 4  # 0-based rank 4 == 5th
+        assert [round(s) for s in result.combo.shares] == [48, 36, 24, 32, 24, 24]
+
+    def test_chosen_variants(self, result):
+        # 1CU-T1, 1CU-T2, 2CU-T3, 3CU-T4, 2CU-T5, 2CU-T6
+        cus = [
+            example1_tasks()[i].variants[j].cu
+            for i, j in enumerate(result.combo.variant_idx)
+        ]
+        assert cus == [1, 1, 2, 3, 2, 2]
+
+    def test_t3_splits_12_12_across_F2_F3(self, result):
+        # Fig 2: T3 (share 24) splits 12:12 across devices F2, F3 ->
+        # input data divided 1:1 (24 GB -> 12 GB + 12 GB)
+        splits = result.plan.splits
+        assert len(splits) == 1
+        sp = splits[0]
+        assert sp.task == 2  # T3
+        assert sp.devices == (1, 2)  # F2, F3 (0-based)
+        assert [round(p) for p in sp.share_parts] == [12, 12]
+        assert sp.ratio == (0.5, 0.5)
+
+    def test_t2_finishes_at_42ms_on_F2(self, result):
+        # §IV-A1: "The 1CU-T2 task is finished at 42 ms"
+        f2 = result.plan.scripts[1]
+        t2_runs = [s for s in f2.segments if s.task == 1 and s.kind == "run"]
+        assert t2_runs and abs(t2_runs[-1].end - 42.0) < 1e-9
+
+    def test_alg2_reject_count_documented_deviation(self, result):
+        # Paper says 156 placement rejects (-> 464 accepted); the pinned
+        # Fig-2/3 semantics give 146 (474 accepted). No boundary reading
+        # of the pseudocode yields 156 (see EXPERIMENTS.md) — we assert
+        # our reproducible number and the paper's qualitative claim that
+        # Alg 2 rejects SOME eq-7-feasible sets.
+        assert result.n_placement_rejects == 146
+        assert 0 < result.n_placement_rejects < result.n_tfs
+
+    def test_gantt_renders(self, result):
+        txt = render_gantt(result.plan, example1_tasks(), example1_fleet())
+        assert "split T3" in txt and "F4" in txt
+
+
+class TestExample2:
+    """II(T3): 2 -> 12 ms makes the Example-1 winner un-placeable (Fig 3)."""
+
+    def test_paper_combo_rejected(self):
+        fleet = example2_fleet()
+        plan = place_shares([48, 36, 24, 32, 24, 24], [2, 4, 12, 4, 6, 6], fleet)
+        assert not plan.feasible
+
+    def test_f2_cannot_host_t3(self):
+        # §IV-A2: remaining capacity 18 ms == t_cfg + II = 6 + 12 -> no
+        # data production time, T3 must move
+        fleet = example2_fleet()
+        plan = place_shares([48, 36, 24, 32, 24, 24], [2, 4, 12, 4, 6, 6], fleet)
+        f2_tasks = {s.task for s in plan.scripts[1].segments if s.kind == "run"}
+        assert 2 not in f2_tasks
+
+    def test_scheduler_falls_back_to_other_combo(self):
+        res = PADPSFRScheduler(example2_fleet()).schedule(example2_tasks())
+        assert res.feasible
+        assert [round(s) for s in res.combo.shares] != [48, 36, 24, 32, 24, 24]
+        # equal-power alternative found (total power unchanged at 31.5)
+        assert res.total_power == pytest.approx(31.5)
+
+
+class TestExample3:
+    """Table II: LZ-4/ZSTD/VAdd on 2 Alveo-50s, t_slr=600, t_cfg=21."""
+
+    @pytest.fixture(scope="class")
+    def result(self):
+        sched = PADPSFRScheduler(example3_fleet())
+        return sched.schedule(example3_tasks(), count_all_rejects=True)
+
+    def test_tss_24(self, result):
+        assert result.n_tss == 24  # 3 x 2 x 4
+
+    def test_six_accepted(self, result):
+        # paper: 6 combinations accepted, 18 rejected
+        assert result.n_tfs - result.n_placement_rejects == 6
+
+    def test_chosen_shares_540_440_119(self, result):
+        assert result.feasible
+        assert [round(s) for s in result.combo.shares] == [540, 440, 119]
+
+    def test_chosen_power(self, result):
+        # 6.64 + 6.89 + 6.21 = 19.74 mW
+        assert result.total_power == pytest.approx(19.74, abs=0.01)
+
+    def test_chosen_variants(self, result):
+        tasks = example3_tasks()
+        cus = [tasks[i].variants[j].cu for i, j in enumerate(result.combo.variant_idx)]
+        assert cus == [3, 1, 2]  # 3CU-LZ4, 1CU-ZSTD, 2CU-VAdd
+
+
+def test_feasibility_budget_matches_paper_arithmetic():
+    # Example 1: (60*4) - (6+1)*6 = 198 budget; paper quotes the sample
+    # combo [24,18,16,24,48,48] (sum 178) as eq-7-feasible
+    fleet = example1_fleet()
+    feas = search_feasible(example1_tasks(), fleet)
+    assert 178 <= feas.budget + 1e-9

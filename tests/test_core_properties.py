@@ -1,0 +1,189 @@
+"""Hypothesis property tests on the scheduler's invariants."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FleetSpec,
+    PADPSFRScheduler,
+    Task,
+    TaskVariant,
+    combo_count,
+    iter_feasible_pruned,
+    outer_sum,
+    place_shares,
+    search_feasible,
+)
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+variants = st.lists(
+    st.tuples(
+        st.floats(0.1, 10.0, allow_nan=False),  # throughput
+        st.floats(0.0, 20.0, allow_nan=False),  # power
+    ),
+    min_size=1,
+    max_size=4,
+)
+
+
+@st.composite
+def tasks_strategy(draw, max_tasks=5):
+    n = draw(st.integers(1, max_tasks))
+    out = []
+    for i in range(n):
+        vs = draw(variants)
+        out.append(
+            Task(
+                name=f"T{i}",
+                period=draw(st.floats(10.0, 200.0)),
+                data=draw(st.floats(1.0, 100.0)),
+                init_interval=draw(st.floats(0.0, 10.0)),
+                variants=tuple(
+                    TaskVariant(cu=j + 1, throughput=th, power=pw)
+                    for j, (th, pw) in enumerate(vs)
+                ),
+            )
+        )
+    return out
+
+
+fleets = st.builds(
+    FleetSpec,
+    n_f=st.integers(1, 6),
+    t_slr=st.floats(20.0, 200.0),
+    t_cfg=st.floats(0.0, 10.0),
+)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(tasks=tasks_strategy(), fleet=fleets)
+def test_tfs_tnfs_partition_tss(tasks, fleet):
+    feas = search_feasible(tasks, fleet)
+    assert feas.n_tfs + feas.n_tnfs == feas.n_combos == combo_count(tasks)
+    # every TFS row satisfies eq. 7, every TNFS row violates it
+    fit = feas.sum_shr <= feas.budget + 1e-9
+    assert (fit == feas.fit_mask).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(tasks=tasks_strategy(max_tasks=4), fleet=fleets)
+def test_pruned_iterator_matches_exhaustive(tasks, fleet):
+    """Branch-and-bound stream == power-sorted TFS of the exhaustive engine."""
+    feas = search_feasible(tasks, fleet)
+    exhaustive = [c.total_power for c in feas.iter_tfs_by_power()]
+    pruned = [c.total_power for c in iter_feasible_pruned(tasks, fleet)]
+    assert len(exhaustive) == len(pruned)
+    np.testing.assert_allclose(sorted(exhaustive), sorted(pruned), rtol=1e-12)
+    # both ascending by power
+    assert all(a <= b + 1e-9 for a, b in zip(pruned, pruned[1:]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    vecs=st.lists(
+        st.lists(st.floats(0, 50, allow_nan=False), min_size=1, max_size=4),
+        min_size=1,
+        max_size=4,
+    )
+)
+def test_outer_sum_equals_cartesian(vecs):
+    arrs = [np.asarray(v) for v in vecs]
+    got = outer_sum(arrs)
+    import itertools
+
+    want = np.asarray([sum(t) for t in itertools.product(*arrs)])
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Placement invariants (Algs 2/3)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    shares=st.lists(st.floats(1.0, 80.0), min_size=1, max_size=6),
+    iis=st.data(),
+    fleet=fleets,
+)
+def test_placement_invariants(shares, iis, fleet):
+    ii = [iis.draw(st.floats(0.0, 10.0)) for _ in shares]
+    plan = place_shares(shares, ii, fleet)
+
+    # (1) device timelines never exceed t_slr and segments are contiguous
+    for script in plan.scripts:
+        t = 0.0
+        for seg in script.segments:
+            assert seg.start == pytest.approx(t, abs=1e-6)
+            assert seg.end >= seg.start - 1e-9
+            t = seg.end
+        assert t <= fleet.t_slr + 1e-6
+
+    # (2) share conservation: executed share per task never exceeds its
+    # share; feasible => fully executed
+    for k, shr in enumerate(shares):
+        assert plan.executed_share[k] <= shr + 1e-6
+        if plan.feasible:
+            assert plan.executed_share[k] == pytest.approx(shr, abs=1e-6)
+
+    # (3) split ratios are positive and sum to 1
+    for sp in plan.splits:
+        assert all(p > -1e-9 for p in sp.share_parts)
+        assert sum(sp.ratio) == pytest.approx(1.0)
+        # split devices are consecutive (DP-wrap wraps to the next device)
+        ds = list(sp.devices)
+        assert ds == sorted(ds)
+
+    # (4) every run segment is preceded by its configuration segment
+    for script in plan.scripts:
+        segs = script.segments
+        for i, seg in enumerate(segs):
+            if seg.kind == "run":
+                prior = [s for s in segs[:i] if s.task == seg.task and s.kind == "cfg"]
+                assert prior, "run without configuration"
+
+    # (5) infeasible plans name the unplaced tasks
+    if not plan.feasible:
+        assert plan.unplaced
+
+
+@settings(max_examples=40, deadline=None)
+@given(tasks=tasks_strategy(max_tasks=4), fleet=fleets)
+def test_scheduler_returns_minimum_power_placeable(tasks, fleet):
+    """The chosen combo has minimal power among ALL placeable TFS rows."""
+    res = PADPSFRScheduler(fleet).schedule(tasks, count_all_rejects=True)
+    if not res.feasible:
+        return
+    feas = search_feasible(tasks, fleet)
+    placeable_powers = []
+    for idx in np.flatnonzero(feas.fit_mask):
+        combo = feas.combo_at(int(idx))
+        from repro.core import place_combo
+
+        if place_combo(combo, tasks, fleet).feasible:
+            placeable_powers.append(combo.total_power)
+    assert placeable_powers
+    assert res.total_power == pytest.approx(min(placeable_powers))
+
+
+@settings(max_examples=40, deadline=None)
+@given(tasks=tasks_strategy(max_tasks=3), fleet=fleets)
+def test_more_devices_never_hurt(tasks, fleet):
+    """Monotonicity: adding devices keeps feasibility and can't raise the
+    minimum power."""
+    res_small = PADPSFRScheduler(fleet).schedule(tasks)
+    res_big = PADPSFRScheduler(fleet.with_devices(fleet.n_f + 2)).schedule(tasks)
+    if res_small.feasible:
+        assert res_big.feasible
+        assert res_big.total_power <= res_small.total_power + 1e-9

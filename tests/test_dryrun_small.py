@@ -1,0 +1,68 @@
+"""Small-mesh dry-run smoke: lower + compile reduced cells on forced host
+devices, in a subprocess (device count must be set before jax init)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_arch
+from repro.configs.shapes import InputShape
+from repro.models import Model, ExecConfig
+from repro.models.model import train_batch_specs
+from repro.optim import AdamW
+from repro.sharding import PRESETS, activation_sharding, batch_axes_tree, tree_shardings
+from repro.train.step import make_train_step, train_state_axes
+from repro.launch.dryrun import _abstract_train_state
+from repro.launch.mesh import make_mesh
+from repro.roofline import analyze_compiled
+
+arch = sys_argv_arch
+mesh = make_mesh((4, 2), ("data", "model"))
+rules = PRESETS["fsdp_tp_sp"]
+cfg = get_arch(arch).reduced()
+shape = InputShape("t", 32, 8, "train")
+model = Model(cfg, ExecConfig(remat="full"))
+state = _abstract_train_state(model)
+batch = train_batch_specs(cfg, shape)
+state_sh = tree_shardings(state, train_state_axes(model), mesh, rules)
+batch_sh = tree_shardings(batch, batch_axes_tree(batch), mesh, rules)
+step = make_train_step(model, AdamW(1e-4))
+with activation_sharding(mesh, rules):
+    jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, NamedSharding(mesh, P())))
+    compiled = jitted.lower(state, batch).compile()
+res = analyze_compiled(compiled, arch=arch, shape="t", mesh_name="m", n_chips=8,
+                       model_flops=1.0)
+print("RESULT " + json.dumps({
+    "flops": res.flops_per_device,
+    "coll": res.coll_bytes_per_device,
+    "mem": float(compiled.memory_analysis().argument_size_in_bytes),
+}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-130m", "moonshot-v1-16b-a3b"])
+def test_reduced_cell_compiles_on_small_mesh(arch):
+    code = _SCRIPT.replace("sys_argv_arch", repr(arch))
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    res = json.loads(line[len("RESULT "):])
+    assert res["flops"] > 0
+    assert res["coll"] > 0  # sharded training must communicate
+    assert res["mem"] > 0

@@ -1,0 +1,181 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.configs.base import MoESpec
+from repro.models import Model, train_batch_specs
+from repro.models.params import param_count
+
+KEY = jax.random.PRNGKey(0)
+B, S, EXTRA = 2, 24, 3
+
+
+def _batches(cfg, Sfull, Spre, tok):
+    full = {"tokens": tok}
+    pre = {"tokens": tok[:, :Spre]}
+    if cfg.family == "encdec":
+        enc = jax.random.normal(jax.random.fold_in(KEY, 2), (B, 16, cfg.d_model), jnp.float32)
+        full["enc_embeds"] = enc
+        pre["enc_embeds"] = enc
+    if cfg.family == "vlm":
+        P = 4
+        patch = jax.random.normal(jax.random.fold_in(KEY, 3), (B, P, cfg.d_model))
+
+        def mpos(L):
+            p = jnp.broadcast_to(jnp.arange(L)[None, :, None], (B, L, 1))
+            return jnp.broadcast_to(p, (B, L, 3)).astype(jnp.int32)
+
+        full = {"tokens": tok[:, : Sfull - P], "patch_embeds": patch, "positions": mpos(Sfull)}
+        pre = {"tokens": tok[:, : Spre - P], "patch_embeds": patch, "positions": mpos(Spre)}
+    return full, pre
+
+
+@pytest.fixture(scope="module", params=list_archs())
+def arch_setup(request):
+    cfg = get_arch(request.param).reduced()
+    if cfg.family == "moe":
+        # no-drop capacity so prefill/decode agree exactly
+        cfg = dataclasses.replace(
+            cfg, moe=MoESpec(cfg.moe.n_experts, cfg.moe.top_k, capacity=float(cfg.moe.n_experts))
+        )
+    model = Model(cfg)
+    params = model.init(KEY)
+    return request.param, cfg, model, params
+
+
+def test_smoke_train_step(arch_setup):
+    """One forward/loss step on CPU: output shapes + finite values."""
+    name, cfg, model, params = arch_setup
+    tok = jax.random.randint(jax.random.fold_in(KEY, 7), (B, S), 0, cfg.vocab)
+    batch, _ = _batches(cfg, S, S, tok)
+    batch["labels"] = jnp.zeros((B, S), jnp.int32)
+    logits = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    assert float(loss) > 0
+
+
+def test_grads_flow_and_finite(arch_setup):
+    name, cfg, model, params = arch_setup
+    tok = jax.random.randint(jax.random.fold_in(KEY, 8), (B, S), 0, cfg.vocab)
+    batch, _ = _batches(cfg, S, S, tok)
+    batch["labels"] = tok
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    # at least 90% of parameter tensors receive nonzero gradient
+    nz = sum(float(jnp.abs(g).max()) > 0 for g in flat)
+    assert nz / len(flat) > 0.9
+
+
+def test_prefill_decode_matches_forward(arch_setup):
+    """Teacher-forced forward == prefill + step-by-step decode."""
+    name, cfg, model, params = arch_setup
+    Sfull = S + EXTRA
+    tok = jax.random.randint(jax.random.fold_in(KEY, 1), (B, Sfull), 0, cfg.vocab)
+    full, pre = _batches(cfg, Sfull, S, tok)
+    logits_full = model.forward(params, full)
+    last, state = model.prefill(params, pre)
+    np.testing.assert_allclose(
+        last.astype(jnp.float32), logits_full[:, S - 1].astype(jnp.float32),
+        atol=1e-4, rtol=1e-4,
+    )
+
+    def pad_kv(arr, to):
+        padw = [(0, 0)] * arr.ndim
+        padw[2] = (0, to - arr.shape[2])
+        return jnp.pad(arr, padw)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        state = (pad_kv(state[0], Sfull), pad_kv(state[1], Sfull))
+    elif cfg.family == "encdec":
+        state = {
+            "self": (pad_kv(state["self"][0], Sfull), pad_kv(state["self"][1], Sfull)),
+            "cross": state["cross"],
+        }
+    for t in range(EXTRA):
+        pos = S + t
+        nxt = tok[:, pos - 4] if cfg.family == "vlm" else tok[:, pos]
+        logits, state = model.decode_step(params, state, nxt, jnp.int32(pos))
+        np.testing.assert_allclose(
+            logits.astype(jnp.float32), logits_full[:, pos].astype(jnp.float32),
+            atol=1e-4, rtol=1e-4,
+        )
+
+
+def test_full_config_registered_param_counts():
+    """Full configs expose the published hyper-parameters."""
+    expect = {
+        "qwen1.5-110b": (80, 8192, 64, 8),
+        "deepseek-67b": (95, 8192, 64, 8),
+        "yi-34b": (60, 7168, 56, 8),
+        "smollm-135m": (30, 576, 9, 3),
+        "qwen2-vl-2b": (28, 1536, 12, 2),
+        "recurrentgemma-2b": (26, 2560, 10, 1),
+        "mamba2-130m": (24, 768, 0, 0),
+        "dbrx-132b": (40, 6144, 48, 8),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16),
+    }
+    for name, (L, d, H, K) in expect.items():
+        cfg = get_arch(name)
+        assert cfg.n_layers == L, name
+        assert cfg.d_model == d, name
+        if H:
+            assert cfg.n_heads == H and cfg.n_kv_heads == K, name
+
+
+@pytest.mark.parametrize(
+    "name,lo,hi",
+    [
+        ("smollm-135m", 0.10e9, 0.20e9),
+        ("mamba2-130m", 0.10e9, 0.21e9),
+        ("yi-34b", 30e9, 39e9),
+        ("deepseek-67b", 60e9, 72e9),
+        ("qwen1.5-110b", 100e9, 120e9),
+        ("dbrx-132b", 120e9, 145e9),
+        ("qwen2-vl-2b", 1.2e9, 2.4e9),
+        ("recurrentgemma-2b", 2.0e9, 3.4e9),
+    ],
+)
+def test_spec_param_counts_match_published_scale(name, lo, hi):
+    """Materialisable spec tree is the size the model card says."""
+    model = Model(get_arch(name))
+    n = param_count(model.specs())
+    assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B params out of [{lo/1e9}, {hi/1e9}]"
+
+
+@pytest.mark.parametrize("arch", ["dbrx-132b", "moonshot-v1-16b-a3b"])
+def test_moe_dispatch_impls_identical(arch):
+    """vmap and batched MoE dispatch are numerically identical (§Perf)."""
+    from repro.models import ExecConfig
+
+    cfg = get_arch(arch).reduced()
+    tok = jax.random.randint(jax.random.fold_in(KEY, 9), (2, 24), 0, cfg.vocab)
+    m1 = Model(cfg, ExecConfig(moe_impl="vmap", remat="none"))
+    m2 = Model(cfg, ExecConfig(moe_impl="batched", remat="none"))
+    params = m1.init(KEY)
+    l1 = m1.forward(params, {"tokens": tok})
+    l2 = m2.forward(params, {"tokens": tok})
+    np.testing.assert_allclose(
+        l1.astype(jnp.float32), l2.astype(jnp.float32), atol=1e-5
+    )
+
+
+def test_train_batch_specs_cover_all_cells():
+    from repro.configs.shapes import SHAPES
+
+    for arch in list_archs():
+        cfg = get_arch(arch)
+        for shape in SHAPES.values():
+            specs = train_batch_specs(cfg, shape)
+            assert "tokens" in specs and "labels" in specs

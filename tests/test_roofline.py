@@ -1,0 +1,150 @@
+"""Roofline machinery: HLO cost walker, collective parsing, power model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.power import V5E, PowerModel, step_time_roofline
+from repro.roofline import analyze_compiled, collective_bytes
+from repro.roofline.hlo_costs import parse_hlo_costs
+
+
+def test_walker_matches_cost_analysis_loop_free():
+    def f(a, b):
+        return (a @ b).sum()
+
+    a = jnp.ones((64, 128))
+    b = jnp.ones((128, 32))
+    comp = jax.jit(f).lower(a, b).compile()
+    ca = comp.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    w = parse_hlo_costs(comp.as_text())
+    assert w.dot_flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+    assert w.flops == pytest.approx(float(ca["flops"]), rel=0.2)
+
+
+def test_walker_scales_scan_by_trip_count():
+    def f(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), ()
+
+        h, _ = jax.lax.scan(body, x, ws)
+        return h.sum()
+
+    x = jnp.ones((32, 64))
+    flops = {}
+    for L in (2, 8):
+        ws = jnp.ones((L, 64, 64))
+        comp = jax.jit(f).lower(x, ws).compile()
+        flops[L] = parse_hlo_costs(comp.as_text()).dot_flops
+    assert flops[8] == pytest.approx(4 * flops[2], rel=0.01)
+    assert flops[2] == pytest.approx(2 * 2 * 32 * 64 * 64, rel=0.01)
+
+
+def test_walker_nested_loops_multiply():
+    def f(x, ws):
+        def outer(h, w):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ w), ()
+
+            h2, _ = jax.lax.scan(inner, h, jnp.arange(3))
+            return h2, ()
+
+        h, _ = jax.lax.scan(outer, x, ws)
+        return h.sum()
+
+    x = jnp.ones((16, 32))
+    ws = jnp.ones((5, 32, 32))
+    comp = jax.jit(f).lower(x, ws).compile()
+    w = parse_hlo_costs(comp.as_text())
+    assert w.dot_flops == pytest.approx(5 * 3 * 2 * 16 * 32 * 32, rel=0.01)
+
+
+def test_collective_parse_synthetic_hlo():
+    txt = """
+HloModule m
+
+ENTRY %main (p: f32[8,16]) -> f32[8,16] {
+  %p = f32[8,16]{1,0} parameter(0)
+  %ar = f32[8,16]{1,0} all-reduce(%p), replica_groups={}
+  ROOT %ag = f32[8,32]{1,0} all-gather(%ar), dimensions={1}
+}
+"""
+    stats = collective_bytes(txt)
+    assert stats.per_op_count["all-reduce"] == 1
+    assert stats.per_op_count["all-gather"] == 1
+    assert stats.per_op["all-reduce"] == 8 * 16 * 4
+
+
+def test_walker_counts_collectives_with_defs():
+    txt = """
+HloModule m
+
+ENTRY %main (p: f32[8,16]) -> f32[8,16] {
+  %p = f32[8,16]{1,0} parameter(0)
+  %c = f32[8,16]{1,0} copy(%p)
+  %ar = f32[8,16]{1,0} all-reduce(%c), replica_groups={}
+  ROOT %r = f32[8,16]{1,0} copy(%ar)
+}
+"""
+    w = parse_hlo_costs(txt)
+    assert w.coll_counts["all-reduce"] == 1
+    assert w.coll_bytes["all-reduce"] == 8 * 16 * 4
+
+
+def test_roofline_terms_and_power_model():
+    t, terms = step_time_roofline(
+        flops=197e12, hbm_bytes=819e9, coll_bytes=0.0, n_chips=1
+    )
+    assert terms["compute"] == pytest.approx(1.0)
+    assert terms["memory"] == pytest.approx(1.0)
+    assert t == pytest.approx(1.0)
+
+    pm = PowerModel()
+    idle = pm.chip_power(0, 0, 0)
+    busy = pm.chip_power(V5E.peak_flops, V5E.hbm_bw, 0)
+    assert idle == pytest.approx(75.0)
+    assert 180 <= busy <= 230  # calibrated ~200 W at full tilt
+
+
+def test_analyze_compiled_end_to_end():
+    def f(a, b):
+        return a @ b
+
+    a = jnp.ones((64, 64))
+    comp = jax.jit(f).lower(a, a).compile()
+    res = analyze_compiled(
+        comp, arch="t", shape="s", mesh_name="m", n_chips=1,
+        model_flops=2 * 64 * 64 * 64,
+    )
+    assert res.flops_per_device > 0
+    assert res.bottleneck() in ("compute", "memory", "collective")
+    row = res.to_row()
+    assert row["useful_flops_frac"] == pytest.approx(1.0, rel=0.05)
+
+
+def test_variant_generation_monotone():
+    """More chips -> shorter step (roofline) and different power point."""
+    from repro.configs import get_arch
+    from repro.configs.shapes import get_shape
+    from repro.core.variants import JobSpec, make_task
+
+    job = JobSpec(cfg=get_arch("yi-34b"), shape=get_shape("train_4k"), period_s=3600)
+    task = make_task(job, chip_options=(64, 128, 256))
+    assert task.nv >= 2
+    ths = [v.throughput for v in task.variants]
+    assert ths == sorted(ths)  # more chips, more steps/s
+    pws = [v.power for v in task.variants]
+    assert all(p > 0 for p in pws)
+
+
+def test_variant_generation_respects_memory_floor():
+    """Slices too small to hold the weights are not offered."""
+    from repro.configs import get_arch
+    from repro.configs.shapes import get_shape
+    from repro.core.variants import JobSpec, variant_table
+
+    job = JobSpec(cfg=get_arch("qwen1.5-110b"), shape=get_shape("train_4k"), period_s=3600)
+    vs = variant_table(job, chip_options=(8, 256))
+    assert all(v.cu != 8 for v in vs)  # 110B f32 train state >> 8 chips

@@ -1,0 +1,135 @@
+"""Fleet-level scheduling (paper's algorithm on TPU job variants) +
+baseline comparisons (EDF/LLF/ER-fair, preemptive DP-Fair of refs [9]/[10])."""
+
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.shapes import get_shape
+from repro.configs.paper_examples import example1_fleet, example1_tasks
+from repro.core import (
+    FleetSpec,
+    PADPSFRScheduler,
+    count_placeable,
+    edf_schedule,
+    erfair_context_switches,
+    llf_schedule,
+    preemptive_dpfair_schedule,
+    sweep_fleet,
+)
+from repro.core.variants import JobSpec, make_task
+from repro.launch.schedule import plan_fleet
+
+
+def _jobs():
+    return [
+        JobSpec(cfg=get_arch("yi-34b"), shape=get_shape("train_4k"),
+                period_s=3600, steps_per_period=600),
+        JobSpec(cfg=get_arch("smollm-135m"), shape=get_shape("decode_32k"),
+                period_s=600, steps_per_period=3000),
+        JobSpec(cfg=get_arch("mamba2-130m"), shape=get_shape("train_4k"),
+                period_s=1800, steps_per_period=2000),
+    ]
+
+
+def test_fleet_plan_feasible_and_power_minimal():
+    fleet = FleetSpec(n_f=4, t_slr=3600.0, t_cfg=45.0)
+    tasks, result = plan_fleet(_jobs(), fleet, chip_options=(16, 32, 64))
+    assert result.feasible
+    # chosen = minimum power among placeable (property asserted exhaustively
+    # in test_core_properties; here sanity-check the integration)
+    assert result.total_power > 0
+    assert result.plan is not None
+    placed = {seg.task for s in result.plan.scripts for seg in s.segments if seg.kind == "run"}
+    assert placed == set(range(len(tasks)))
+
+
+def test_fleet_infeasible_when_period_too_tight():
+    jobs = [
+        JobSpec(cfg=get_arch("yi-34b"), shape=get_shape("train_4k"),
+                period_s=10.0, steps_per_period=100000)
+    ]
+    fleet = FleetSpec(n_f=2, t_slr=10.0, t_cfg=1.0)
+    _tasks, result = plan_fleet(jobs, fleet, chip_options=(64, 128))
+    assert not result.feasible
+
+
+# ---------------------------------------------------------------------------
+# baselines (paper §IV-C / Table III)
+# ---------------------------------------------------------------------------
+
+
+def test_preemptive_dpfair_accepts_fewer_or_equal_sets():
+    """Fig 8: with honest capture/store overhead, refs [9]/[10] place
+    fewer task sets than PADPS-FR at every fleet size."""
+    tasks, fleet = example1_tasks(), example1_fleet()
+    for n_f in (4, 5, 6):
+        f = fleet.with_devices(n_f)
+        _, _, ours = count_placeable(tasks, f)
+        _, _, theirs = count_placeable(
+            tasks, f, t_capture=12.0, t_store=12.0, repay_init=False
+        )
+        assert theirs <= ours
+
+
+def test_preemptive_dpfair_schedule_runs():
+    res = preemptive_dpfair_schedule(
+        example1_tasks(), example1_fleet(), t_capture=12.0, t_store=12.0
+    )
+    assert res.n_tss == 1024
+    if res.feasible:
+        assert res.total_power >= 31.5 - 1e-9  # never better than PADPS-FR
+
+
+def test_greedy_baselines_ignore_power():
+    tasks, fleet = example1_tasks(), example1_fleet()
+    edf = edf_schedule(tasks, fleet)
+    llf = llf_schedule(tasks, fleet)
+    ours = PADPSFRScheduler(fleet).schedule(tasks)
+    # greedy always burns the fastest variants: strictly more power
+    assert edf.total_power > ours.total_power
+    assert llf.total_power > ours.total_power
+
+
+def test_erfair_context_switches_uncontrolled():
+    """ER-fair reconfigurations grow with quantum resolution; DP-wrap's
+    are bounded by n_t + n_f - 1."""
+    tasks, fleet = example1_tasks(), example1_fleet()
+    coarse = erfair_context_switches(tasks, fleet, quantum=10.0)
+    fine = erfair_context_switches(tasks, fleet, quantum=1.0)
+    assert fine > coarse
+    ours = PADPSFRScheduler(fleet).schedule(tasks)
+    n_cfgs = sum(
+        sum(1 for seg in s.segments if seg.kind == "cfg")
+        for s in ours.plan.scripts
+    )
+    assert n_cfgs <= len(tasks) + fleet.n_f - 1
+    assert fine > n_cfgs
+
+
+def test_sweep_matches_fig5_trend():
+    """TRR falls with more FPGAs and rises with t_cfg (Figs 5-7)."""
+    tasks = example1_tasks()
+    base = example1_fleet()
+    pts = sweep_fleet(tasks, base, n_f_values=[3, 4, 5, 6], t_cfg_values=[6.0],
+                      with_placement=False)
+    trrs = [p.trr_eq7 for p in pts]
+    assert trrs == sorted(trrs, reverse=True)  # monotone non-increasing
+    assert trrs[0] > 90  # n_f=3: paper says ~100%
+    assert trrs[-1] < 10  # n_f=6: paper says ~0%
+
+    pts_cfg = sweep_fleet(tasks, base, n_f_values=[4], t_cfg_values=[2.0, 6.0, 10.0],
+                          with_placement=False)
+    trr_by_cfg = [p.trr_eq7 for p in pts_cfg]
+    assert trr_by_cfg == sorted(trr_by_cfg)  # rises with t_cfg
+
+    # Fig 6/7: the *theoretical* workload threshold 1 - (n_t+1)·t_cfg /
+    # (n_f·t_slr) rises with n_f; the empirical max over the DISCRETE set
+    # of accepted combos tracks it within ~1.5 percentage points.
+    wl = [p.workload_threshold for p in pts]
+    for a, b in zip(wl, wl[1:]):
+        assert b >= a - 1.5
+    assert wl[-1] > wl[0]
+    aw = [p.avg_weight_threshold for p in pts]
+    for a, b in zip(aw, aw[1:]):
+        assert b >= a - 0.02
+    assert aw[-1] > aw[0]

@@ -1,0 +1,182 @@
+"""Substrate unit tests: optimizers, schedules, compression, data, sharding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import SyntheticLM
+from repro.optim import (
+    AdamW,
+    Adafactor,
+    ErrorFeedback,
+    SGD,
+    clip_by_global_norm,
+    compress_int8,
+    cosine_lr,
+    decompress_int8,
+    global_norm,
+    linear_warmup_cosine,
+)
+from repro.sharding import PRESETS, resolve_spec
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "sgd", "adafactor"])
+def test_optimizer_minimises_quadratic(opt_name):
+    opt = {
+        "adamw": AdamW(0.1, weight_decay=0.0),
+        "sgd": SGD(0.05),
+        "adafactor": Adafactor(0.3),
+    }[opt_name]
+    target = jnp.asarray([[1.0, -2.0], [3.0, 0.5]])
+    params = {"w": jnp.zeros((2, 2))}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for step in range(1000 if opt_name == "adafactor" else 200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.int32(step))
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks_params():
+    opt = AdamW(0.1, weight_decay=0.5, grad_clip=0.0)
+    params = {"w": jnp.ones((4,)) * 10.0}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros((4,))}
+    p1, _ = opt.update(zero_g, state, params, jnp.int32(0))
+    assert float(p1["w"][0]) < 10.0
+
+
+def test_global_norm_and_clip():
+    tree = {"a": jnp.ones((3,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    n = float(global_norm(tree))
+    assert n == pytest.approx(np.sqrt(9 * 3 + 16 * 4))
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) == pytest.approx(n)
+
+
+def test_schedules_shapes():
+    s = linear_warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(s(jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.1, rel=1e-2)
+    c = cosine_lr(2.0, 50)
+    assert float(c(jnp.int32(0))) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.sampled_from([(7,), (16,), (3, 5), (128,), (300,)]),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_int8_roundtrip_error_bounded(shape, scale):
+    x = np.random.default_rng(0).standard_normal(shape).astype(np.float32) * scale
+    q, s = compress_int8(jnp.asarray(x))
+    assert q.dtype == jnp.int8
+    back = decompress_int8(q, s, shape, jnp.float32)
+    # per-block max error <= scale/127 within each 256-block
+    err = np.abs(np.asarray(back) - x)
+    assert err.max() <= np.abs(x).max() / 127.0 + 1e-6
+
+
+def test_error_feedback_converges_in_mean():
+    """With EF, quantisation error doesn't accumulate: the running sum of
+    compressed grads tracks the true sum."""
+    rng = np.random.default_rng(1)
+    g_true = [rng.standard_normal(64).astype(np.float32) for _ in range(50)]
+    residual = ErrorFeedback.init({"g": jnp.zeros(64)})
+    acc_c, acc_t = np.zeros(64), np.zeros(64)
+    for g in g_true:
+        out, residual = ErrorFeedback.apply({"g": jnp.asarray(g)}, residual)
+        acc_c += np.asarray(out["g"])
+        acc_t += g
+    # EF keeps cumulative drift to the size of one step's error
+    assert np.abs(acc_c - acc_t).max() < np.abs(g_true[-1]).max()
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_host_sharded():
+    ds = SyntheticLM(vocab=1000, seq_len=32, global_batch=8, seed=3)
+    a = ds.batch(5)
+    b = ds.batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # host sharding partitions the global batch
+    h0 = ds.batch(5, host_id=0, host_count=2)
+    h1 = ds.batch(5, host_id=1, host_count=2)
+    assert h0["tokens"].shape == (4, 32)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_data_has_learnable_structure():
+    ds = SyntheticLM(vocab=257, seq_len=128, global_batch=4, seed=0, structure=1.0)
+    t = ds.batch(0)["tokens"]
+    a = 6364136223846793005 % 257
+    b = 1442695040888963407 % 257
+    np.testing.assert_array_equal(t[:, 1:], (t[:, :-1] * a + b) % 257)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    from repro.launch.mesh import make_mesh
+
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_resolve_spec_drops_nondividing_axes():
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = PRESETS["fsdp_tp"]
+    # vocab 7 not divisible by the 1-sized axis is fine (1 divides);
+    # use shape-math directly on the resolve function
+    spec = resolve_spec(("vocab", "embed"), (7, 16), mesh, rules)
+    assert isinstance(spec, P)
+
+
+def test_resolve_spec_no_duplicate_mesh_axes():
+    """A mesh axis never shards two dims of one tensor."""
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = PRESETS["fsdp_tp_sp"]
+    spec = resolve_spec(("batch", "act_seq", "mlp"), (16, 64, 64), mesh, rules)
+    flat = [a for part in spec for a in ((part,) if isinstance(part, str) else (part or ()))]
+    assert len(flat) == len(set(flat))
+
+
+def test_preset_tables_cover_all_logical_axes():
+    needed = {
+        "batch", "heads", "kv", "mlp", "vocab", "expert", "state",
+        "embed", "layers", "conv", "seq", "act_seq",
+    }
+    for name, rules in PRESETS.items():
+        assert needed <= set(rules.table), name
