@@ -2,22 +2,43 @@
 
 * vectorised Alg-1 (numpy outer-sum) vs the paper's nested-loop
   enumeration, at growing |TSS|;
+* batched Alg-2 placement (vectorized TFS blocks) vs the scalar
+  one-combo-at-a-time walk, at growing |TFS|;
+* heterogeneous-fleet scheduling (mixed FPGA/GPU/CPU device classes)
+  at growing fleet sizes;
 * branch-and-bound streaming search (no TSS materialisation) on
   instances where the exhaustive product would not fit in memory.
+
+CLI (the CI benchmark-smoke job):
+
+    PYTHONPATH=src python -m benchmarks.scheduler_scale --quick \
+        --json BENCH_scheduler_scale.json
 """
 
 from __future__ import annotations
 
+import argparse
 import itertools
+import json
+import sys
 
 import numpy as np
 
-from repro.core import FleetSpec, PADPSFRScheduler, Task, TaskVariant, search_feasible
+from repro.core import (
+    FleetSpec,
+    PADPSFRScheduler,
+    Task,
+    TaskVariant,
+    place_batch,
+    place_combo,
+    search_feasible,
+)
 from repro.core.feasibility import iter_feasible_pruned
+from repro.core.variants import make_hetero_fleet
 
 from .util import Row, timeit
 
-__all__ = ["bench_scheduler_scale"]
+__all__ = ["bench_scheduler_scale", "main"]
 
 
 def _synth_tasks(n_t: int, nv: int, seed: int = 0) -> list[Task]:
@@ -53,14 +74,79 @@ def _loop_enumeration(tasks, fleet) -> int:
     return n_fit
 
 
-def bench_scheduler_scale() -> list[Row]:
+def bench_alg2_batched_vs_scalar(quick: bool = False) -> list[Row]:
+    """Batched TFS placement sweeps vs the scalar one-row-at-a-time walk.
+
+    The acceptance target: >= 10x over the scalar walk at |TFS| >= 1e4.
+    """
+    rows = []
+    fleet = FleetSpec(n_f=8, t_slr=80.0, t_cfg=4.0)
+    sizes = [(6, 4), (7, 4)] if quick else [(6, 4), (7, 4), (8, 4)]
+    for n_t, nv in sizes:  # |TSS| = 4k, 16k, 65k
+        tasks = _synth_tasks(n_t, nv)
+        feas = search_feasible(tasks, fleet)
+        order = feas.tfs_indices_by_power()
+        iis = [t.init_interval for t in tasks]
+        shares = feas.shares_matrix(order)
+
+        def batched_walk():
+            return place_batch(shares, iis, fleet).n_feasible
+
+        def scalar_walk():
+            n = 0
+            for fi in order:
+                if place_combo(feas.combo_at(int(fi)), tasks, fleet).feasible:
+                    n += 1
+            return n
+
+        n_placed = batched_walk()
+        us_batched = timeit(batched_walk, repeat=3)
+        us_scalar = timeit(scalar_walk, repeat=1, warmup=0)
+        rows.append(
+            Row(
+                f"alg2_batched_tfs{order.size}",
+                us_batched,
+                f"scalar_us={us_scalar:.0f};speedup={us_scalar / us_batched:.0f}x"
+                f";placed={n_placed}",
+            )
+        )
+    return rows
+
+
+def bench_hetero_fleet(quick: bool = False) -> list[Row]:
+    """End-to-end PADPS-FR on mixed FPGA/GPU/CPU fleets at growing sizes."""
+    rows = []
+    tasks = _synth_tasks(8 if quick else 10, 4, seed=2)
+    scales = [1, 2] if quick else [1, 2, 4]
+    for scale in scales:
+        fleet = make_hetero_fleet(
+            {"fpga": 4 * scale, "gpu": 2 * scale, "cpu": 2 * scale},
+            t_slr=80.0,
+            name=f"mix-x{scale}",
+        )
+        sched = PADPSFRScheduler(fleet)
+        res = sched.schedule(tasks)
+        us = timeit(lambda: sched.schedule(tasks), repeat=3)
+        rows.append(
+            Row(
+                f"padpsfr_hetero_{fleet.n_f}dev",
+                us,
+                f"feasible={res.feasible};power={res.total_power:.1f}"
+                f";rank={res.chosen_rank}",
+            )
+        )
+    return rows
+
+
+def bench_scheduler_scale(quick: bool = False) -> list[Row]:
     rows = []
     fleet = FleetSpec(n_f=8, t_slr=80.0, t_cfg=4.0)
 
-    for n_t, nv in [(6, 4), (8, 4), (10, 4)]:  # |TSS| = 4k, 65k, 1M
+    sizes = [(6, 4), (8, 4)] if quick else [(6, 4), (8, 4), (10, 4)]
+    for n_t, nv in sizes:  # |TSS| = 4k, 65k, 1M
         tasks = _synth_tasks(n_t, nv)
         us_vec = timeit(lambda: search_feasible(tasks, fleet), repeat=3)
-        if nv**n_t <= 70_000:
+        if nv**n_t <= 70_000 and not quick:
             us_loop = timeit(lambda: _loop_enumeration(tasks, fleet), repeat=1)
             speedup = f"{us_loop / us_vec:.0f}x"
         else:
@@ -72,9 +158,12 @@ def bench_scheduler_scale() -> list[Row]:
             )
         )
 
+    rows.extend(bench_alg2_batched_vs_scalar(quick))
+    rows.extend(bench_hetero_fleet(quick))
+
     # streaming engine on an instance with |TSS| = 8^12 ≈ 6.9e10 (cannot
     # materialise): time-to-first-feasible in power order
-    big = _synth_tasks(12, 8, seed=1)
+    big = _synth_tasks(8 if quick else 12, 4 if quick else 8, seed=1)
     big_fleet = FleetSpec(n_f=16, t_slr=120.0, t_cfg=3.0)
 
     def first_feasible():
@@ -82,16 +171,40 @@ def bench_scheduler_scale() -> list[Row]:
 
     us = timeit(first_feasible, repeat=3)
     rows.append(
-        Row("alg1_branch_and_bound_tss6.9e10", us,
+        Row("alg1_branch_and_bound_streaming", us,
             "streams lowest-power TFS without materialising TSS")
     )
 
-    # end-to-end schedule at scale (streaming engine auto-selected)
+    # end-to-end schedule at scale (streaming engine, batched blocks)
     sched = PADPSFRScheduler(big_fleet, exhaustive=False)
     us = timeit(lambda: sched.schedule(big), repeat=3)
     res = sched.schedule(big)
     rows.append(
-        Row("padpsfr_schedule_12tasks_8variants", us,
+        Row(f"padpsfr_schedule_{len(big)}tasks_{big[0].nv}variants", us,
             f"feasible={res.feasible};power={res.total_power:.1f}")
     )
     return rows
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small |TSS| sizes for the CI smoke job")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a JSON benchmark artifact")
+    args = ap.parse_args(argv)
+    rows = bench_scheduler_scale(quick=args.quick)
+    for row in rows:
+        print(row.csv())
+    if args.json:
+        payload = [
+            {"name": r.name, "us": r.us, "derived": r.derived} for r in rows
+        ]
+        with open(args.json, "w") as fh:
+            json.dump({"benchmark": "scheduler_scale", "rows": payload}, fh, indent=2)
+        print(f"wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

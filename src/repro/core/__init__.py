@@ -2,15 +2,22 @@
 # scheduling of periodic hardware tasks on accelerator fleets (Algs 1-3),
 # plus the baselines and metrics it is evaluated against.
 
-from .task import FleetSpec, Task, TaskSetCombo, TaskVariant, combo_count
+from .task import DeviceProfile, FleetSpec, Task, TaskSetCombo, TaskVariant, combo_count
 from .feasibility import (
     FeasibilityResult,
+    config_overhead_lower_bound,
     iter_feasible_pruned,
     outer_sum,
     search_feasible,
 )
 from .placement import DataSplit, DeviceScript, PlacementPlan, Segment, place_combo, place_shares
-from .scheduler import PADPSFRScheduler, ScheduleResult, select_lowest_power
+from .placement_batched import BatchPlacement, place_batch, place_combos_batch
+from .scheduler import (
+    PADPSFRScheduler,
+    ScheduleResult,
+    select_lowest_power,
+    select_lowest_power_batched,
+)
 from .metrics import SweepPoint, avg_task_weight, sweep_fleet, system_workload, trr
 from .baselines import (
     GreedyResult,
@@ -23,12 +30,14 @@ from .baselines import (
 from .gantt import plan_rows, render_gantt
 
 __all__ = [
+    "DeviceProfile",
     "FleetSpec",
     "Task",
     "TaskSetCombo",
     "TaskVariant",
     "combo_count",
     "FeasibilityResult",
+    "config_overhead_lower_bound",
     "iter_feasible_pruned",
     "outer_sum",
     "search_feasible",
@@ -38,9 +47,13 @@ __all__ = [
     "Segment",
     "place_combo",
     "place_shares",
+    "BatchPlacement",
+    "place_batch",
+    "place_combos_batch",
     "PADPSFRScheduler",
     "ScheduleResult",
     "select_lowest_power",
+    "select_lowest_power_batched",
     "SweepPoint",
     "avg_task_weight",
     "sweep_fleet",

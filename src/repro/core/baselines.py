@@ -24,9 +24,9 @@ from typing import Sequence
 import numpy as np
 
 from .feasibility import search_feasible
-from .placement import PlacementPlan, place_combo
-from .scheduler import ScheduleResult, select_lowest_power
-from .task import FleetSpec, Task, TaskSetCombo, combo_count
+from .placement_batched import place_batch
+from .scheduler import ScheduleResult, _select_from_feasibility
+from .task import FleetSpec, Task
 
 __all__ = [
     "preemptive_dpfair_schedule",
@@ -53,8 +53,8 @@ def preemptive_dpfair_schedule(
     """
     tasks = tuple(tasks)
     feas = search_feasible(tasks, fleet)
-    combo, plan, rank, rejects = select_lowest_power(
-        feas.iter_tfs_by_power(),
+    combo, plan, rank, rejects = _select_from_feasibility(
+        feas,
         tasks,
         fleet,
         count_all_rejects=count_all_rejects,
@@ -83,15 +83,20 @@ def count_placeable(
     """(n_tss, n_eq7_accepted, n_placeable) under the given placement model.
 
     The Fig 8 comparison: ``n_placeable`` with fresh-II re-pay (ours) vs
-    with capture/store overhead (refs [9]/[10])."""
+    with capture/store overhead (refs [9]/[10]).  The whole TFS goes
+    through the batched placement engine in one sweep."""
     tasks = tuple(tasks)
     feas = search_feasible(tasks, fleet)
-    placed = 0
-    for idx in np.flatnonzero(feas.fit_mask):
-        combo = feas.combo_at(int(idx))
-        if place_combo(combo, tasks, fleet, **placement_kw).feasible:
-            placed += 1
-    return feas.n_combos, feas.n_tfs, placed
+    tfs = np.flatnonzero(feas.fit_mask)
+    if tfs.size == 0:
+        return feas.n_combos, 0, 0
+    bp = place_batch(
+        feas.shares_matrix(tfs),
+        [t.init_interval for t in tasks],
+        fleet,
+        **placement_kw,
+    )
+    return feas.n_combos, feas.n_tfs, bp.n_feasible
 
 
 @dataclasses.dataclass
@@ -141,8 +146,10 @@ def _greedy_assign(
     for k in order:
         k = int(k)
         avail, j = heapq.heappop(heap)
-        start = avail + fleet.t_cfg + tasks[k].init_interval
-        end = start + exec_t[k]
+        start = avail + fleet.t_cfg_of(j) + tasks[k].init_interval
+        # Heterogeneous capacity derating: a device with t_slr_j below the
+        # reference slice does the same work proportionally slower.
+        end = start + exec_t[k] * (fleet.t_slr / fleet.t_slr_of(j))
         assignment[j].append(k)
         finish[k] = end
         switches += 1

@@ -34,6 +34,7 @@ __all__ = [
     "search_feasible",
     "iter_feasible_pruned",
     "outer_sum",
+    "config_overhead_lower_bound",
 ]
 
 
@@ -68,6 +69,22 @@ class FeasibilityResult:
         powers = tuple(float(t.variants[j].power) for t, j in zip(self.tasks, idx))
         return TaskSetCombo(tuple(int(j) for j in idx), shares, powers)
 
+    def shares_matrix(self, flat_indices: np.ndarray) -> np.ndarray:
+        """Materialise a block of TSS rows as a ``(B, n_t)`` shares matrix.
+
+        The vectorised counterpart of :meth:`combo_at` — one fancy-indexed
+        gather per task instead of B Python round-trips; this is what feeds
+        the batched placement engine
+        (:func:`repro.core.placement_batched.place_batch`).
+        """
+        flat_indices = np.asarray(flat_indices, dtype=np.int64)
+        nvs = [t.nv for t in self.tasks]
+        idx = np.unravel_index(flat_indices, nvs)
+        cols = [
+            t.shares(self.fleet.t_slr)[ji] for t, ji in zip(self.tasks, idx)
+        ]
+        return np.stack(cols, axis=1)
+
     def tfs_indices_by_power(self) -> np.ndarray:
         """Flat indices of TFS rows, ascending total power (Alg 2 line 1).
 
@@ -96,11 +113,62 @@ def outer_sum(vectors: Sequence[np.ndarray]) -> np.ndarray:
     return acc
 
 
+def config_overhead_lower_bound(
+    fleet: FleetSpec, n_t: int, sum_shr: np.ndarray, extra_cfgs: int = 1
+) -> np.ndarray:
+    """Per-class refinement of the eq. 7 configuration charge, vectorised.
+
+    For a heterogeneous fleet the paper's flat ``(n_t + 1) * t_cfg`` charge
+    has no single ``t_cfg``.  The sound necessary-condition charge is a
+    *lower bound* on the total reconfiguration time any placement of a
+    combo with total share ``W = sum_shr`` must pay:
+
+    * a combo needs at least ``d(W)`` devices, where ``d(W)`` is the
+      smallest count of devices (taken largest-capacity-first) whose
+      ``t_slr_j`` sum covers ``W`` — and every used device pays at least
+      one of its own ``t_cfg_j`` (lower-bounded by the ``d(W)`` cheapest
+      cfgs in the fleet);
+    * there are at least ``max(n_t + extra_cfgs, d(W))`` configuration
+      events in total; events beyond the per-device minimum pay at least
+      the fleet-wide cheapest ``t_cfg``.
+
+    On a homogeneous fleet with ``d(W) <= n_t + extra_cfgs`` this reduces
+    exactly to the paper's ``(n_t + extra_cfgs) * t_cfg``.
+
+    Soundness: with ``extra_cfgs=0`` every placement really pays at least
+    this overhead (each task one cfg, each necessarily-used device one of
+    its own cfgs), so rejection is a strict necessary condition.  The
+    default ``extra_cfgs=1`` inherits the paper's one-split allowance —
+    like eq. 7 itself it can reject a combo that happens to place with no
+    split (the documented Example-1 deviation); it is the same charge the
+    homogeneous pre-filter applies, refined per device class.
+    """
+    sum_shr = np.asarray(sum_shr, dtype=np.float64)
+    m = n_t + extra_cfgs
+    cap_desc = np.sort(fleet.t_slr_arr)[::-1]
+    cfg_asc = np.sort(fleet.t_cfg_arr)
+    cfg_min = float(cfg_asc[0]) if cfg_asc.size else 0.0
+    # d(W): min devices whose (descending) capacities cover W.
+    cum_cap = np.cumsum(cap_desc)
+    d = np.searchsorted(cum_cap, sum_shr - 1e-9) + 1
+    d = np.minimum(d, fleet.n_f)
+    # Sum of the d cheapest per-device cfgs, one per necessarily-used device.
+    cum_cfg = np.concatenate([[0.0], np.cumsum(cfg_asc)])
+    per_device = cum_cfg[d]
+    extra_events = np.maximum(m - d, 0)
+    return per_device + extra_events * cfg_min
+
+
 def search_feasible(tasks: Sequence[Task], fleet: FleetSpec) -> FeasibilityResult:
     """Algorithm 1, vectorised. Materialises |TSS| f64 arrays (twice).
 
     Safe up to ~10^8 combinations on a 32 GB host; beyond that use
     ``iter_feasible_pruned``.
+
+    Heterogeneous fleets additionally apply the per-class configuration
+    charge of :func:`config_overhead_lower_bound` (eq. 7 generalises to
+    ``sum_shr <= sum_j t_slr_j - overhead_lb``); homogeneous fleets keep
+    the paper's flat charge so the published Example-1/3 counts hold.
     """
     tasks = tuple(tasks)
     validate_tasks(tasks)
@@ -117,6 +185,9 @@ def search_feasible(tasks: Sequence[Task], fleet: FleetSpec) -> FeasibilityResul
     total_power = outer_sum(power_vecs)
     budget = fleet.workable_budget(n_t)
     fit = sum_shr <= budget + 1e-9  # eq. 7 (tolerant <=)
+    if fleet.is_heterogeneous:
+        overhead = config_overhead_lower_bound(fleet, n_t, sum_shr)
+        fit &= sum_shr <= fleet.capacity - overhead + 1e-9
     return FeasibilityResult(
         tasks=tasks,
         fleet=fleet,
@@ -170,10 +241,22 @@ def iter_feasible_pruned(
         heapq.heappush(heap, (prio, counter, depth, chosen, ppow, pshr))
         counter += 1
 
+    hetero = fleet.is_heterogeneous
+    capacity = fleet.capacity
+
     push(0, (), 0.0, 0.0)
     while heap:
         _, _, depth, chosen, ppow, pshr = heapq.heappop(heap)
         if depth == n_t:
+            # Leaf filter: heterogeneous fleets apply the same per-class
+            # eq-7 refinement as search_feasible, so the streamed TFS is
+            # identical to the exhaustive fit_mask (same rejects/ranks).
+            if hetero:
+                overhead = config_overhead_lower_bound(
+                    fleet, n_t, np.asarray([pshr])
+                )[0]
+                if pshr > capacity - overhead + 1e-9:
+                    continue
             shr = tuple(float(shares[k][j]) for k, j in enumerate(chosen))
             pw = tuple(float(powers[k][j]) for k, j in enumerate(chosen))
             yield TaskSetCombo(chosen, shr, pw)

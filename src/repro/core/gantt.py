@@ -38,16 +38,32 @@ def render_gantt(
     *,
     width: int = 96,
 ) -> str:
-    """Fixed-width ASCII Gantt chart, one row per device."""
-    scale = width / fleet.t_slr
-    lines = [f"time slice t_slr={fleet.t_slr:g}, t_cfg={fleet.t_cfg:g}, n_f={fleet.n_f}"]
+    """Fixed-width ASCII Gantt chart, one row per device.
+
+    Heterogeneous fleets render each device's row to its own ``t_slr_j``
+    (shorter devices end early, annotated with their class)."""
+    scale = width / max(fleet.t_slr_of(j) for j in range(fleet.n_f))
+    if fleet.is_heterogeneous:
+        mix = ",".join(
+            f"F{j + 1}:{fleet.profile(j).klass}(t_slr={fleet.t_slr_of(j):g},"
+            f"t_cfg={fleet.t_cfg_of(j):g})"
+            for j in range(fleet.n_f)
+        )
+        lines = [f"heterogeneous fleet n_f={fleet.n_f}: {mix}"]
+    else:
+        lines = [
+            f"time slice t_slr={fleet.t_slr:g}, t_cfg={fleet.t_cfg:g}, n_f={fleet.n_f}"
+        ]
     for dev, row in enumerate(plan_rows(plan, tasks)):
         cells = []
         for label, s, e in row:
             w = max(1, int(round((e - s) * scale)))
             txt = label[: w - 1] if w > 1 else ""
             cells.append(f"|{txt:<{w - 1}}" if w > 1 else "|")
-        lines.append(f"F{dev + 1} " + "".join(cells) + "|")
+        tag = f"F{dev + 1}"
+        if fleet.is_heterogeneous:
+            tag += f"[{fleet.profile(dev).klass[0]}]"
+        lines.append(f"{tag} " + "".join(cells) + "|")
     if plan.splits:
         for sp in plan.splits:
             ratio = ":".join(f"{r:.3g}" for r in sp.ratio)

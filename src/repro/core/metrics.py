@@ -18,7 +18,7 @@ from typing import Sequence
 import numpy as np
 
 from .feasibility import outer_sum, search_feasible
-from .placement import place_combo
+from .placement_batched import place_batch
 from .task import FleetSpec, Task, combo_count
 
 __all__ = [
@@ -38,8 +38,8 @@ def trr(n_rejected: int, n_total: int) -> float:
 
 
 def system_workload(sum_shr: float, fleet: FleetSpec) -> float:
-    """Eq. 9, in percent."""
-    return 100.0 * sum_shr / (fleet.t_slr * fleet.n_f)
+    """Eq. 9, in percent (heterogeneous: against sum_j t_slr_j)."""
+    return 100.0 * sum_shr / fleet.capacity
 
 
 def avg_task_weight(exec_times: Sequence[float], periods: Sequence[float]) -> float:
@@ -80,26 +80,33 @@ def sweep_fleet(
     t_cfg_values: Sequence[float],
     *,
     with_placement: bool = True,
-    placement_limit: int = 200_000,
+    placement_limit: int = 5_000_000,
 ) -> list[SweepPoint]:
-    """Regenerate Figs 5-7: sweep n_f x t_cfg over the full TSS."""
+    """Regenerate Figs 5-7: sweep n_f x t_cfg over the full TSS.
+
+    Heterogeneous base fleets keep their device-class mix across the
+    sweep: ``n_f`` repeats the profile pattern round-robin and ``t_cfg``
+    rescales every device's cost proportionally (GPU/CPU ~0 stays ~0).
+    Placement counting runs the whole TFS through the batched engine, so
+    the former 200k-row practicality limit is now 5M.
+    """
     tasks = tuple(tasks)
     n = combo_count(tasks)
+    iis = [t.init_interval for t in tasks]
     points: list[SweepPoint] = []
     for t_cfg in t_cfg_values:
         for n_f in n_f_values:
-            fleet = FleetSpec(n_f=n_f, t_slr=base.t_slr, t_cfg=t_cfg)
+            fleet = base.with_devices(n_f).with_t_cfg(t_cfg)
             feas = search_feasible(tasks, fleet)
             acc7 = feas.fit_mask
             n_acc7 = int(acc7.sum())
             n_placed = n_acc7
-            if with_placement and n <= placement_limit:
-                n_placed = 0
-                for idx in np.flatnonzero(acc7):
-                    combo = feas.combo_at(int(idx))
-                    if place_combo(combo, tasks, fleet).feasible:
-                        n_placed += 1
-            workloads = 100.0 * feas.sum_shr / (fleet.t_slr * n_f)
+            if with_placement and n <= placement_limit and n_acc7:
+                bp = place_batch(
+                    feas.shares_matrix(np.flatnonzero(acc7)), iis, fleet
+                )
+                n_placed = bp.n_feasible
+            workloads = 100.0 * feas.sum_shr / fleet.capacity
             weights = _combo_avg_weights(tasks, fleet.t_slr)
             wl_thr = float(workloads[acc7].max()) if n_acc7 else 0.0
             wt_thr = float(weights[acc7].max()) if n_acc7 else 0.0

@@ -135,12 +135,16 @@ def place_shares(
     """Simulate the DP-wrap style placement of per-task shares on the fleet.
 
     Tasks are walked in order (the combo's task order is the paper's task
-    order); each device ``j`` is filled from capacity ``t_slr``; splitting
-    carries the remainder of the current task to device ``j+1``.
+    order); each device ``j`` is filled from its capacity ``t_slr_j`` and
+    charges its own ``t_cfg_j`` (heterogeneous fleets mix FPGA/GPU/CPU
+    profiles; the homogeneous case reduces to the paper's Alg 3 exactly);
+    splitting carries the remainder of the current task to device ``j+1``.
+
+    This is the *scalar reference oracle* — the vectorised block engine in
+    :mod:`repro.core.placement_batched` must agree with it bit-for-bit.
     """
     n_t = len(shares)
     assert len(init_intervals) == n_t
-    t_slr, t_cfg = fleet.t_slr, fleet.t_cfg
 
     scripts = [DeviceScript(device=j) for j in range(fleet.n_f)]
     splits: dict[int, list[tuple[int, float]]] = {}
@@ -151,6 +155,8 @@ def place_shares(
     for j in range(fleet.n_f):
         if k >= n_t:
             break
+        t_slr = fleet.t_slr_of(j)
+        t_cfg = fleet.t_cfg_of(j)
         c = t_slr
         t = 0.0  # wall position within this device's slice
         script = scripts[j]

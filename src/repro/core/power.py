@@ -20,7 +20,18 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["TPUSpec", "V5E", "PowerModel", "step_time_roofline"]
+__all__ = [
+    "TPUSpec",
+    "V5E",
+    "PowerModel",
+    "step_time_roofline",
+    "DeviceClass",
+    "DEVICE_CLASSES",
+    "FPGA_CLASS",
+    "GPU_CLASS",
+    "CPU_CLASS",
+    "TPU_CLASS",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +50,44 @@ V5E = TPUSpec(
     ici_bw=50e9,
     hbm_bytes=16e9,
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceClass:
+    """A fleet device class for heterogeneous scheduling (arXiv:2304.04488).
+
+    ``t_cfg_frac`` is the class's program-switch cost as a *fraction of
+    the fleet's reference slice* ``t_slr`` — unit-free, so the same class
+    table works for the paper's millisecond fleets and second-scale TPU
+    fleets alike.  FPGAs pay a full or partial bitstream
+    (re)configuration (the paper's Example 1 charges 6/60 = 0.1 of the
+    slice; Example 3's Alveo fleet 21/600 = 0.035), GPUs/CPUs only a
+    kernel/process launch (~0), TPU slices an executable load + weight
+    resharding (45 s against a 3600 s slice = 0.0125).
+    ``capacity_scale`` derates the device's effective slice capacity
+    relative to the fleet's reference ``t_slr`` (the "effective capacity"
+    axis of arXiv:1908.06519 — a CPU does the same share's work slower).
+    ``idle_w`` feeds fleet-level idle-power accounting.
+    """
+
+    name: str
+    t_cfg_frac: float
+    capacity_scale: float = 1.0
+    idle_w: float = 75.0
+
+    def __post_init__(self) -> None:
+        if self.t_cfg_frac < 0:
+            raise ValueError("t_cfg_frac must be >= 0")
+        if not (0 < self.capacity_scale <= 1.0):
+            raise ValueError("capacity_scale must be in (0, 1]")
+
+
+FPGA_CLASS = DeviceClass(name="fpga", t_cfg_frac=0.1, capacity_scale=1.0, idle_w=40.0)
+GPU_CLASS = DeviceClass(name="gpu", t_cfg_frac=0.001, capacity_scale=0.9, idle_w=90.0)
+CPU_CLASS = DeviceClass(name="cpu", t_cfg_frac=0.0, capacity_scale=0.35, idle_w=60.0)
+TPU_CLASS = DeviceClass(name="tpu", t_cfg_frac=0.0125, capacity_scale=1.0, idle_w=75.0)
+
+DEVICE_CLASSES = {c.name: c for c in (FPGA_CLASS, GPU_CLASS, CPU_CLASS, TPU_CLASS)}
 
 
 @dataclasses.dataclass(frozen=True)

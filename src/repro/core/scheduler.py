@@ -2,7 +2,11 @@
 
 ``select_lowest_power`` walks the power-sorted TFS and returns the first
 combination whose placement simulation succeeds — by construction the
-minimum-power feasible configuration (paper §III-A2).  The facade bundles
+minimum-power feasible configuration (paper §III-A2).  The default engine
+is *batched*: TFS rows are evaluated in vectorized blocks by
+:func:`repro.core.placement_batched.place_batch` (a handful of numpy
+sweeps instead of O(|TFS|) Python round-trips); the scalar walk remains
+as the reference oracle (``engine="scalar"``).  The facade bundles
 Alg 1 + Alg 2 + Alg 3 and reports the statistics the paper quotes
 (|TSS|, |TFS|, |TNFS|, placement rejects, chosen index).
 """
@@ -10,13 +14,22 @@ Alg 1 + Alg 2 + Alg 3 and reports the statistics the paper quotes
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Iterable, Iterator, Sequence
 
 from .feasibility import FeasibilityResult, iter_feasible_pruned, search_feasible
 from .placement import PlacementPlan, place_combo
+from .placement_batched import place_batch
 from .task import FleetSpec, Task, TaskSetCombo, combo_count
 
-__all__ = ["ScheduleResult", "select_lowest_power", "PADPSFRScheduler"]
+__all__ = [
+    "ScheduleResult",
+    "select_lowest_power",
+    "select_lowest_power_batched",
+    "PADPSFRScheduler",
+]
+
+DEFAULT_BLOCK_SIZE = 4096
 
 
 @dataclasses.dataclass
@@ -77,6 +90,119 @@ def select_lowest_power(
     return winner[0], winner[1], winner[2], rejects
 
 
+def select_lowest_power_batched(
+    combos_by_power: Iterable[TaskSetCombo],
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    *,
+    count_all_rejects: bool = False,
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    **placement_kw,
+) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
+    """Alg 2 over vectorized TFS blocks — same contract as
+    :func:`select_lowest_power`.
+
+    Blocks of ``block_size`` power-sorted rows go through
+    :func:`repro.core.placement_batched.place_batch` at once; the first
+    feasible row wins and its full per-device plan comes from the scalar
+    oracle (bit-identical by construction, asserted in tests).
+    """
+
+    def blocks():
+        stream = iter(combos_by_power)
+        while True:
+            block = list(itertools.islice(stream, block_size))
+            if not block:
+                return
+            yield [c.shares for c in block], block
+
+    return _walk_tfs_blocks(
+        blocks(),
+        lambda block, r: block[r],
+        tasks,
+        fleet,
+        count_all_rejects=count_all_rejects,
+        **placement_kw,
+    )
+
+
+def _walk_tfs_blocks(
+    block_iter,
+    materialize,
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    *,
+    count_all_rejects: bool,
+    **placement_kw,
+) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
+    """Shared Alg-2 walk over batched TFS blocks.
+
+    ``block_iter`` yields ``(shares_rows, ref)`` pairs (a (B, n_t)
+    array-like plus an opaque block reference); ``materialize(ref, row)``
+    produces the winning row's :class:`TaskSetCombo`.  Winner/rank/reject
+    bookkeeping lives only here so the streaming and exhaustive engines
+    cannot drift apart.
+    """
+    iis = [t.init_interval for t in tasks]
+    rejects = 0
+    winner: tuple[TaskSetCombo, PlacementPlan, int] | None = None
+    rank_base = 0
+    for shares, ref in block_iter:
+        bp = place_batch(shares, iis, fleet, **placement_kw)
+        n_rows = bp.feasible.shape[0]
+        if winner is None:
+            r = bp.first_feasible()
+            if r >= 0:
+                combo = materialize(ref, r)
+                plan = place_combo(combo, tasks, fleet, **placement_kw)
+                winner = (combo, plan, rank_base + r)
+                rejects += r  # rows before the first feasible are all rejects
+                if not count_all_rejects:
+                    break
+                rejects += int((~bp.feasible[r:]).sum())
+            else:
+                rejects += n_rows
+        else:
+            rejects += int((~bp.feasible).sum())
+        rank_base += n_rows
+    if winner is None:
+        return None, None, -1, rejects
+    return winner[0], winner[1], winner[2], rejects
+
+
+def _select_from_feasibility(
+    feas: FeasibilityResult,
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    *,
+    count_all_rejects: bool = False,
+    block_size: int = DEFAULT_BLOCK_SIZE,
+    **placement_kw,
+) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
+    """Fast exhaustive path: batched sweeps over flat TFS indices.
+
+    Avoids materialising per-row :class:`TaskSetCombo` objects entirely —
+    each block is one fancy-indexed shares-matrix gather
+    (:meth:`FeasibilityResult.shares_matrix`) plus one
+    :func:`place_batch` call.
+    """
+    order = feas.tfs_indices_by_power()
+
+    def blocks():
+        for lo in range(0, order.size, block_size):
+            idx = order[lo : lo + block_size]
+            yield feas.shares_matrix(idx), idx
+
+    return _walk_tfs_blocks(
+        blocks(),
+        lambda idx, r: feas.combo_at(int(idx[r])),
+        tasks,
+        fleet,
+        count_all_rejects=count_all_rejects,
+        **placement_kw,
+    )
+
+
 class PADPSFRScheduler:
     """Power-Aware DP-fair Scheduling with Full Reconfiguration.
 
@@ -93,10 +219,16 @@ class PADPSFRScheduler:
         *,
         exhaustive: bool | None = None,
         exhaustive_limit: int = 2_000_000,
+        engine: str = "batched",
+        block_size: int = DEFAULT_BLOCK_SIZE,
     ) -> None:
+        if engine not in ("batched", "scalar"):
+            raise ValueError(f"engine must be 'batched' or 'scalar', got {engine!r}")
         self.fleet = fleet
         self.exhaustive = exhaustive
         self.exhaustive_limit = exhaustive_limit
+        self.engine = engine
+        self.block_size = block_size
 
     def feasibility(self, tasks: Sequence[Task]) -> FeasibilityResult:
         return search_feasible(tasks, self.fleet)
@@ -124,13 +256,32 @@ class PADPSFRScheduler:
     ) -> ScheduleResult:
         tasks = tuple(tasks)
         stream, feas = self._combo_stream(tasks)
-        combo, plan, rank, rejects = select_lowest_power(
-            stream,
-            tasks,
-            self.fleet,
-            count_all_rejects=count_all_rejects,
-            **placement_kw,
-        )
+        if self.engine == "batched" and feas is not None:
+            combo, plan, rank, rejects = _select_from_feasibility(
+                feas,
+                tasks,
+                self.fleet,
+                count_all_rejects=count_all_rejects,
+                block_size=self.block_size,
+                **placement_kw,
+            )
+        elif self.engine == "batched":
+            combo, plan, rank, rejects = select_lowest_power_batched(
+                stream,
+                tasks,
+                self.fleet,
+                count_all_rejects=count_all_rejects,
+                block_size=self.block_size,
+                **placement_kw,
+            )
+        else:
+            combo, plan, rank, rejects = select_lowest_power(
+                stream,
+                tasks,
+                self.fleet,
+                count_all_rejects=count_all_rejects,
+                **placement_kw,
+            )
         n_tss = combo_count(tasks)
         n_tfs = feas.n_tfs if feas is not None else -1
         n_tnfs = feas.n_tnfs if feas is not None else -1

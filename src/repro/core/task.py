@@ -20,6 +20,7 @@ import numpy as np
 __all__ = [
     "TaskVariant",
     "Task",
+    "DeviceProfile",
     "FleetSpec",
     "TaskSetCombo",
     "validate_tasks",
@@ -91,9 +92,37 @@ class Task:
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """One fleet device: its slice capacity, reconfiguration overhead and
+    hardware class.
+
+    The source paper assumes a homogeneous FPGA fleet; real data-center
+    fleets mix FPGAs (large ``t_cfg`` — full/partial bitstream load),
+    GPUs and CPUs (``t_cfg`` ~ 0 — a kernel/program launch), and devices
+    of differing effective capacity (arXiv:1908.06519, arXiv:2304.04488).
+    """
+
+    t_slr: float
+    t_cfg: float
+    klass: str = "fpga"
+
+    def __post_init__(self) -> None:
+        if self.t_slr <= 0:
+            raise ValueError("device t_slr must be > 0")
+        if self.t_cfg < 0:
+            raise ValueError("device t_cfg must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetSpec:
-    """The schedulable fleet: ``n_f`` devices, time slice ``t_slr``,
-    reconfiguration overhead ``t_cfg`` (paper §II).
+    """The schedulable fleet (paper §II, generalised to heterogeneity).
+
+    Homogeneous form (the paper's): ``n_f`` devices, time slice ``t_slr``,
+    reconfiguration overhead ``t_cfg``.  Heterogeneous form: per-device
+    :class:`DeviceProfile` tuples built with :meth:`heterogeneous`; the
+    scalar ``t_slr`` then serves as the *reference* slice used by eq. 5
+    shares (``shr_ij = e_ij / p_i * t_slr``) while each device ``j``
+    contributes its own capacity ``t_slr_j`` and pays its own ``t_cfg_j``.
 
     On the TPU adaptation a *device* is a pod slice and ``t_cfg`` is the
     program-switch cost (executable load + weight resharding).
@@ -103,6 +132,7 @@ class FleetSpec:
     t_slr: float
     t_cfg: float
     name: str = "fleet"
+    devices: tuple[DeviceProfile, ...] = ()
 
     def __post_init__(self) -> None:
         if self.n_f < 1:
@@ -111,10 +141,70 @@ class FleetSpec:
             raise ValueError("t_slr must be > 0")
         if self.t_cfg < 0:
             raise ValueError("t_cfg must be >= 0")
+        if self.devices and len(self.devices) != self.n_f:
+            raise ValueError(
+                f"devices has {len(self.devices)} profiles but n_f={self.n_f}"
+            )
+
+    @classmethod
+    def heterogeneous(
+        cls, devices: Sequence[DeviceProfile], *, name: str = "hetero-fleet"
+    ) -> "FleetSpec":
+        """Fleet from per-device profiles; reference t_slr is the maximum
+        device slice (shares are defined against the largest device)."""
+        devices = tuple(devices)
+        if not devices:
+            raise ValueError("at least one device profile required")
+        return cls(
+            n_f=len(devices),
+            t_slr=max(d.t_slr for d in devices),
+            t_cfg=max(d.t_cfg for d in devices),
+            name=name,
+            devices=devices,
+        )
+
+    @property
+    def is_heterogeneous(self) -> bool:
+        return bool(self.devices)
+
+    def profile(self, j: int) -> DeviceProfile:
+        if self.devices:
+            return self.devices[j]
+        return DeviceProfile(t_slr=self.t_slr, t_cfg=self.t_cfg)
+
+    def t_slr_of(self, j: int) -> float:
+        return self.devices[j].t_slr if self.devices else self.t_slr
+
+    def t_cfg_of(self, j: int) -> float:
+        return self.devices[j].t_cfg if self.devices else self.t_cfg
+
+    @property
+    def t_slr_arr(self) -> np.ndarray:
+        """Per-device capacities ``t_slr_j`` as an (n_f,) float64 array."""
+        if self.devices:
+            return np.asarray([d.t_slr for d in self.devices], dtype=np.float64)
+        return np.full(self.n_f, self.t_slr, dtype=np.float64)
+
+    @property
+    def t_cfg_arr(self) -> np.ndarray:
+        """Per-device reconfiguration costs ``t_cfg_j`` as (n_f,) float64."""
+        if self.devices:
+            return np.asarray([d.t_cfg for d in self.devices], dtype=np.float64)
+        return np.full(self.n_f, self.t_cfg, dtype=np.float64)
+
+    @property
+    def t_cfg_min(self) -> float:
+        return min(d.t_cfg for d in self.devices) if self.devices else self.t_cfg
+
+    @property
+    def t_cfg_max(self) -> float:
+        return max(d.t_cfg for d in self.devices) if self.devices else self.t_cfg
 
     @property
     def capacity(self) -> float:
-        """Total HPC capacity per slice: t_slr * n_f (eq. 6 RHS)."""
+        """Total HPC capacity per slice: sum_j t_slr_j (eq. 6 RHS)."""
+        if self.devices:
+            return float(sum(d.t_slr for d in self.devices))
         return self.t_slr * self.n_f
 
     def workable_budget(self, n_t: int, extra_cfgs: int = 1) -> float:
@@ -127,11 +217,39 @@ class FleetSpec:
         configurations for 6 tasks).  We default to the implemented
         condition (``extra_cfgs=1``) and expose the knob; the discrepancy
         is documented in EXPERIMENTS.md.
+
+        Heterogeneous fleets charge the *minimum* per-device ``t_cfg`` —
+        the loosest reading of eq. 7, so the heterogeneous pre-filter
+        rejects no combo the paper's homogeneous charge would keep (a
+        combo Alg 2 could still place on the cheap-cfg devices must not
+        be pre-rejected); the tighter per-class refinement lives in
+        :func:`repro.core.feasibility.config_overhead_lower_bound`.
         """
-        return self.n_f * self.t_slr - (n_t + extra_cfgs) * self.t_cfg
+        return self.capacity - (n_t + extra_cfgs) * self.t_cfg_min
 
     def with_devices(self, n_f: int) -> "FleetSpec":
-        return dataclasses.replace(self, n_f=n_f)
+        """Resize the fleet.  Heterogeneous fleets repeat their device
+        pattern round-robin (the sweep semantics of Figs 5-7)."""
+        if not self.devices:
+            return dataclasses.replace(self, n_f=n_f)
+        profiles = tuple(self.devices[j % len(self.devices)] for j in range(n_f))
+        return dataclasses.replace(self, n_f=n_f, devices=profiles)
+
+    def with_t_cfg(self, t_cfg: float) -> "FleetSpec":
+        """Rescale reconfiguration cost (the Fig 5-7 t_cfg sweeps).
+        Heterogeneous device cfgs scale proportionally to preserve the
+        class mix (a GPU's ~0 cfg stays ~0).  A heterogeneous fleet whose
+        devices all reconfigure for free has nothing to rescale and is
+        returned unchanged."""
+        if not self.devices:
+            return dataclasses.replace(self, t_cfg=t_cfg)
+        if self.t_cfg == 0:
+            return self
+        scale = t_cfg / self.t_cfg
+        profiles = tuple(
+            dataclasses.replace(d, t_cfg=d.t_cfg * scale) for d in self.devices
+        )
+        return dataclasses.replace(self, t_cfg=t_cfg, devices=profiles)
 
 
 @dataclasses.dataclass(frozen=True)

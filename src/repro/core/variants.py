@@ -26,10 +26,16 @@ import math
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import InputShape
 
-from .power import V5E, PowerModel, TPUSpec, step_time_roofline
-from .task import Task, TaskVariant
+from .power import DEVICE_CLASSES, V5E, DeviceClass, PowerModel, TPUSpec, step_time_roofline
+from .task import DeviceProfile, FleetSpec, Task, TaskVariant
 
-__all__ = ["JobSpec", "job_costs", "make_task", "variant_table"]
+__all__ = [
+    "JobSpec",
+    "job_costs",
+    "make_task",
+    "variant_table",
+    "make_hetero_fleet",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +134,44 @@ def variant_table(
         pw = power.job_power(n, t_step, costs["flops"], costs["hbm"], costs["coll"])
         out.append(TaskVariant(cu=n, throughput=th, power=pw, program=f"{job.job_name}@{n}"))
     return out
+
+
+def make_hetero_fleet(
+    class_counts: dict[str, int] | list[tuple[DeviceClass | str, int]],
+    t_slr: float,
+    *,
+    name: str = "hetero-fleet",
+) -> FleetSpec:
+    """Build a mixed FPGA/GPU/CPU/TPU fleet from device-class counts.
+
+    Each class contributes ``count`` devices with capacity
+    ``t_slr * capacity_scale`` and reconfiguration cost
+    ``t_slr * t_cfg_frac`` (:data:`repro.core.power.DEVICE_CLASSES`) —
+    both derived from the reference slice, so the class table is
+    unit-free (an FPGA costs 0.1 of the slice whether ``t_slr`` is the
+    paper's 60 ms or a TPU fleet's 3600 s).  ``t_slr`` is the fleet's
+    reference slice — eq. 5 shares are defined against it, per-device
+    capacities derate from it.
+
+        make_hetero_fleet({"fpga": 4, "gpu": 2, "cpu": 8}, t_slr=3600.0)
+    """
+    items = class_counts.items() if isinstance(class_counts, dict) else class_counts
+    profiles: list[DeviceProfile] = []
+    for klass, count in items:
+        dc = DEVICE_CLASSES[klass] if isinstance(klass, str) else klass
+        if count < 0:
+            raise ValueError(f"{dc.name}: count must be >= 0")
+        profiles.extend(
+            DeviceProfile(
+                t_slr=t_slr * dc.capacity_scale,
+                t_cfg=t_slr * dc.t_cfg_frac,
+                klass=dc.name,
+            )
+            for _ in range(count)
+        )
+    if not profiles:
+        raise ValueError("fleet needs at least one device")
+    return FleetSpec.heterogeneous(tuple(profiles), name=name)
 
 
 def make_task(

@@ -4,9 +4,12 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
+    DeviceProfile,
     FleetSpec,
     PADPSFRScheduler,
     Task,
@@ -14,6 +17,8 @@ from repro.core import (
     combo_count,
     iter_feasible_pruned,
     outer_sum,
+    place_batch,
+    place_combo,
     place_shares,
     search_feasible,
 )
@@ -175,6 +180,46 @@ def test_scheduler_returns_minimum_power_placeable(tasks, fleet):
             placeable_powers.append(combo.total_power)
     assert placeable_powers
     assert res.total_power == pytest.approx(min(placeable_powers))
+
+
+hetero_fleets = st.builds(
+    lambda profiles: FleetSpec.heterogeneous(tuple(profiles)),
+    st.lists(
+        st.builds(
+            DeviceProfile,
+            t_slr=st.floats(20.0, 200.0),
+            t_cfg=st.floats(0.0, 10.0),
+            klass=st.sampled_from(["fpga", "gpu", "cpu"]),
+        ),
+        min_size=1,
+        max_size=5,
+    ),
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(tasks=tasks_strategy(max_tasks=4), fleet=st.one_of(fleets, hetero_fleets))
+def test_batched_engine_matches_scalar_oracle(tasks, fleet):
+    """Batched block placement == per-row scalar oracle: feasibility,
+    split count, chosen rank and winner — on homogeneous AND
+    heterogeneous fleets."""
+    feas = search_feasible(tasks, fleet)
+    order = feas.tfs_indices_by_power()
+    if order.size:
+        iis = [t.init_interval for t in tasks]
+        bp = place_batch(feas.shares_matrix(order), iis, fleet)
+        for i, fi in enumerate(order):
+            plan = place_combo(feas.combo_at(int(fi)), tasks, fleet)
+            assert plan.feasible == bool(bp.feasible[i])
+            if plan.feasible:
+                assert plan.n_splits == int(bp.n_splits[i])
+    rb = PADPSFRScheduler(fleet, engine="batched").schedule(tasks)
+    rs = PADPSFRScheduler(fleet, engine="scalar").schedule(tasks)
+    assert rb.feasible == rs.feasible
+    assert rb.chosen_rank == rs.chosen_rank
+    assert rb.total_power == rs.total_power
+    if rb.feasible:
+        assert rb.combo == rs.combo
 
 
 @settings(max_examples=40, deadline=None)
