@@ -7,12 +7,19 @@
 * heterogeneous-fleet scheduling (mixed FPGA/GPU/CPU device classes)
   at growing fleet sizes;
 * branch-and-bound streaming search (no TSS materialisation) on
-  instances where the exhaustive product would not fit in memory.
+  instances where the exhaustive product would not fit in memory;
+* placement-backend sweep (numpy vs jax vs pallas block engines) at
+  growing |TFS| block sizes, reporting per-backend rows/s and the
+  numpy<->jax crossover point into the BENCH JSON.
 
 CLI (the CI benchmark-smoke job):
 
     PYTHONPATH=src python -m benchmarks.scheduler_scale --quick \
         --json BENCH_scheduler_scale.json
+
+    # backend sweep only, explicit engines:
+    PYTHONPATH=src python -m benchmarks.scheduler_scale --quick \
+        --backends numpy,jax --json BENCH_scheduler_scale.json
 """
 
 from __future__ import annotations
@@ -29,6 +36,8 @@ from repro.core import (
     PADPSFRScheduler,
     Task,
     TaskVariant,
+    available_backends,
+    get_backend,
     place_batch,
     place_combo,
     search_feasible,
@@ -38,7 +47,7 @@ from repro.core.variants import make_hetero_fleet
 
 from .util import Row, timeit
 
-__all__ = ["bench_scheduler_scale", "main"]
+__all__ = ["bench_scheduler_scale", "bench_backend_sweep", "main"]
 
 
 def _synth_tasks(n_t: int, nv: int, seed: int = 0) -> list[Task]:
@@ -111,6 +120,71 @@ def bench_alg2_batched_vs_scalar(quick: bool = False) -> list[Row]:
             )
         )
     return rows
+
+
+def bench_backend_sweep(
+    quick: bool = False, backends: list[str] | None = None
+) -> tuple[list[Row], dict]:
+    """Per-backend block-placement throughput at growing |TFS| block sizes.
+
+    One synthetic (B, n_t) shares block per size (mixed feasible /
+    infeasible rows around the fleet's capacity), handed whole to each
+    backend's ``place_block``.  Returns CSV rows plus a JSON-able summary
+    with per-backend rows/s and the numpy<->jax crossover block size (the
+    smallest B where the jit'd jax sweep beats the numpy loop — below it
+    the numpy engine's lower fixed overhead wins).
+    """
+    n_t, n_f = 8, 8
+    fleet = FleetSpec(n_f=n_f, t_slr=80.0, t_cfg=4.0)
+    rng = np.random.default_rng(3)
+    iis = rng.uniform(1.0, 5.0, n_t)
+    sizes = [1_000, 10_000, 100_000] if quick else [1_000, 10_000, 100_000, 1_000_000]
+    if backends is None:
+        # scalar is O(B) Python round-trips — pointless past a few 1e3 rows.
+        backends = [b for b in available_backends() if b != "scalar"]
+    rows: list[Row] = []
+    us: dict[str, dict[int, float]] = {b: {} for b in backends}
+    for B in sizes:
+        base = rng.uniform(0.5, 1.5, (B, n_t))
+        scale = rng.uniform(0.4, 1.3, (B, 1)) * fleet.capacity / n_t
+        shares = base * scale
+        for name in backends:
+            backend = get_backend(name)
+
+            def run():
+                return backend.place_block(
+                    shares, iis, fleet.t_slr_arr, fleet.t_cfg_arr
+                )
+
+            n_feasible = run().n_feasible  # warms jit/pallas caches too
+            t_us = timeit(run, repeat=3)
+            us[name][B] = t_us
+            rows.append(
+                Row(
+                    f"backend_{name}_rows{B}",
+                    t_us,
+                    f"rows_per_s={B / t_us * 1e6:.0f};feasible={n_feasible}",
+                )
+            )
+    crossover = None
+    if "numpy" in us and "jax" in us:
+        for B in sizes:
+            if us["jax"][B] < us["numpy"][B]:
+                crossover = B
+                break
+    sweep = {
+        "n_t": n_t,
+        "n_f": n_f,
+        "sizes": sizes,
+        "us": {b: {str(B): v for B, v in d.items()} for b, d in us.items()},
+        "rows_per_s": {
+            b: {str(B): B / v * 1e6 for B, v in d.items()} for b, d in us.items()
+        },
+        # Smallest block size where the jax sweep overtakes the numpy loop
+        # (None: jax never won, or one of the two engines was not swept).
+        "numpy_jax_crossover_rows": crossover,
+    }
+    return rows, sweep
 
 
 def bench_hetero_fleet(quick: bool = False) -> list[Row]:
@@ -192,8 +266,20 @@ def main(argv: list[str] | None = None) -> int:
                     help="small |TSS| sizes for the CI smoke job")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as a JSON benchmark artifact")
+    ap.add_argument("--backends", metavar="CSV", default=None,
+                    help="comma-separated placement backends for the sweep "
+                         "(default: every available backend except scalar)")
+    ap.add_argument("--sweep-only", action="store_true",
+                    help="run only the placement-backend sweep")
     args = ap.parse_args(argv)
-    rows = bench_scheduler_scale(quick=args.quick)
+    backends = (
+        [b.strip() for b in args.backends.split(",") if b.strip()]
+        if args.backends
+        else None
+    )
+    rows = [] if args.sweep_only else bench_scheduler_scale(quick=args.quick)
+    sweep_rows, sweep = bench_backend_sweep(quick=args.quick, backends=backends)
+    rows.extend(sweep_rows)
     for row in rows:
         print(row.csv())
     if args.json:
@@ -201,7 +287,15 @@ def main(argv: list[str] | None = None) -> int:
             {"name": r.name, "us": r.us, "derived": r.derived} for r in rows
         ]
         with open(args.json, "w") as fh:
-            json.dump({"benchmark": "scheduler_scale", "rows": payload}, fh, indent=2)
+            json.dump(
+                {
+                    "benchmark": "scheduler_scale",
+                    "rows": payload,
+                    "backend_sweep": sweep,
+                },
+                fh,
+                indent=2,
+            )
         print(f"wrote {args.json}", file=sys.stderr)
     return 0
 

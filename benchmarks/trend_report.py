@@ -1,0 +1,141 @@
+"""Benchmark trajectory: diff two or more ``BENCH_*.json`` artifacts.
+
+CI's bench-smoke job uploads ``BENCH_scheduler_scale.json`` per run; this
+tool turns a handful of those artifacts (downloaded from successive runs,
+oldest first) into a throughput-trend table:
+
+    PYTHONPATH=src python -m benchmarks.trend_report \
+        run1/BENCH_scheduler_scale.json run2/BENCH_scheduler_scale.json
+
+Per benchmark row it prints the us-per-call in every file and the percent
+change from the first to the last (negative = got faster); the placement
+backend sweep additionally gets a rows/s trend per (backend, block size).
+``--json`` writes the same diff machine-readably for dashboards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as fh:
+        data = json.load(fh)
+    if "rows" not in data:
+        raise ValueError(f"{path}: not a BENCH artifact (no 'rows' key)")
+    return data
+
+
+def _row_us(data: dict) -> dict[str, float]:
+    return {r["name"]: float(r["us"]) for r in data["rows"]}
+
+
+def _delta_pct(first: float, last: float) -> float:
+    return (last - first) / first * 100.0
+
+
+def trend(datas: list[dict], labels: list[str]) -> dict:
+    """Build the trend structure: per-row us series + backend rows/s series."""
+    per_file = [_row_us(d) for d in datas]
+    names: list[str] = []
+    for us in per_file:  # first-seen order, stable across files
+        for name in us:
+            if name not in names:
+                names.append(name)
+    rows = {}
+    for name in names:
+        series = [us.get(name) for us in per_file]
+        present = [v for v in series if v is not None]
+        rows[name] = {
+            "us": series,
+            "delta_pct": _delta_pct(present[0], present[-1])
+            if len(present) >= 2
+            else None,
+        }
+    sweep_series: dict[str, dict[str, list[float | None]]] = {}
+    for d in datas:
+        sweep = d.get("backend_sweep") or {}
+        for backend, by_size in (sweep.get("rows_per_s") or {}).items():
+            for size, rps in by_size.items():
+                sweep_series.setdefault(backend, {}).setdefault(size, [])
+    for d in datas:
+        sweep = d.get("backend_sweep") or {}
+        rps_map = sweep.get("rows_per_s") or {}
+        for backend, by_size in sweep_series.items():
+            for size in by_size:
+                by_size[size].append((rps_map.get(backend) or {}).get(size))
+    crossovers = [
+        (d.get("backend_sweep") or {}).get("numpy_jax_crossover_rows")
+        for d in datas
+    ]
+    return {
+        "files": labels,
+        "rows": rows,
+        "backend_rows_per_s": sweep_series,
+        "numpy_jax_crossover_rows": crossovers,
+    }
+
+
+def _fmt(v: float | None, unit: str = "") -> str:
+    if v is None:
+        return "-"
+    return f"{v:,.1f}{unit}"
+
+
+def render(t: dict) -> str:
+    out = []
+    labels = t["files"]
+    width = max([len(n) for n in t["rows"]] + [24])
+    header = f"{'benchmark':<{width}} " + " ".join(f"{lb:>14}" for lb in labels)
+    out.append(header + f" {'Δ%':>8}")
+    out.append("-" * len(header + "         "))
+    for name, row in t["rows"].items():
+        cells = " ".join(f"{_fmt(v):>14}" for v in row["us"])
+        d = row["delta_pct"]
+        out.append(
+            f"{name:<{width}} {cells} {_fmt(d, '%') if d is not None else '-':>8}"
+        )
+    if t["backend_rows_per_s"]:
+        out.append("")
+        out.append("placement-backend throughput (rows/s):")
+        for backend, by_size in sorted(t["backend_rows_per_s"].items()):
+            for size, series in sorted(by_size.items(), key=lambda kv: int(kv[0])):
+                cells = " ".join(f"{_fmt(v):>14}" for v in series)
+                present = [v for v in series if v is not None]
+                d = (
+                    _fmt(_delta_pct(present[0], present[-1]), "%")
+                    if len(present) >= 2
+                    else "-"
+                )
+                out.append(
+                    f"{backend + ' @ ' + size + ' rows':<{width}} {cells} {d:>8}"
+                )
+        xs = [x for x in t["numpy_jax_crossover_rows"] if x is not None]
+        if xs:
+            out.append(f"numpy<->jax crossover (rows): {t['numpy_jax_crossover_rows']}")
+    return "\n".join(out)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="+", metavar="BENCH_JSON",
+                    help="two or more BENCH_*.json artifacts, oldest first")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the diff as JSON")
+    args = ap.parse_args(argv)
+    if len(args.files) < 2:
+        ap.error("need at least two BENCH_*.json files to diff")
+    datas = [_load(p) for p in args.files]
+    t = trend(datas, args.files)
+    print(render(t))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(t, fh, indent=2)
+        print(f"wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,14 +10,21 @@ kernel launch, a CPU nothing — and effective capacities differ
   * a mixed fleet of equal device count,
 
 and shows how the near-zero t_cfg of the GPU/CPU devices changes which
-variant combination wins and where the DP-wrap split lands.  Everything
-runs through the batched placement engine (the default).
+variant combination wins and where the DP-wrap split lands.  The Alg-2
+block placement runs through the pluggable backend registry
+(``engine="auto"`` here: the jit'd jax sweep when jax is installed, the
+zero-dependency numpy engine otherwise — every backend is bit-identical).
 
 Run:  PYTHONPATH=src python examples/hetero_fleet.py
 """
 
 from repro.configs.paper_examples import example1_tasks
-from repro.core import FleetSpec, PADPSFRScheduler, render_gantt
+from repro.core import (
+    FleetSpec,
+    PADPSFRScheduler,
+    available_backends,
+    render_gantt,
+)
 from repro.core.variants import make_hetero_fleet
 
 
@@ -29,11 +36,15 @@ def main() -> int:
         {"fpga": 2, "gpu": 1, "cpu": 1}, t_slr=60.0, name="fpga+gpu+cpu"
     )
 
+    print(f"placement backends available here: {', '.join(available_backends())}")
+    print()
     for fleet in (fpga_fleet, mixed_fleet):
+        sched = PADPSFRScheduler(fleet, engine="auto")
         print(f"=== {fleet.name} "
               f"(capacity={fleet.capacity:g}, t_cfg range "
-              f"[{fleet.t_cfg_min:g}, {fleet.t_cfg_max:g}]) ===")
-        result = PADPSFRScheduler(fleet).schedule(tasks, count_all_rejects=True)
+              f"[{fleet.t_cfg_min:g}, {fleet.t_cfg_max:g}]; "
+              f"engine={sched.engine}) ===")
+        result = sched.schedule(tasks, count_all_rejects=True)
         print(result.summary(tasks))
         if result.feasible:
             print(render_gantt(result.plan, tasks, fleet))

@@ -11,6 +11,15 @@ from .feasibility import (
     search_feasible,
 )
 from .placement import DataSplit, DeviceScript, PlacementPlan, Segment, place_combo, place_shares
+from .placement_backends import (
+    PlacementBackend,
+    PlacementOptions,
+    available_backends,
+    backend_names,
+    get_backend,
+    register_backend,
+    resolve_engine,
+)
 from .placement_batched import BatchPlacement, place_batch, place_combos_batch
 from .scheduler import (
     PADPSFRScheduler,
@@ -48,6 +57,13 @@ __all__ = [
     "place_combo",
     "place_shares",
     "BatchPlacement",
+    "PlacementBackend",
+    "PlacementOptions",
+    "available_backends",
+    "backend_names",
+    "get_backend",
+    "register_backend",
+    "resolve_engine",
     "place_batch",
     "place_combos_batch",
     "PADPSFRScheduler",

@@ -1,0 +1,45 @@
+"""Pluggable Alg-2 block-placement backends.
+
+The scheduler's hot path — *is this TFS row placeable?* for a whole block
+of power-sorted rows — dispatches through a registry of interchangeable
+engines (see :mod:`.base` for the contract and how to register new ones):
+
+* ``"scalar"`` — the exact Alg-2/Alg-3 oracle, one row at a time;
+* ``"numpy"``  — vectorized (B,) state advance, zero-dependency default
+  (alias: ``"batched"``, the pre-refactor name);
+* ``"jax"``    — jit'd ``lax.while_loop`` sweep, float64 via scoped
+  ``enable_x64`` (lazy: registered on first lookup);
+* ``"pallas"`` — the fused Pallas kernel
+  (:mod:`repro.kernels.placement_step`), blocks tiled through VMEM
+  (lazy; interpret mode off-TPU);
+* ``"auto"``   — best available of the above.
+"""
+
+from .base import (
+    BatchPlacement,
+    PlacementBackend,
+    PlacementOptions,
+    available_backends,
+    backend_names,
+    get_backend,
+    prepare_block,
+    register_backend,
+    resolve_engine,
+)
+
+# Importing the zero-dependency backends registers them; jax/pallas are
+# registered lazily by the registry (see base._LAZY_BACKENDS).
+from . import numpy_backend as _numpy_backend  # noqa: F401
+from . import scalar_backend as _scalar_backend  # noqa: F401
+
+__all__ = [
+    "BatchPlacement",
+    "PlacementBackend",
+    "PlacementOptions",
+    "available_backends",
+    "backend_names",
+    "get_backend",
+    "prepare_block",
+    "register_backend",
+    "resolve_engine",
+]

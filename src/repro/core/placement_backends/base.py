@@ -1,0 +1,307 @@
+"""Placement-backend contract and registry.
+
+The Alg-2 hot path — *is this TFS row placeable on the fleet?* for a block
+of ``B`` power-sorted rows at once — is pluggable.  A backend is any object
+implementing :class:`PlacementBackend`:
+
+    place_block(shares, iis, t_slr, t_cfg, opts) -> BatchPlacement
+
+where ``shares`` is the ``(B, n_t)`` float64 shares matrix (one TFS row per
+line, tasks in the paper's fixed order), ``iis`` the ``(n_t,)`` per-task
+initialization intervals, ``t_slr`` / ``t_cfg`` the ``(n_f,)`` per-device
+capacities and reconfiguration costs, and ``opts`` a
+:class:`PlacementOptions` carrying the baseline-model knobs
+(``t_capture``/``t_store``/``repay_init`` — see
+:func:`repro.core.placement.place_shares`).
+
+Every backend must reproduce the scalar oracle's verdicts **bit-for-bit**:
+the arithmetic replays the same float64 operations in the same order
+(``avail = (c - t_cfg_j) - extra``; ``c' = avail - rem``), asserted on the
+paper's worked examples (Figs 2-4) and randomized heterogeneous fleets in
+``tests/test_placement_backends.py``.
+
+Registering a new backend
+-------------------------
+
+Decorate a class with :func:`register_backend` and implement the protocol::
+
+    from repro.core.placement_backends import base
+
+    @base.register_backend("mybackend")
+    class MyBackend(base.PlacementBackend):
+        name = "mybackend"
+
+        def place_block(self, shares, iis, t_slr, t_cfg, opts=None):
+            shares, iis, t_slr, t_cfg, opts, early = base.prepare_block(
+                shares, iis, t_slr, t_cfg, opts
+            )
+            if early is not None:
+                return early          # degenerate n_t == 0 / n_f == 0 block
+            ...
+
+``PADPSFRScheduler(engine="mybackend")`` then resolves it through
+:func:`get_backend`.  Backends whose dependencies may be missing override
+:meth:`PlacementBackend.available` (see ``jax_backend.py``); ``"auto"``
+selection only considers available backends.  Backends living in modules
+with heavyweight imports are registered lazily via ``_LAZY_BACKENDS`` so
+that the numpy core stays importable with zero optional dependencies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+__all__ = [
+    "BatchPlacement",
+    "PlacementOptions",
+    "PlacementBackend",
+    "register_backend",
+    "get_backend",
+    "resolve_engine",
+    "backend_names",
+    "available_backends",
+    "prepare_block",
+]
+
+
+@dataclasses.dataclass
+class BatchPlacement:
+    """Vectorised placement verdicts for a block of TFS rows.
+
+    A placement backend answers Alg 2's *is this combo placeable?* for every
+    row; the full per-device script of the (single) winning row is then
+    produced by the scalar oracle, which is exact by construction.
+    """
+
+    feasible: np.ndarray  # (B,) bool
+    placed_tasks: np.ndarray  # (B,) int — tasks fully placed (== n_t iff feasible)
+    n_splits: np.ndarray  # (B,) int — tasks that split across devices
+    devices_used: np.ndarray  # (B,) int — 1 + highest device index holding a
+    # placement (on heterogeneous fleets, skipped too-small devices in
+    # between still count toward this span)
+
+    @property
+    def n_feasible(self) -> int:
+        return int(self.feasible.sum())
+
+    def first_feasible(self) -> int:
+        """Row index of the first feasible row, or -1."""
+        idx = np.flatnonzero(self.feasible)
+        return int(idx[0]) if idx.size else -1
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementOptions:
+    """Placement-model knobs shared by every backend.
+
+    Defaults are PADPS-FR (carried split tasks re-pay a fresh II); the
+    capture/store pair models the refs-[9]/[10] preemptive baseline
+    (see :func:`repro.core.placement.place_shares`).
+    """
+
+    t_capture: float = 0.0
+    t_store: float = 0.0
+    repay_init: bool = True
+
+    @property
+    def resume_cost(self) -> float:
+        return self.t_capture + self.t_store
+
+
+@runtime_checkable
+class PlacementBackend(Protocol):
+    """The pluggable Alg-2 block-placement engine contract."""
+
+    name: str
+
+    def place_block(
+        self,
+        shares: np.ndarray,
+        iis: np.ndarray,
+        t_slr: np.ndarray,
+        t_cfg: np.ndarray,
+        opts: PlacementOptions | None = None,
+    ) -> BatchPlacement:
+        """Place every row of a ``(B, n_t)`` shares block on the fleet."""
+        ...
+
+    @classmethod
+    def available(cls) -> bool:
+        """Whether this backend's dependencies are importable here."""
+        return True
+
+
+def prepare_block(
+    shares,
+    iis,
+    t_slr,
+    t_cfg,
+    opts: PlacementOptions | None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, PlacementOptions, BatchPlacement | None]:
+    """Canonicalise backend inputs and resolve degenerate blocks.
+
+    Returns ``(shares, iis, t_slr, t_cfg, opts, early)`` with float64
+    contiguous arrays; ``early`` is a ready :class:`BatchPlacement` for the
+    trivial cases every backend must agree on:
+
+    * ``n_t == 0`` — nothing to place, every row is feasible;
+    * ``n_f == 0`` with ``n_t > 0`` — an empty fleet places nothing, every
+      row is infeasible (regression: this used to IndexError in the numpy
+      engine's ``t_cfg_arr[jj]`` gather).
+    """
+    shares = np.ascontiguousarray(shares, dtype=np.float64)
+    if shares.ndim != 2:
+        raise ValueError(f"shares must be (B, n_t), got shape {shares.shape}")
+    B, n_t = shares.shape
+    iis = np.asarray(iis, dtype=np.float64)
+    if iis.shape != (n_t,):
+        raise ValueError(f"init_intervals must have length {n_t}")
+    t_slr = np.asarray(t_slr, dtype=np.float64).reshape(-1)
+    t_cfg = np.asarray(t_cfg, dtype=np.float64).reshape(-1)
+    if t_slr.shape != t_cfg.shape:
+        raise ValueError(
+            f"t_slr/t_cfg must have matching shapes, got {t_slr.shape} vs {t_cfg.shape}"
+        )
+    if opts is None:
+        opts = PlacementOptions()
+    n_f = t_slr.shape[0]
+    early = None
+    if n_t == 0:
+        early = BatchPlacement(
+            feasible=np.ones(B, dtype=bool),
+            placed_tasks=np.zeros(B, dtype=np.int64),
+            n_splits=np.zeros(B, dtype=np.int64),
+            devices_used=np.zeros(B, dtype=np.int64),
+        )
+    elif n_f == 0:
+        early = BatchPlacement(
+            feasible=np.zeros(B, dtype=bool),
+            placed_tasks=np.zeros(B, dtype=np.int64),
+            n_splits=np.zeros(B, dtype=np.int64),
+            devices_used=np.zeros(B, dtype=np.int64),
+        )
+    return shares, iis, t_slr, t_cfg, opts, early
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type] = {}
+_INSTANCES: dict[str, PlacementBackend] = {}
+
+# Engines whose modules import optional dependencies (jax) register on first
+# lookup instead of at package import, keeping the numpy core zero-dependency.
+_LAZY_BACKENDS: dict[str, str] = {
+    "jax": "repro.core.placement_backends.jax_backend",
+    "pallas": "repro.core.placement_backends.pallas_backend",
+}
+
+# Historical engine names kept working across the PR-1 -> PR-2 refactor.
+_ALIASES: dict[str, str] = {"batched": "numpy"}
+
+
+def register_backend(name: str):
+    """Class decorator: register a :class:`PlacementBackend` under ``name``.
+
+    Re-registering an existing name replaces the backend everywhere: any
+    cached instance of the previous class is dropped so the next
+    :func:`get_backend` lookup constructs the new one.
+    """
+
+    def deco(cls):
+        _REGISTRY[name] = cls
+        _INSTANCES.pop(name, None)
+        return cls
+
+    return deco
+
+
+def backend_names() -> list[str]:
+    """All registered engine names (including not-currently-available ones)."""
+    return sorted(set(_REGISTRY) | set(_LAZY_BACKENDS))
+
+
+def _check_known(name: str) -> None:
+    if name not in _REGISTRY and name not in _LAZY_BACKENDS:
+        raise ValueError(
+            f"unknown placement engine {name!r}; known engines: "
+            f"{', '.join(backend_names() + ['auto'] + sorted(_ALIASES))}"
+        )
+
+
+def _load(name: str) -> type:
+    _check_known(name)
+    if name not in _REGISTRY:
+        try:
+            importlib.import_module(_LAZY_BACKENDS[name])
+        except ImportError as e:
+            raise RuntimeError(
+                f"placement backend {name!r} needs jax — install the [jax] "
+                f"extra (pip install -e '.[jax]'): {e}"
+            ) from e
+    return _REGISTRY[name]
+
+
+def available_backends() -> list[str]:
+    """Engine names whose dependencies are importable in this process."""
+    out = []
+    for name in backend_names():
+        try:
+            if _load(name).available():
+                out.append(name)
+        except RuntimeError:
+            continue
+    return out
+
+
+def resolve_engine(engine: str) -> str:
+    """Canonical engine name for ``engine`` (aliases and ``"auto"``).
+
+    ``"auto"`` picks the best available backend: the fused Pallas kernel on
+    a TPU host, the jit'd jax sweep when jax is importable, the numpy block
+    engine otherwise.
+    """
+    engine = _ALIASES.get(engine, engine)
+    if engine != "auto":
+        _check_known(engine)
+        return engine
+    avail = set(available_backends())
+    if "pallas" in avail:
+        try:
+            import jax
+
+            if jax.default_backend() == "tpu":
+                return "pallas"
+        except ImportError:  # pragma: no cover - pallas implies jax
+            pass
+    if "jax" in avail:
+        return "jax"
+    return "numpy"
+
+
+def get_backend(engine: str) -> PlacementBackend:
+    """Resolve ``engine`` (name, alias, or ``"auto"``) to a backend instance.
+
+    Instances are cached — backends are stateless apart from compilation
+    caches, which this sharing deliberately preserves across schedulers.
+    """
+    name = resolve_engine(engine)
+    if name not in _INSTANCES:
+        cls = _load(name)
+        if not cls.available():
+            hint = (
+                " — install the [jax] extra (pip install -e '.[jax]')"
+                if name in _LAZY_BACKENDS
+                else ""
+            )
+            raise RuntimeError(
+                f"placement backend {name!r} is registered but not available "
+                f"in this environment (missing optional dependency?){hint}"
+            )
+        _INSTANCES[name] = cls()
+    return _INSTANCES[name]

@@ -1,0 +1,106 @@
+"""JAX block-placement backend — a jit'd ``lax.while_loop`` over (B,) state.
+
+The numpy engine's vectorized carry/split step becomes one XLA program:
+the whole per-row simulation state (device cursor, task cursor, remaining
+capacity, carried share) is a tuple of ``(B,)`` arrays advanced inside a
+``lax.while_loop`` with ``n_t`` / ``n_f`` static, so a TFS block of 10^6
+rows sweeps in a single device call with no per-step host round-trip.
+
+Bit-compatibility with the scalar oracle: the step arithmetic (defined
+once in :func:`repro.kernels.ref.placement_sweep_ref`) replays the same
+float64 add/sub chains in the same order — no multiply-add pairs, so XLA
+cannot FMA-contract them — and runs under a scoped ``enable_x64`` so the
+global jax float32 default (which the model/training substrate relies on)
+is untouched.
+
+Block shapes are padded to the next power of two, bounding recompilation
+to O(log B) specializations per (n_t, n_f) topology; padded rows are
+sliced off before the verdicts leave the backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .base import (
+    BatchPlacement,
+    PlacementOptions,
+    prepare_block,
+    register_backend,
+)
+
+__all__ = ["JaxPlacementBackend"]
+
+_MIN_PAD = 8
+
+
+def _pad_rows(B: int) -> int:
+    """Next power of two >= B (>= _MIN_PAD) — the static block height."""
+    p = _MIN_PAD
+    while p < B:
+        p <<= 1
+    return p
+
+
+@functools.cache
+def _jitted_sweep():
+    """Build the jit'd sweep lazily so importing this module stays cheap."""
+    import jax
+
+    from repro.kernels.ref import placement_sweep_ref
+
+    return jax.jit(placement_sweep_ref, static_argnames=("repay_init",))
+
+
+@register_backend("jax")
+class JaxPlacementBackend:
+    """``lax.while_loop`` sweep, float64 via scoped ``enable_x64``."""
+
+    name = "jax"
+
+    @classmethod
+    def available(cls) -> bool:
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            return False
+        return True
+
+    def place_block(
+        self,
+        shares: np.ndarray,
+        iis: np.ndarray,
+        t_slr: np.ndarray,
+        t_cfg: np.ndarray,
+        opts: PlacementOptions | None = None,
+    ) -> BatchPlacement:
+        shares, iis, t_slr_arr, t_cfg_arr, opts, early = prepare_block(
+            shares, iis, t_slr, t_cfg, opts
+        )
+        if early is not None:
+            return early
+        from jax.experimental import enable_x64
+
+        B = shares.shape[0]
+        Bp = _pad_rows(B)
+        if Bp != B:
+            shares = np.pad(shares, ((0, Bp - B), (0, 0)))
+        sweep = _jitted_sweep()
+        with enable_x64():
+            feasible, placed, n_splits, devices_used = sweep(
+                shares,
+                iis,
+                t_slr_arr,
+                t_cfg_arr,
+                np.float64(opts.resume_cost),
+                repay_init=opts.repay_init,
+            )
+            out = [np.asarray(a)[:B] for a in (feasible, placed, n_splits, devices_used)]
+        return BatchPlacement(
+            feasible=out[0].astype(bool),
+            placed_tasks=out[1].astype(np.int64),
+            n_splits=out[2].astype(np.int64),
+            devices_used=out[3].astype(np.int64),
+        )

@@ -1,0 +1,94 @@
+"""Pallas block-placement backend — the whole carry/split sweep fused.
+
+Wraps :func:`repro.kernels.ops.placement_sweep`: row tiles of the TFS
+block stream through VMEM and an in-kernel ``fori_loop`` runs all
+``n_t + n_f`` placement steps per tile in one fused kernel — no
+intermediate HBM round-trips between steps, so ~10^6-row blocks sweep
+per call.  Off-TPU the kernel executes in Pallas interpret mode (correct
+but slow — useful for parity testing, not throughput; ``"auto"`` only
+selects this backend on a TPU host).
+
+Float64 comes from the same scoped ``enable_x64`` as the jax backend, so
+interpret-mode verdicts are bit-identical to the scalar oracle.  On TPU
+hardware float64 is unavailable; there the kernel lowers at float32 and
+bit-parity relaxes to float32 accuracy (see ``kernels/placement_step.py``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .base import (
+    BatchPlacement,
+    PlacementOptions,
+    prepare_block,
+    register_backend,
+)
+
+__all__ = ["PallasPlacementBackend"]
+
+
+@register_backend("pallas")
+class PallasPlacementBackend:
+    """Fused single-kernel sweep (interpret mode off-TPU)."""
+
+    name = "pallas"
+
+    def __init__(self, block_rows: int = 1024) -> None:
+        self.block_rows = block_rows
+
+    @classmethod
+    def available(cls) -> bool:
+        try:
+            from jax.experimental import pallas  # noqa: F401
+        except ImportError:
+            return False
+        return True
+
+    def place_block(
+        self,
+        shares: np.ndarray,
+        iis: np.ndarray,
+        t_slr: np.ndarray,
+        t_cfg: np.ndarray,
+        opts: PlacementOptions | None = None,
+    ) -> BatchPlacement:
+        shares, iis, t_slr_arr, t_cfg_arr, opts, early = prepare_block(
+            shares, iis, t_slr, t_cfg, opts
+        )
+        if early is not None:
+            return early
+        import contextlib
+
+        from jax.experimental import enable_x64
+
+        from repro.kernels.ops import on_tpu, placement_sweep
+
+        # TPUs have no float64: lower the kernel at float32 there (verdicts
+        # are float32-accurate, not bit-pinned); everywhere else the kernel
+        # interprets at float64 under scoped x64 and stays bit-identical.
+        if on_tpu():
+            precision_ctx = contextlib.nullcontext()
+            shares = shares.astype(np.float32)
+            iis = iis.astype(np.float32)
+            t_slr_arr = t_slr_arr.astype(np.float32)
+            t_cfg_arr = t_cfg_arr.astype(np.float32)
+        else:
+            precision_ctx = enable_x64()
+        with precision_ctx:
+            feasible, placed, n_splits, devices_used = placement_sweep(
+                shares,
+                iis,
+                t_slr_arr,
+                t_cfg_arr,
+                resume_cost=opts.resume_cost,
+                repay_init=opts.repay_init,
+                block_rows=self.block_rows,
+            )
+            out = [np.asarray(a) for a in (feasible, placed, n_splits, devices_used)]
+        return BatchPlacement(
+            feasible=out[0].astype(bool),
+            placed_tasks=out[1].astype(np.int64),
+            n_splits=out[2].astype(np.int64),
+            devices_used=out[3].astype(np.int64),
+        )

@@ -1,0 +1,84 @@
+"""Scalar block-placement backend — the reference oracle, one row at a time.
+
+Routes every row of the block through the exact Alg-2/Alg-3 placement
+simulation (:func:`repro.core.placement.place_shares`), which is the
+ground truth all vectorized backends must agree with bit-for-bit.  It is
+O(B) Python round-trips and exists for verification and tiny fleets, not
+for throughput.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..placement import place_shares
+from ..task import DeviceProfile, FleetSpec
+from .base import (
+    BatchPlacement,
+    PlacementOptions,
+    prepare_block,
+    register_backend,
+)
+
+__all__ = ["ScalarPlacementBackend"]
+
+
+@register_backend("scalar")
+class ScalarPlacementBackend:
+    """Row-by-row scalar oracle behind the block-backend contract."""
+
+    name = "scalar"
+
+    @classmethod
+    def available(cls) -> bool:
+        return True
+
+    def place_block(
+        self,
+        shares: np.ndarray,
+        iis: np.ndarray,
+        t_slr: np.ndarray,
+        t_cfg: np.ndarray,
+        opts: PlacementOptions | None = None,
+    ) -> BatchPlacement:
+        shares, iis, t_slr_arr, t_cfg_arr, opts, early = prepare_block(
+            shares, iis, t_slr, t_cfg, opts
+        )
+        if early is not None:
+            return early
+        B, n_t = shares.shape
+        fleet = FleetSpec.heterogeneous(
+            tuple(
+                DeviceProfile(t_slr=float(s), t_cfg=float(c))
+                for s, c in zip(t_slr_arr, t_cfg_arr)
+            )
+        )
+        feasible = np.zeros(B, dtype=bool)
+        placed = np.zeros(B, dtype=np.int64)
+        n_splits = np.zeros(B, dtype=np.int64)
+        devices_used = np.zeros(B, dtype=np.int64)
+        iis_list = [float(v) for v in iis]
+        for r in range(B):
+            plan = place_shares(
+                [float(s) for s in shares[r]],
+                iis_list,
+                fleet,
+                t_capture=opts.t_capture,
+                t_store=opts.t_store,
+                repay_init=opts.repay_init,
+            )
+            feasible[r] = plan.feasible
+            placed[r] = n_t - len(plan.unplaced) if not plan.feasible else n_t
+            n_splits[r] = plan.n_splits
+            used = [
+                s.device + 1
+                for s in plan.scripts
+                if any(seg.kind != "null" for seg in s.segments)
+            ]
+            devices_used[r] = max(used, default=0)
+        return BatchPlacement(
+            feasible=feasible,
+            placed_tasks=placed,
+            n_splits=n_splits,
+            devices_used=devices_used,
+        )

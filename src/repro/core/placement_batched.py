@@ -1,68 +1,27 @@
-"""Batched Alg-2/Alg-3 placement — a numpy array program over TFS blocks.
+"""Batched Alg-2/Alg-3 placement — compatibility facade over the backends.
 
-The paper's ``find_low_power_task_set()`` walks the power-sorted TFS one
-combination at a time through the scalar placement simulation
-(:func:`repro.core.placement.place_shares`) — O(|TFS|) Python round-trips
-on the hot path of every scheduling decision.  This module evaluates an
-entire block of TFS rows at once: the block is a shares matrix ``(B, n_t)``
-and the simulation state (device cursor ``j``, remaining capacity ``c``,
-task cursor ``k``, carried share ``tsd``) lives in (B,) arrays advanced by
-vectorized carry/split steps.
+The vectorised block engine introduced in PR 1 now lives in the pluggable
+backend package :mod:`repro.core.placement_backends` (the numpy loop moved
+verbatim to ``numpy_backend.py``; jit'd jax and fused Pallas engines sit
+beside it).  This module keeps the original entry points stable:
 
-Each step, every live row either advances its task cursor (the current
-task fits on the current device) or its device cursor (no-start, split
-carry, or post-placement closure), so the loop runs at most ``n_t + n_f``
-iterations *regardless of B* — the per-row Python interpreter cost of the
-scalar walk is amortised over the whole block.
-
-The arithmetic replays the scalar oracle's float64 operations in the same
-order (``avail = (c - t_cfg_j) - extra``; ``c' = avail - rem``), so the
-two engines agree bit-for-bit — asserted on the paper's worked examples
-(Figs 2-4) and on randomized heterogeneous fleets in
-``tests/test_placement_batched.py``.
-
-Heterogeneity is native: capacities ``t_slr_j`` and reconfiguration costs
-``t_cfg_j`` are per-device gathers, so mixed FPGA/GPU/CPU fleets
-(:class:`repro.core.power.DeviceClass`) cost nothing extra.
+* :func:`place_batch` — place a ``(B, n_t)`` shares block on the fleet,
+  now with a ``backend=`` knob (``"numpy"`` default, ``"scalar"``,
+  ``"jax"``, ``"pallas"``, or ``"auto"``);
+* :class:`BatchPlacement` — re-exported from the backend package;
+* :func:`place_combos_batch` — the Alg-3 combo-block entry point.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Sequence
 
 import numpy as np
 
-from .placement import _EPS
+from .placement_backends import BatchPlacement, PlacementOptions, get_backend
 from .task import FleetSpec, Task, TaskSetCombo
 
 __all__ = ["BatchPlacement", "place_batch", "place_combos_batch"]
-
-
-@dataclasses.dataclass
-class BatchPlacement:
-    """Vectorised placement verdicts for a block of TFS rows.
-
-    The batched engine answers Alg 2's *is this combo placeable?* for every
-    row; the full per-device script of the (single) winning row is then
-    produced by the scalar oracle, which is exact by construction.
-    """
-
-    feasible: np.ndarray  # (B,) bool
-    placed_tasks: np.ndarray  # (B,) int — tasks fully placed (== n_t iff feasible)
-    n_splits: np.ndarray  # (B,) int — tasks that split across devices
-    devices_used: np.ndarray  # (B,) int — 1 + highest device index holding a
-    # placement (on heterogeneous fleets, skipped too-small devices in
-    # between still count toward this span)
-
-    @property
-    def n_feasible(self) -> int:
-        return int(self.feasible.sum())
-
-    def first_feasible(self) -> int:
-        """Row index of the first feasible row, or -1."""
-        idx = np.flatnonzero(self.feasible)
-        return int(idx[0]) if idx.size else -1
 
 
 def place_batch(
@@ -73,6 +32,7 @@ def place_batch(
     t_capture: float = 0.0,
     t_store: float = 0.0,
     repay_init: bool = True,
+    backend: str = "numpy",
 ) -> BatchPlacement:
     """Simulate DP-wrap placement of ``B`` share rows on the fleet at once.
 
@@ -80,85 +40,15 @@ def place_batch(
     the paper's fixed order.  Semantics (start condition, split carry,
     re-paid II / capture+store, closure) are exactly those of
     :func:`repro.core.placement.place_shares`; see that module's docstring
-    for the Fig-2/3/4 pinning.
+    for the Fig-2/3/4 pinning.  ``backend`` selects the block engine
+    (:mod:`repro.core.placement_backends`); every backend agrees with the
+    scalar oracle bit-for-bit.
     """
-    shares = np.ascontiguousarray(shares, dtype=np.float64)
-    if shares.ndim != 2:
-        raise ValueError(f"shares must be (B, n_t), got shape {shares.shape}")
-    B, n_t = shares.shape
-    iis = np.asarray(init_intervals, dtype=np.float64)
-    if iis.shape != (n_t,):
-        raise ValueError(f"init_intervals must have length {n_t}")
-    t_slr_arr = fleet.t_slr_arr
-    t_cfg_arr = fleet.t_cfg_arr
-    n_f = fleet.n_f
-    resume_cost = t_capture + t_store
-
-    # Per-row simulation state (mirrors the scalar walk's locals).
-    j = np.zeros(B, dtype=np.int64)  # device cursor
-    k = np.zeros(B, dtype=np.int64)  # task cursor (paper's sti)
-    c = np.full(B, t_slr_arr[0] if n_f else 0.0, dtype=np.float64)
-    tsd = np.zeros(B, dtype=np.float64)  # carried share of task k
-    dead = np.zeros(B, dtype=bool)
-    n_splits = np.zeros(B, dtype=np.int64)
-    devices_used = np.zeros(B, dtype=np.int64)
-
-    if n_t == 0:
-        return BatchPlacement(
-            feasible=np.ones(B, dtype=bool),
-            placed_tasks=k,
-            n_splits=n_splits,
-            devices_used=devices_used,
-        )
-
-    while True:
-        act = np.flatnonzero(~dead & (k < n_t))
-        if act.size == 0:
-            break
-        jj = j[act]
-        kk = k[act]
-        cc = c[act]
-        ii = iis[kk]
-        tcfg = t_cfg_arr[jj]
-        carried = tsd[act] > _EPS
-        extra = np.where(carried, ii if repay_init else resume_cost, 0.0)
-        rem = shares[act, kk] - tsd[act]
-        avail = (cc - tcfg) - extra
-        can_start = (cc > tcfg + ii + _EPS) & (avail > _EPS)
-        split = can_start & (rem - avail > _EPS)
-        fits = can_start & ~split
-
-        # Any placement (split or full) occupies the current device.
-        devices_used[act] = np.where(
-            can_start, np.maximum(devices_used[act], jj + 1), devices_used[act]
-        )
-
-        # Split: run `avail` here, carry the remainder to the next device.
-        tsd[act] = np.where(split, tsd[act] + avail, tsd[act])
-        n_splits[act] += (split & ~carried).astype(np.int64)
-
-        # Fits: consume cfg + extra + remaining share, advance the task.
-        c_after = avail - rem
-        closure = fits & (c_after <= tcfg + ii + _EPS)
-        c[act] = np.where(fits, c_after, c[act])
-        k[act] = kk + fits.astype(np.int64)
-        tsd[act] = np.where(fits, 0.0, tsd[act])
-
-        # Device advance: no-start, split carry, or closure after a fit.
-        advance = ~can_start | split | closure
-        j_next = jj + advance.astype(np.int64)
-        j[act] = j_next
-        still_working = k[act] < n_t
-        overflow = advance & (j_next >= n_f) & still_working
-        dead[act] |= overflow
-        refill = advance & (j_next < n_f)
-        c[act] = np.where(refill, t_slr_arr[np.minimum(j_next, n_f - 1)], c[act])
-
-    return BatchPlacement(
-        feasible=(k >= n_t) & ~dead,
-        placed_tasks=k,
-        n_splits=n_splits,
-        devices_used=devices_used,
+    opts = PlacementOptions(
+        t_capture=t_capture, t_store=t_store, repay_init=repay_init
+    )
+    return get_backend(backend).place_block(
+        shares, init_intervals, fleet.t_slr_arr, fleet.t_cfg_arr, opts
     )
 
 

@@ -2,11 +2,15 @@
 
 ``select_lowest_power`` walks the power-sorted TFS and returns the first
 combination whose placement simulation succeeds — by construction the
-minimum-power feasible configuration (paper §III-A2).  The default engine
-is *batched*: TFS rows are evaluated in vectorized blocks by
-:func:`repro.core.placement_batched.place_batch` (a handful of numpy
-sweeps instead of O(|TFS|) Python round-trips); the scalar walk remains
-as the reference oracle (``engine="scalar"``).  The facade bundles
+minimum-power feasible configuration (paper §III-A2).  The facade walks
+the TFS in vectorized blocks through a pluggable placement backend
+(:mod:`repro.core.placement_backends`): ``engine="numpy"`` (default; alias
+``"batched"``) is the zero-dependency block engine, ``"jax"`` a jit'd
+``lax.while_loop`` sweep, ``"pallas"`` the fused single-kernel sweep,
+``"scalar"`` the exact one-row-at-a-time oracle, and ``"auto"`` the best
+available.  Block handoff is array-native end to end:
+``feasibility.shares_matrix`` gathers each block and the backend consumes
+it whole — no per-row host round-trips.  The facade bundles
 Alg 1 + Alg 2 + Alg 3 and reports the statistics the paper quotes
 (|TSS|, |TFS|, |TNFS|, placement rejects, chosen index).
 """
@@ -19,7 +23,12 @@ from typing import Iterable, Iterator, Sequence
 
 from .feasibility import FeasibilityResult, iter_feasible_pruned, search_feasible
 from .placement import PlacementPlan, place_combo
-from .placement_batched import place_batch
+from .placement_backends import (
+    PlacementBackend,
+    PlacementOptions,
+    get_backend,
+    resolve_engine,
+)
 from .task import FleetSpec, Task, TaskSetCombo, combo_count
 
 __all__ = [
@@ -70,9 +79,12 @@ def select_lowest_power(
 ) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
     """Alg 2 lines 2-10: first placeable combo in ascending-power order.
 
-    Returns (combo, plan, rank, rejects_before_success).  With
-    ``count_all_rejects`` the walk continues past the winner to count every
-    placement-rejected TFS row (the paper's "156 rejected" statistic).
+    The paper's walk as written — one full scalar placement simulation per
+    row, no blocking, no backend indirection; kept as the independent
+    reference for the block walk.  Returns (combo, plan, rank,
+    rejects_before_success).  With ``count_all_rejects`` the walk continues
+    past the winner to count every placement-rejected TFS row (the paper's
+    "156 rejected" statistic).
     """
     rejects = 0
     winner: tuple[TaskSetCombo, PlacementPlan, int] | None = None
@@ -97,16 +109,19 @@ def select_lowest_power_batched(
     *,
     count_all_rejects: bool = False,
     block_size: int = DEFAULT_BLOCK_SIZE,
+    backend: str | PlacementBackend = "numpy",
     **placement_kw,
 ) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
     """Alg 2 over vectorized TFS blocks — same contract as
     :func:`select_lowest_power`.
 
-    Blocks of ``block_size`` power-sorted rows go through
-    :func:`repro.core.placement_batched.place_batch` at once; the first
-    feasible row wins and its full per-device plan comes from the scalar
-    oracle (bit-identical by construction, asserted in tests).
+    Blocks of ``block_size`` power-sorted rows go through the placement
+    backend at once; the first feasible row wins and its full per-device
+    plan comes from the scalar oracle (bit-identical by construction,
+    asserted in tests).
     """
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
 
     def blocks():
         stream = iter(combos_by_power)
@@ -121,6 +136,7 @@ def select_lowest_power_batched(
         lambda block, r: block[r],
         tasks,
         fleet,
+        backend=backend,
         count_all_rejects=count_all_rejects,
         **placement_kw,
     )
@@ -132,6 +148,7 @@ def _walk_tfs_blocks(
     tasks: Sequence[Task],
     fleet: FleetSpec,
     *,
+    backend: str | PlacementBackend,
     count_all_rejects: bool,
     **placement_kw,
 ) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
@@ -140,15 +157,22 @@ def _walk_tfs_blocks(
     ``block_iter`` yields ``(shares_rows, ref)`` pairs (a (B, n_t)
     array-like plus an opaque block reference); ``materialize(ref, row)``
     produces the winning row's :class:`TaskSetCombo`.  Winner/rank/reject
-    bookkeeping lives only here so the streaming and exhaustive engines
-    cannot drift apart.
+    bookkeeping lives only here — backend-agnostic by construction — so
+    no two engines can drift apart.  ``backend`` is an engine name (or a
+    ready :class:`PlacementBackend`); each block goes to
+    ``backend.place_block`` as one shares matrix, no per-row host work.
     """
+    if isinstance(backend, str):
+        backend = get_backend(backend)
     iis = [t.init_interval for t in tasks]
+    t_slr_arr = fleet.t_slr_arr
+    t_cfg_arr = fleet.t_cfg_arr
+    opts = PlacementOptions(**placement_kw)
     rejects = 0
     winner: tuple[TaskSetCombo, PlacementPlan, int] | None = None
     rank_base = 0
     for shares, ref in block_iter:
-        bp = place_batch(shares, iis, fleet, **placement_kw)
+        bp = backend.place_block(shares, iis, t_slr_arr, t_cfg_arr, opts)
         n_rows = bp.feasible.shape[0]
         if winner is None:
             r = bp.first_feasible()
@@ -177,15 +201,17 @@ def _select_from_feasibility(
     *,
     count_all_rejects: bool = False,
     block_size: int = DEFAULT_BLOCK_SIZE,
+    backend: str | PlacementBackend = "numpy",
     **placement_kw,
 ) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
     """Fast exhaustive path: batched sweeps over flat TFS indices.
 
     Avoids materialising per-row :class:`TaskSetCombo` objects entirely —
     each block is one fancy-indexed shares-matrix gather
-    (:meth:`FeasibilityResult.shares_matrix`) plus one
-    :func:`place_batch` call.
+    (:meth:`FeasibilityResult.shares_matrix`) handed whole to the backend.
     """
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
     order = feas.tfs_indices_by_power()
 
     def blocks():
@@ -198,6 +224,7 @@ def _select_from_feasibility(
         lambda idx, r: feas.combo_at(int(idx[r])),
         tasks,
         fleet,
+        backend=backend,
         count_all_rejects=count_all_rejects,
         **placement_kw,
     )
@@ -210,7 +237,14 @@ class PADPSFRScheduler:
     :class:`FleetSpec`, call :meth:`schedule` with the periodic task set.
     ``exhaustive=None`` auto-selects the vectorised exhaustive engine for
     small variant products and the branch-and-bound streaming engine for
-    large ones.
+    large ones.  ``engine`` selects the placement backend through the
+    registry (:mod:`repro.core.placement_backends`): ``"scalar"``,
+    ``"numpy"`` (default; alias ``"batched"``), ``"jax"``, ``"pallas"``,
+    or ``"auto"`` for the best available.  ``"scalar"`` runs the paper's
+    row-at-a-time walk (:func:`select_lowest_power`) directly — early
+    exit at the winner, bookkeeping independent of the block walk — so
+    scalar-vs-block parity tests cross-check two separate Alg-2
+    implementations.
     """
 
     def __init__(
@@ -219,16 +253,17 @@ class PADPSFRScheduler:
         *,
         exhaustive: bool | None = None,
         exhaustive_limit: int = 2_000_000,
-        engine: str = "batched",
+        engine: str = "numpy",
         block_size: int = DEFAULT_BLOCK_SIZE,
     ) -> None:
-        if engine not in ("batched", "scalar"):
-            raise ValueError(f"engine must be 'batched' or 'scalar', got {engine!r}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
         self.fleet = fleet
         self.exhaustive = exhaustive
         self.exhaustive_limit = exhaustive_limit
-        self.engine = engine
+        self.engine = resolve_engine(engine)  # raises on unknown names
         self.block_size = block_size
+        self._backend = get_backend(self.engine)
 
     def feasibility(self, tasks: Sequence[Task]) -> FeasibilityResult:
         return search_feasible(tasks, self.fleet)
@@ -256,30 +291,36 @@ class PADPSFRScheduler:
     ) -> ScheduleResult:
         tasks = tuple(tasks)
         stream, feas = self._combo_stream(tasks)
-        if self.engine == "batched" and feas is not None:
+        if self.engine == "scalar":
+            # The paper's walk as written: one scalar simulation per row
+            # with early exit at the winner, and winner/rank/reject
+            # bookkeeping entirely independent of _walk_tfs_blocks — this
+            # is what the cross-engine parity tests pin the block walk to.
+            combo, plan, rank, rejects = select_lowest_power(
+                stream,
+                tasks,
+                self.fleet,
+                count_all_rejects=count_all_rejects,
+                **placement_kw,
+            )
+        elif feas is not None:
             combo, plan, rank, rejects = _select_from_feasibility(
                 feas,
                 tasks,
                 self.fleet,
                 count_all_rejects=count_all_rejects,
                 block_size=self.block_size,
+                backend=self._backend,
                 **placement_kw,
             )
-        elif self.engine == "batched":
+        else:
             combo, plan, rank, rejects = select_lowest_power_batched(
                 stream,
                 tasks,
                 self.fleet,
                 count_all_rejects=count_all_rejects,
                 block_size=self.block_size,
-                **placement_kw,
-            )
-        else:
-            combo, plan, rank, rejects = select_lowest_power(
-                stream,
-                tasks,
-                self.fleet,
-                count_all_rejects=count_all_rejects,
+                backend=self._backend,
                 **placement_kw,
             )
         n_tss = combo_count(tasks)

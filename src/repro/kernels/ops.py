@@ -12,10 +12,11 @@ import jax
 
 from . import ref
 from .flash_attention import flash_attention_pallas
+from .placement_step import placement_sweep_pallas
 from .rglru_scan import rglru_scan_pallas
 from .ssd_scan import ssd_scan_pallas
 
-__all__ = ["flash_attention", "ssd_scan", "rglru_scan", "on_tpu"]
+__all__ = ["flash_attention", "ssd_scan", "rglru_scan", "placement_sweep", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -78,5 +79,18 @@ def rglru_scan(x, r_gate, i_gate, log_lambda, *, c=8.0, return_state=False):
     """RG-LRU blocked scan (Pallas on TPU, interpret elsewhere)."""
     return rglru_scan_pallas(
         x, r_gate, i_gate, log_lambda, c=c, return_state=return_state,
+        interpret=not on_tpu(),
+    )
+
+
+def placement_sweep(
+    shares, iis, t_slr, t_cfg, *, resume_cost=0.0, repay_init=True, block_rows=1024
+):
+    """Fused Alg-2 TFS-block placement sweep (Pallas on TPU, interpret
+    elsewhere).  Oracle: ``ref.placement_sweep_ref``; the scheduler-facing
+    entry is ``repro.core.placement_backends`` (engine="pallas")."""
+    return placement_sweep_pallas(
+        shares, iis, t_slr, t_cfg,
+        resume_cost=resume_cost, repay_init=repay_init, block_rows=block_rows,
         interpret=not on_tpu(),
     )

@@ -1,0 +1,224 @@
+"""Pallas kernel: fused Alg-2 TFS-block placement sweep.
+
+The scheduler's hot path advances a per-row simulation state (device
+cursor ``j``, task cursor ``k``, remaining capacity ``c``, carried share
+``tsd``) over a ``(B, n_t)`` shares block.  The jax backend expresses one
+step as ~15 gather/where ops XLA schedules independently; here the whole
+sweep is *one kernel*: a row tile of the block plus the (tiny) per-task
+and per-device tables live in VMEM, and an in-kernel ``fori_loop`` runs
+all ``n_t + n_f`` carry/split steps over that tile before it is written
+back — no intermediate HBM traffic, so blocks of ~10^6 rows sweep per
+call.
+
+Gathers (``iis[k]``, ``t_cfg[j]``, ``shares[row, k]``) are one-hot
+masked row reductions instead of dynamic-index loads: with the cursor
+clipped into range exactly one column survives the mask, so the sum
+reproduces the gathered float64 value bit-exactly while staying
+TPU-lowerable (no scatter/gather lowering).
+
+Validated in interpret mode against ``ref.placement_sweep_ref`` (which
+is itself pinned bit-for-bit to the scalar Alg-2/Alg-3 oracle).  On
+non-TPU hosts the kernel runs in interpret mode (see ``ops.py``); on TPU
+float64 is unavailable, so bit-parity claims hold where the kernel is
+lowerable at float64 (interpret mode) and to float32 accuracy otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import _PLACE_EPS
+
+__all__ = ["placement_sweep_pallas"]
+
+
+def _onehot(cursor, width: int):
+    """(bB, 1) int cursor -> (bB, width) one-hot bool mask."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (cursor.shape[0], width), 1)
+    return cols == cursor
+
+
+def _select(mask, table_row):
+    """Masked row reduction: exact gather of one element per row.
+
+    ``mask`` is (bB, width) with exactly one True per row; ``table_row``
+    broadcasts (1, width) or (bB, width).  Summing a single surviving
+    element over zeros is bit-exact in any float width.
+    """
+    return jnp.sum(jnp.where(mask, table_row, 0.0), axis=1, keepdims=True)
+
+
+def _placement_sweep_kernel(
+    shares_ref,  # (bB, n_t)
+    iis_ref,  # (1, n_t)
+    slr_ref,  # (1, n_f)
+    cfg_ref,  # (1, n_f)
+    resume_ref,  # (1, 1) — t_capture + t_store (traced, no recompiles)
+    feas_ref,  # (bB, 1) int32 out
+    placed_ref,  # (bB, 1) int32 out
+    splits_ref,  # (bB, 1) int32 out
+    devused_ref,  # (bB, 1) int32 out
+    *,
+    n_steps: int,
+    repay_init: bool,
+):
+    shares = shares_ref[...]
+    iis_row = iis_ref[...]  # (1, n_t)
+    slr_row = slr_ref[...]  # (1, n_f)
+    cfg_row = cfg_ref[...]
+    resume_cost = resume_ref[0, 0]
+    bB, n_t = shares.shape
+    n_f = slr_row.shape[1]
+    dt = shares.dtype
+
+    c0 = jnp.full((bB, 1), slr_row[0, 0], dtype=dt)
+    state = (
+        jnp.zeros((bB, 1), jnp.int32),  # j
+        jnp.zeros((bB, 1), jnp.int32),  # k
+        c0,  # c
+        jnp.zeros((bB, 1), dt),  # tsd
+        jnp.zeros((bB, 1), jnp.bool_),  # dead
+        jnp.zeros((bB, 1), jnp.int32),  # n_splits
+        jnp.zeros((bB, 1), jnp.int32),  # devices_used
+    )
+
+    def step(_, state):
+        j, k, c, tsd, dead, n_splits, devices_used = state
+        live = ~dead & (k < n_t)
+        kk = jnp.minimum(k, n_t - 1)
+        jj = jnp.minimum(j, n_f - 1)
+        oh_k = _onehot(kk, n_t)
+        oh_j = _onehot(jj, n_f)
+        ii = _select(oh_k, iis_row)
+        tcfg = _select(oh_j, cfg_row)
+        carried = tsd > _PLACE_EPS
+        extra = jnp.where(carried, ii if repay_init else resume_cost, 0.0)
+        rem = _select(oh_k, shares) - tsd
+        avail = (c - tcfg) - extra
+        can_start = (c > tcfg + ii + _PLACE_EPS) & (avail > _PLACE_EPS) & live
+        split = can_start & (rem - avail > _PLACE_EPS)
+        fits = can_start & ~split
+
+        devices_used = jnp.where(
+            can_start, jnp.maximum(devices_used, jj + 1), devices_used
+        )
+        tsd = jnp.where(split, tsd + avail, tsd)
+        n_splits = n_splits + (split & ~carried)
+
+        c_after = avail - rem
+        closure = fits & (c_after <= tcfg + ii + _PLACE_EPS)
+        c = jnp.where(fits, c_after, c)
+        k = k + fits
+        tsd = jnp.where(fits, 0.0, tsd)
+
+        advance = (~can_start | split | closure) & live
+        j_next = j + advance
+        still_working = k < n_t
+        overflow = advance & (j_next >= n_f) & still_working
+        dead = dead | overflow
+        refill = advance & (j_next < n_f)
+        c = jnp.where(refill, _select(_onehot(jnp.minimum(j_next, n_f - 1), n_f), slr_row), c)
+        return (j_next, k, c, tsd, dead, n_splits, devices_used)
+
+    j, k, c, tsd, dead, n_splits, devices_used = jax.lax.fori_loop(
+        0, n_steps, step, state
+    )
+    feas_ref[...] = ((k >= n_t) & ~dead).astype(jnp.int32)
+    placed_ref[...] = k
+    splits_ref[...] = n_splits
+    devused_ref[...] = devices_used
+
+
+def placement_sweep_pallas(
+    shares: jax.Array,  # (B, n_t)
+    iis: jax.Array,  # (n_t,)
+    t_slr: jax.Array,  # (n_f,)
+    t_cfg: jax.Array,  # (n_f,)
+    *,
+    resume_cost=0.0,  # traced scalar: t_capture + t_store
+    repay_init: bool = True,
+    block_rows: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused block placement sweep; same contract as
+    ``ref.placement_sweep_ref``.
+
+    Rows are tiled ``block_rows`` at a time through VMEM; the grid is the
+    row-tile count, and each grid cell runs the entire ``n_t + n_f``-step
+    simulation for its tile.  Degenerate ``n_t == 0`` / ``n_f == 0``
+    blocks are the caller's job (see ``placement_backends.base``).
+
+    Padding happens *outside* the jit boundary, to the next power of two
+    (>= 8): distinct input heights B collapse onto O(log B) compiled
+    specializations instead of one retrace per height.  Zero-share
+    padding rows trivially "place" and are sliced off.
+    """
+    B = shares.shape[0]
+    Bp = 8
+    while Bp < B:
+        Bp <<= 1
+    if Bp != B:
+        shares = jnp.pad(shares, ((0, Bp - B), (0, 0)))
+    feas, placed, n_splits, devices_used = _placement_sweep_padded(
+        shares, iis, t_slr, t_cfg, resume_cost,
+        repay_init=repay_init, block_rows=block_rows, interpret=interpret,
+    )
+    return feas[:B], placed[:B], n_splits[:B], devices_used[:B]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("repay_init", "block_rows", "interpret"),
+)
+def _placement_sweep_padded(
+    shares: jax.Array,  # (Bp, n_t) — Bp a power of two >= 8
+    iis: jax.Array,
+    t_slr: jax.Array,
+    t_cfg: jax.Array,
+    resume_cost,
+    *,
+    repay_init: bool,
+    block_rows: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    Bp, n_t = shares.shape
+    n_f = t_slr.shape[0]
+    dt = shares.dtype
+    # Both Bp and the default block_rows are powers of two, so the tile
+    # height always divides the padded height exactly.
+    bB = min(block_rows, Bp)
+    if Bp % bB:
+        raise ValueError(f"block_rows={block_rows} must divide padded B={Bp}")
+
+    kernel = functools.partial(
+        _placement_sweep_kernel,
+        n_steps=n_t + n_f,
+        repay_init=repay_init,
+    )
+    out_shape = [jax.ShapeDtypeStruct((Bp, 1), jnp.int32)] * 4
+    feas, placed, n_splits, devices_used = pl.pallas_call(
+        kernel,
+        grid=(Bp // bB,),
+        in_specs=[
+            pl.BlockSpec((bB, n_t), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_t), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_f), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_f), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bB, 1), lambda i: (i, 0))] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(shares, iis.reshape(1, n_t).astype(dt), t_slr.reshape(1, n_f).astype(dt),
+      t_cfg.reshape(1, n_f).astype(dt),
+      jnp.asarray(resume_cost, dtype=dt).reshape(1, 1))
+    return (
+        feas[:, 0].astype(bool),
+        placed[:, 0],
+        n_splits[:, 0],
+        devices_used[:, 0],
+    )

@@ -12,6 +12,10 @@ multi-pod dry-run lowers these; the Pallas path is selected with
   reformulation: intra-chunk quadratic matmuls + inter-chunk state
   recurrence).  Mathematically identical to ``ssd_ref``.
 * ``rglru_ref``        — RG-LRU gated linear recurrence (Griffin).
+* ``placement_sweep_ref`` — the scheduler's Alg-2 TFS-block placement
+  sweep: a ``lax.while_loop`` advancing the (B,) carry/split state, the
+  oracle for ``placement_step.placement_sweep_pallas`` and the program
+  the jax placement backend jits.
 """
 
 from __future__ import annotations
@@ -29,6 +33,8 @@ __all__ = [
     "ssd_decode_step",
     "rglru_ref",
     "rglru_decode_step",
+    "placement_step_ref",
+    "placement_sweep_ref",
 ]
 
 
@@ -268,3 +274,117 @@ def rglru_decode_step(
     a = jnp.exp(-c * lam * rf)
     h = a * state + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_f * xf)
     return h.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# PADPS-FR Alg-2 placement sweep (the scheduler's TFS hot path)
+# ---------------------------------------------------------------------------
+
+_PLACE_EPS = 1e-9  # == repro.core.placement._EPS (kept literal: no core import)
+
+
+def placement_step_ref(
+    state: tuple,
+    shares: jax.Array,  # (B, n_t)
+    iis: jax.Array,  # (n_t,)
+    t_slr: jax.Array,  # (n_f,)
+    t_cfg: jax.Array,  # (n_f,)
+    resume_cost: jax.Array,  # scalar
+    *,
+    repay_init: bool = True,
+) -> tuple:
+    """One fused carry/split step over the whole (B,) placement state.
+
+    Mirrors the numpy engine
+    (:mod:`repro.core.placement_backends.numpy_backend`) exactly: every
+    live row either advances its task cursor (the current task fits) or
+    its device cursor (no-start, split carry, or closure).  The float64
+    operations are the scalar oracle's, in the same order — pure add/sub
+    chains, so XLA cannot FMA-contract them and the verdicts stay
+    bit-identical.
+    """
+    j, k, c, tsd, dead, n_splits, devices_used = state
+    n_t = shares.shape[1]
+    n_f = t_slr.shape[0]
+
+    live = ~dead & (k < n_t)
+    kk = jnp.minimum(k, n_t - 1)  # safe gather index once k == n_t
+    jj = jnp.minimum(j, n_f - 1)  # safe gather index once j == n_f
+    ii = iis[kk]
+    tcfg = t_cfg[jj]
+    carried = tsd > _PLACE_EPS
+    extra = jnp.where(carried, ii if repay_init else resume_cost, 0.0)
+    rem = jnp.take_along_axis(shares, kk[:, None], axis=1)[:, 0] - tsd
+    avail = (c - tcfg) - extra
+    can_start = (c > tcfg + ii + _PLACE_EPS) & (avail > _PLACE_EPS) & live
+    split = can_start & (rem - avail > _PLACE_EPS)
+    fits = can_start & ~split
+
+    # Any placement (split or full) occupies the current device.
+    devices_used = jnp.where(
+        can_start, jnp.maximum(devices_used, jj + 1), devices_used
+    )
+
+    # Split: run `avail` here, carry the remainder to the next device.
+    tsd = jnp.where(split, tsd + avail, tsd)
+    n_splits = n_splits + (split & ~carried)
+
+    # Fits: consume cfg + extra + remaining share, advance the task.
+    c_after = avail - rem
+    closure = fits & (c_after <= tcfg + ii + _PLACE_EPS)
+    c = jnp.where(fits, c_after, c)
+    k = k + fits
+    tsd = jnp.where(fits, 0.0, tsd)
+
+    # Device advance: no-start, split carry, or closure after a fit.
+    advance = (~can_start | split | closure) & live
+    j_next = j + advance
+    still_working = k < n_t
+    overflow = advance & (j_next >= n_f) & still_working
+    dead = dead | overflow
+    refill = advance & (j_next < n_f)
+    c = jnp.where(refill, t_slr[jnp.minimum(j_next, n_f - 1)], c)
+    return (j_next, k, c, tsd, dead, n_splits, devices_used)
+
+
+def placement_sweep_ref(
+    shares: jax.Array,  # (B, n_t) float64
+    iis: jax.Array,  # (n_t,)
+    t_slr: jax.Array,  # (n_f,)
+    t_cfg: jax.Array,  # (n_f,)
+    resume_cost: jax.Array = 0.0,  # scalar: t_capture + t_store
+    *,
+    repay_init: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Full Alg-2 block placement sweep as one ``lax.while_loop`` program.
+
+    Returns ``(feasible, placed_tasks, n_splits, devices_used)`` — (B,)
+    arrays matching :class:`repro.core.placement_backends.BatchPlacement`.
+    ``n_t`` and ``n_f`` are static (from the input shapes); callers handle
+    the degenerate ``n_t == 0`` / ``n_f == 0`` blocks on the host.  Each
+    step advances every live row's task or device cursor, so the loop runs
+    at most ``n_t + n_f`` iterations regardless of B.
+    """
+    B, n_t = shares.shape
+    dt = shares.dtype
+    state = (
+        jnp.zeros(B, dtype=jnp.int32),  # j — device cursor
+        jnp.zeros(B, dtype=jnp.int32),  # k — task cursor (paper's sti)
+        jnp.full(B, t_slr[0], dtype=dt),  # c — remaining capacity
+        jnp.zeros(B, dtype=dt),  # tsd — carried share of task k
+        jnp.zeros(B, dtype=bool),  # dead
+        jnp.zeros(B, dtype=jnp.int32),  # n_splits
+        jnp.zeros(B, dtype=jnp.int32),  # devices_used
+    )
+
+    def cond(state):
+        j, k, c, tsd, dead, n_splits, devices_used = state
+        return jnp.any(~dead & (k < n_t))
+
+    def body(state):
+        return placement_step_ref(
+            state, shares, iis, t_slr, t_cfg, resume_cost, repay_init=repay_init
+        )
+
+    j, k, c, tsd, dead, n_splits, devices_used = lax.while_loop(cond, body, state)
+    return (k >= n_t) & ~dead, k, n_splits, devices_used

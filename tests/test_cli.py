@@ -1,5 +1,6 @@
 """CLI entry-point smoke tests (subprocess)."""
 
+import json
 import os
 import subprocess
 import sys
@@ -47,6 +48,49 @@ def test_serve_cli():
     ])
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "generated" in proc.stdout
+
+
+def _bench_artifact(us_by_name, rows_per_s=None, crossover=None):
+    doc = {
+        "benchmark": "scheduler_scale",
+        "rows": [{"name": n, "us": v, "derived": ""} for n, v in us_by_name.items()],
+    }
+    if rows_per_s is not None:
+        doc["backend_sweep"] = {
+            "sizes": [1000],
+            "us": {},
+            "rows_per_s": rows_per_s,
+            "numpy_jax_crossover_rows": crossover,
+        }
+    return doc
+
+
+def test_trend_report_cli(tmp_path):
+    a = tmp_path / "BENCH_old.json"
+    b = tmp_path / "BENCH_new.json"
+    a.write_text(json.dumps(_bench_artifact(
+        {"alg2_batched_tfs4096": 1000.0},
+        rows_per_s={"numpy": {"1000": 5e5}, "jax": {"1000": 4e5}},
+    )))
+    b.write_text(json.dumps(_bench_artifact(
+        {"alg2_batched_tfs4096": 800.0, "only_in_new": 5.0},
+        rows_per_s={"numpy": {"1000": 5e5}, "jax": {"1000": 8e5}},
+        crossover=1000,
+    )))
+    out = tmp_path / "trend.json"
+    proc = _run(["benchmarks.trend_report", str(a), str(b), "--json", str(out)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "alg2_batched_tfs4096" in proc.stdout
+    assert "-20.0%" in proc.stdout  # 1000us -> 800us
+    assert "jax @ 1000 rows" in proc.stdout
+    trend = json.loads(out.read_text())
+    assert trend["rows"]["alg2_batched_tfs4096"]["delta_pct"] == pytest.approx(-20.0)
+    assert trend["rows"]["only_in_new"]["us"] == [None, 5.0]
+    assert trend["numpy_jax_crossover_rows"] == [None, 1000]
+
+    # fewer than two artifacts is a usage error
+    proc = _run(["benchmarks.trend_report", str(a)])
+    assert proc.returncode != 0
 
 
 @pytest.mark.slow
