@@ -10,7 +10,16 @@
   instances where the exhaustive product would not fit in memory;
 * placement-backend sweep (numpy vs jax vs pallas block engines) at
   growing |TFS| block sizes, reporting per-backend rows/s and the
-  numpy<->jax crossover point into the BENCH JSON.
+  numpy<->jax crossover point into the BENCH JSON;
+* enumeration-throughput sweep: the PR-2 Python-heap streamer
+  (``iter_feasible_pruned``) vs the block-native enumerator
+  (``iter_feasible_pruned_blocks``), rows/s each;
+* deep-rank streaming schedule: an instance whose winner sits >= 1e5
+  rows into the TFS, walked end-to-end by the PR-2 path
+  (heap + per-row combos through ``select_lowest_power_batched``) and
+  by the block-native pipeline — with the per-phase WalkStats
+  breakdown (enumerate / place / sync / materialize) and the adaptive
+  block-ramp sizes recorded in the JSON artifact.
 
 CLI (the CI benchmark-smoke job):
 
@@ -36,18 +45,26 @@ from repro.core import (
     PADPSFRScheduler,
     Task,
     TaskVariant,
+    WalkStats,
     available_backends,
     get_backend,
     place_batch,
     place_combo,
     search_feasible,
 )
-from repro.core.feasibility import iter_feasible_pruned
+from repro.core.feasibility import iter_feasible_pruned, iter_feasible_pruned_blocks
+from repro.core.scheduler import select_lowest_power_batched
 from repro.core.variants import make_hetero_fleet
 
 from .util import Row, timeit
 
-__all__ = ["bench_scheduler_scale", "bench_backend_sweep", "main"]
+__all__ = [
+    "bench_scheduler_scale",
+    "bench_backend_sweep",
+    "bench_enumeration_sweep",
+    "bench_streaming_deep",
+    "main",
+]
 
 
 def _synth_tasks(n_t: int, nv: int, seed: int = 0) -> list[Task]:
@@ -187,6 +204,166 @@ def bench_backend_sweep(
     return rows, sweep
 
 
+def _band_tasks(
+    n_t: int,
+    nv: int,
+    seed: int = 7,
+    base: float = 86.0,
+    slope: float = 5.0,
+    noise: float = 1.0,
+    ii: tuple[float, float] = (8.0, 16.0),
+) -> list[Task]:
+    """Tasks whose shares decrease near-affinely with power.
+
+    Low power => low throughput => high share (the paper's CU scaling),
+    made near-deterministic: total share crosses the fleet capacity as
+    total power rises, so the power-sorted TFS opens with a long band of
+    rows that pass eq. 7 but fail placement (fragmentation: t_cfg=0
+    fleets waste capacity on II repayments and leftovers).  The winner
+    lands 1e5+ rows deep — the streaming-walk stress regime.
+    """
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for i in range(n_t):
+        pws = np.sort(rng.uniform(3.0, 9.0, nv))
+        shr = np.maximum(base - slope * pws + rng.uniform(0, noise, nv), 0.5)
+        period, data, t_slr = 50.0, 1.0, 100.0
+        ths = data * t_slr / (period * shr)
+        tasks.append(
+            Task(
+                name=f"B{i}",
+                period=period,
+                data=data,
+                init_interval=float(rng.uniform(*ii)),
+                variants=tuple(
+                    TaskVariant(cu=j + 1, throughput=float(t), power=float(p))
+                    for j, (t, p) in enumerate(zip(ths, pws))
+                ),
+            )
+        )
+    return tasks
+
+
+def _deep_instance(quick: bool) -> tuple[list[Task], FleetSpec]:
+    n_t = 9 if quick else 10
+    tasks = _band_tasks(n_t, 4, base=86.0 if not quick else 78.0)
+    fleet = FleetSpec(n_f=6 if not quick else 5, t_slr=100.0, t_cfg=0.0)
+    return tasks, fleet
+
+
+def bench_enumeration_sweep(quick: bool = False) -> tuple[list[Row], dict]:
+    """TFS enumeration throughput: Python heap vs block-native arrays.
+
+    Streams the first N power-ordered TFS rows of the deep-band instance
+    through ``iter_feasible_pruned`` (one TaskSetCombo per row, PR-2) and
+    ``iter_feasible_pruned_blocks`` (whole (B, n_t) array blocks), and
+    reports rows/s for both plus the speedup — the Python-object churn
+    the block-native walk removed from the scheduler's hot path.
+    """
+    tasks, fleet = _deep_instance(quick)
+    target = 50_000 if quick else 200_000
+
+    def heap_rows() -> int:
+        n = 0
+        for _ in iter_feasible_pruned(tasks, fleet):
+            n += 1
+            if n >= target:
+                break
+        return n
+
+    def block_rows() -> int:
+        n = 0
+        for blk in iter_feasible_pruned_blocks(tasks, fleet, 65536):
+            n += len(blk)
+            if n >= target:
+                break
+        return n
+
+    # Both engines warmed once by the row-count calls, then median-of-3
+    # each — symmetric methodology so the speedup compares like with like.
+    n_heap = heap_rows()
+    n_block = block_rows()
+    us_heap = timeit(heap_rows, repeat=3, warmup=0)
+    us_block = timeit(block_rows, repeat=3, warmup=0)
+    heap_rps = n_heap / us_heap * 1e6
+    block_rps = n_block / us_block * 1e6
+    rows = [
+        Row(
+            f"enum_python_heap_rows{target}",
+            us_heap,
+            f"rows_per_s={heap_rps:.0f}",
+        ),
+        Row(
+            f"enum_block_native_rows{target}",
+            us_block,
+            f"rows_per_s={block_rps:.0f};speedup={us_heap / us_block:.1f}x",
+        ),
+    ]
+    sweep = {
+        "target_rows": target,
+        "heap_us": us_heap,
+        "block_us": us_block,
+        "heap_rows_per_s": heap_rps,
+        "block_rows_per_s": block_rps,
+        "speedup": us_heap / us_block,
+    }
+    return rows, sweep
+
+
+def bench_streaming_deep(quick: bool = False) -> tuple[list[Row], dict]:
+    """End-to-end deep-rank streaming schedule: PR-2 path vs block-native.
+
+    Both walks use the same numpy placement backend and produce the
+    identical winner/rank (asserted); the PR-2 baseline pays the Python
+    heap + per-row combo materialisation, the block-native path streams
+    ComboBlock arrays on the adaptive ramp with pipelined dispatch.  The
+    JSON gets the per-phase WalkStats breakdown and the ramp sizes.
+    """
+    tasks, fleet = _deep_instance(quick)
+    sched = PADPSFRScheduler(fleet, exhaustive=False)
+
+    stats = WalkStats()
+    res = sched.schedule(tasks, walk_stats=stats)
+
+    def block_native():
+        return sched.schedule(tasks)
+
+    def pr2_path():
+        return select_lowest_power_batched(
+            iter_feasible_pruned(tasks, fleet), tasks, fleet, block_size=4096
+        )
+
+    # The parity assertions above warm both walks once; both are then
+    # median-of-3 so the published speedup is symmetrically measured.
+    combo_old, _, rank_old, _ = pr2_path()
+    assert res.feasible and rank_old == res.chosen_rank and combo_old == res.combo
+    us_new = timeit(block_native, repeat=3, warmup=0)
+    us_old = timeit(pr2_path, repeat=3, warmup=0)
+    tag = f"{len(tasks)}t{tasks[0].nv}v_rank{res.chosen_rank}"
+    rows = [
+        Row(
+            f"padpsfr_stream_pr2path_{tag}",
+            us_old,
+            f"rank={rank_old};python-heap + per-row combos",
+        ),
+        Row(
+            f"padpsfr_stream_blocknative_{tag}",
+            us_new,
+            f"rank={res.chosen_rank};speedup={us_old / us_new:.1f}x",
+        ),
+    ]
+    streaming = {
+        "instance": tag,
+        "chosen_rank": res.chosen_rank,
+        "rows_walked": stats.rows,
+        "pr2_us": us_old,
+        "blocknative_us": us_new,
+        "speedup": us_old / us_new,
+        "phase_breakdown": stats.as_dict(),
+    }
+    return rows, streaming
+
+
 def bench_hetero_fleet(quick: bool = False) -> list[Row]:
     """End-to-end PADPS-FR on mixed FPGA/GPU/CPU fleets at growing sizes."""
     rows = []
@@ -277,7 +454,16 @@ def main(argv: list[str] | None = None) -> int:
         if args.backends
         else None
     )
-    rows = [] if args.sweep_only else bench_scheduler_scale(quick=args.quick)
+    enum_sweep: dict = {}
+    streaming: dict = {}
+    if args.sweep_only:
+        rows = []
+    else:
+        rows = bench_scheduler_scale(quick=args.quick)
+        enum_rows, enum_sweep = bench_enumeration_sweep(quick=args.quick)
+        rows.extend(enum_rows)
+        stream_rows, streaming = bench_streaming_deep(quick=args.quick)
+        rows.extend(stream_rows)
     sweep_rows, sweep = bench_backend_sweep(quick=args.quick, backends=backends)
     rows.extend(sweep_rows)
     for row in rows:
@@ -292,6 +478,8 @@ def main(argv: list[str] | None = None) -> int:
                     "benchmark": "scheduler_scale",
                     "rows": payload,
                     "backend_sweep": sweep,
+                    "enumeration_sweep": enum_sweep,
+                    "streaming": streaming,
                 },
                 fh,
                 indent=2,

@@ -4,9 +4,11 @@
 
 from .task import DeviceProfile, FleetSpec, Task, TaskSetCombo, TaskVariant, combo_count
 from .feasibility import (
+    ComboBlock,
     FeasibilityResult,
     config_overhead_lower_bound,
     iter_feasible_pruned,
+    iter_feasible_pruned_blocks,
     outer_sum,
     search_feasible,
 )
@@ -24,6 +26,8 @@ from .placement_batched import BatchPlacement, place_batch, place_combos_batch
 from .scheduler import (
     PADPSFRScheduler,
     ScheduleResult,
+    WalkStats,
+    block_ramp,
     select_lowest_power,
     select_lowest_power_batched,
 )
@@ -45,9 +49,11 @@ __all__ = [
     "TaskSetCombo",
     "TaskVariant",
     "combo_count",
+    "ComboBlock",
     "FeasibilityResult",
     "config_overhead_lower_bound",
     "iter_feasible_pruned",
+    "iter_feasible_pruned_blocks",
     "outer_sum",
     "search_feasible",
     "DataSplit",
@@ -68,6 +74,8 @@ __all__ = [
     "place_combos_batch",
     "PADPSFRScheduler",
     "ScheduleResult",
+    "WalkStats",
+    "block_ramp",
     "select_lowest_power",
     "select_lowest_power_batched",
     "SweepPoint",

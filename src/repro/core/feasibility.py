@@ -7,7 +7,7 @@ workability condition (eq. 7)
 
 and partitions TSS into TFS (fit) / TNFS (not fit).
 
-Two engines are provided:
+Three engines are provided:
 
 * ``search_feasible`` — the paper's exhaustive enumeration, vectorised:
   the sum-of-shares over the Cartesian product is an outer-sum computed
@@ -17,13 +17,25 @@ Two engines are provided:
 * ``iter_feasible_pruned`` — branch-and-bound enumeration in ascending
   power order that never materialises TSS; used when ``prod(nv_i)`` is
   too large to hold (the paper's algorithm is O(prod nv_i) memory).
+* ``iter_feasible_pruned_blocks`` — the same search, block-native: the
+  frontier lives in numpy arrays and whole power-ordered
+  :class:`ComboBlock` batches come out at once, ready for a placement
+  backend's ``place_block`` — no per-row heap pushes or
+  :class:`TaskSetCombo` objects on the hot path.
+
+All three engines emit the TFS in the *same* total order — ascending
+total power, exact-power ties broken by TSS flat (C-order) index — so
+the scheduler's chosen rank and reject counts are engine-independent
+even when distinct combos share a power value.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
-from typing import Iterator, Sequence
+import itertools
+from typing import Iterable, Iterator, Sequence
 
 import numpy as np
 
@@ -31,8 +43,10 @@ from .task import FleetSpec, Task, TaskSetCombo, combo_count, validate_tasks
 
 __all__ = [
     "FeasibilityResult",
+    "ComboBlock",
     "search_feasible",
     "iter_feasible_pruned",
+    "iter_feasible_pruned_blocks",
     "outer_sum",
     "config_overhead_lower_bound",
 ]
@@ -88,8 +102,9 @@ class FeasibilityResult:
     def tfs_indices_by_power(self) -> np.ndarray:
         """Flat indices of TFS rows, ascending total power (Alg 2 line 1).
 
-        Ties are broken by ascending sum-of-shares then flat index so the
-        ordering is deterministic.
+        Exact-power ties are broken by ascending flat (C-order TSS) index
+        — the stable sort below — so the ordering is deterministic and
+        matches the streamed engines (``iter_feasible_pruned*``) exactly.
         """
         tfs = np.flatnonzero(self.fit_mask)
         # Stable sort: ties broken by TSS enumeration (flat-index) order,
@@ -106,11 +121,29 @@ def outer_sum(vectors: Sequence[np.ndarray]) -> np.ndarray:
     """Sum over the Cartesian product of 1-D vectors, returned flat (C order).
 
     outer_sum([a, b, c])[i*len(b)*len(c) + j*len(c) + k] == a[i]+b[j]+c[k]
+
+    The result buffer is allocated once at its final ``prod(len(v))`` size
+    and each level accumulates in place through a strided view, so peak
+    memory is one f64 output array (the old broadcast-per-level fold held
+    the previous level alive while materialising the next — up to 1.5x
+    the output at the last level).  The accumulation order is the same
+    left-to-right fold, so results are bit-identical.
     """
-    acc = np.zeros((1,), dtype=np.float64)
-    for v in vectors:
-        acc = (acc[:, None] + np.asarray(v, dtype=np.float64)[None, :]).reshape(-1)
-    return acc
+    sizes = [np.asarray(v).shape[0] for v in vectors]
+    total = int(np.prod(sizes, dtype=np.int64)) if sizes else 1
+    out = np.zeros(total, dtype=np.float64)
+    if total == 0:
+        return out  # a zero-length factor: the Cartesian product is empty
+    stride = total
+    for level, v in enumerate(vectors):
+        v = np.asarray(v, dtype=np.float64)
+        stride //= v.shape[0]
+        view = out.reshape(-1, v.shape[0], stride)
+        if level == 0:
+            view[...] = v[None, :, None]
+        else:
+            view += v[None, :, None]
+    return out
 
 
 def config_overhead_lower_bound(
@@ -199,6 +232,50 @@ def search_feasible(tasks: Sequence[Task], fleet: FleetSpec) -> FeasibilityResul
     )
 
 
+def _suffix_min_bounds(vecs: Sequence[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    """Suffix minima plus a strictly-admissible float underestimate.
+
+    ``suf[d]`` is the minimum achievable sum over tasks ``d..n_t-1``
+    (backward cumsum of per-task minima).  Prefix sums accumulate
+    *forward*, so ``suf`` can exceed the true forward-folded completion
+    sum by a few ulps of association error — enough to break best-first
+    pop order or prune an on-the-boundary leaf.  ``lo`` subtracts a
+    relative margin dwarfing any accumulated rounding, making
+    ``prefix + lo[d]`` a certain lower bound on every completion; the
+    margin is orders of magnitude below the 1e-9 eq-7 tolerance, so it
+    admits no spurious rows.  ``lo[n_t] == 0.0`` exactly: leaf-depth
+    checks and priorities stay bit-identical to the exhaustive engine's.
+    """
+    mins = np.asarray([v.min() for v in vecs], dtype=np.float64)
+    suf = np.concatenate([np.cumsum(mins[::-1])[::-1], [0.0]])
+    lo = suf - (np.abs(suf) + 1.0) * 1e-12
+    lo[-1] = 0.0
+    return suf, lo
+
+
+def _scalar_overhead_lb(fleet: FleetSpec, n_t: int, extra_cfgs: int = 1):
+    """Scalar-call twin of :func:`config_overhead_lower_bound`.
+
+    Precomputes the capacity/cfg cumsums once and answers single-``W``
+    queries with a bisect — bit-identical to the vectorised version (same
+    float64 operations in the same order), cheap enough for the per-node
+    pushes of the Python heap enumerator.
+    """
+    cap_desc = np.sort(fleet.t_slr_arr)[::-1]
+    cfg_asc = np.sort(fleet.t_cfg_arr)
+    cfg_min = float(cfg_asc[0]) if cfg_asc.size else 0.0
+    cum_cap = np.cumsum(cap_desc).tolist()
+    cum_cfg = np.concatenate([[0.0], np.cumsum(cfg_asc)]).tolist()
+    m = n_t + extra_cfgs
+    n_f = fleet.n_f
+
+    def overhead(w: float) -> float:
+        d = min(bisect.bisect_left(cum_cap, w - 1e-9) + 1, n_f)
+        return cum_cfg[d] + max(m - d, 0) * cfg_min
+
+    return overhead
+
+
 def iter_feasible_pruned(
     tasks: Sequence[Task], fleet: FleetSpec
 ) -> Iterator[TaskSetCombo]:
@@ -206,12 +283,20 @@ def iter_feasible_pruned(
 
     Best-first search over the variant lattice: each frontier node fixes the
     variant of a prefix of tasks; its priority is its exact prefix power plus
-    the minimum achievable power of the suffix.  A node is pruned when its
+    a certain lower bound on the suffix power.  A node is pruned when its
     prefix share plus the minimum achievable suffix share already violates
-    eq. 7 — the branch-and-bound step.  Memory is O(frontier), not O(|TSS|).
+    eq. 7, and — on heterogeneous fleets — when the capacity-aware min-cost
+    device-cover refinement (:func:`config_overhead_lower_bound`) already
+    rejects every completion; both prefix bounds are exact at leaf depth,
+    so the streamed TFS equals the exhaustive ``fit_mask`` row set.
+    Memory is O(frontier), not O(|TSS|).
 
-    This is the engine behind fleet-scale scheduling (hundreds of jobs x
-    dozens of variants) where the paper's exhaustive TSS is intractable.
+    Exact-power ties are broken by the chosen variant-index tuple
+    (lexicographic == TSS flat C order), so the emission order matches
+    :meth:`FeasibilityResult.tfs_indices_by_power` combo for combo.
+
+    This is the reference engine for fleet-scale scheduling; the block
+    walk uses the vectorised :func:`iter_feasible_pruned_blocks`.
     """
     tasks = tuple(tasks)
     validate_tasks(tasks)
@@ -220,52 +305,368 @@ def iter_feasible_pruned(
 
     shares = [t.shares(fleet.t_slr) for t in tasks]
     powers = [t.powers() for t in tasks]
-    # Per-task variant order by power (for monotone sibling expansion) and
-    # suffix minima for bounds.
-    order = [np.argsort(p, kind="stable") for p in powers]
-    min_pow = np.array([p.min() for p in powers])
-    min_shr = np.array([s.min() for s in shares])
-    suf_min_pow = np.concatenate([np.cumsum(min_pow[::-1])[::-1], [0.0]])
-    suf_min_shr = np.concatenate([np.cumsum(min_shr[::-1])[::-1], [0.0]])
-
-    # Node: (priority, tiebreak, depth, chosen tuple, prefix_pow, prefix_shr,
-    #        rank) where rank is the index into order[depth] *to try next*.
-    heap: list = []
-    counter = 0
-
-    def push(depth: int, chosen: tuple[int, ...], ppow: float, pshr: float) -> None:
-        nonlocal counter
-        if pshr + suf_min_shr[depth] > budget + 1e-9:
-            return  # bound: no completion can satisfy eq. 7
-        prio = ppow + suf_min_pow[depth]
-        heapq.heappush(heap, (prio, counter, depth, chosen, ppow, pshr))
-        counter += 1
+    _, suf_pow_lo = _suffix_min_bounds(powers) if n_t else (None, np.zeros(1))
+    _, suf_shr_lo = _suffix_min_bounds(shares) if n_t else (None, np.zeros(1))
 
     hetero = fleet.is_heterogeneous
     capacity = fleet.capacity
+    overhead_lb = _scalar_overhead_lb(fleet, n_t) if hetero else None
+
+    # Node: (priority, chosen tuple, depth, prefix_pow, prefix_shr).  The
+    # chosen tuple is the tiebreak: a prefix sorts before its extensions
+    # and full-length tuples compare in TSS flat order, which (with the
+    # strictly-admissible priorities) makes the pop order of leaves the
+    # exact (total_power, flat_index) order of the materialised TFS.
+    heap: list = []
+
+    def push(depth: int, chosen: tuple[int, ...], ppow: float, pshr: float) -> None:
+        w_min = pshr + suf_shr_lo[depth]
+        if w_min > budget + 1e-9:
+            return  # bound: no completion can satisfy eq. 7
+        if hetero and w_min > capacity - overhead_lb(w_min) + 1e-9:
+            return  # bound: the eq-7 device-cover refinement rejects all
+        heapq.heappush(heap, (ppow + suf_pow_lo[depth], chosen, depth, ppow, pshr))
 
     push(0, (), 0.0, 0.0)
     while heap:
-        _, _, depth, chosen, ppow, pshr = heapq.heappop(heap)
+        _, chosen, depth, ppow, pshr = heapq.heappop(heap)
         if depth == n_t:
-            # Leaf filter: heterogeneous fleets apply the same per-class
-            # eq-7 refinement as search_feasible, so the streamed TFS is
-            # identical to the exhaustive fit_mask (same rejects/ranks).
-            if hetero:
-                overhead = config_overhead_lower_bound(
-                    fleet, n_t, np.asarray([pshr])
-                )[0]
-                if pshr > capacity - overhead + 1e-9:
-                    continue
+            # Both prefix bounds were exact at leaf depth (zero suffix),
+            # so every popped leaf is a genuine TFS row.
             shr = tuple(float(shares[k][j]) for k, j in enumerate(chosen))
             pw = tuple(float(powers[k][j]) for k, j in enumerate(chosen))
             yield TaskSetCombo(chosen, shr, pw)
             continue
-        for rank in range(tasks[depth].nv):
-            j = int(order[depth][rank])
+        for j in range(tasks[depth].nv):
             push(
                 depth + 1,
                 chosen + (j,),
                 ppow + float(powers[depth][j]),
                 pshr + float(shares[depth][j]),
             )
+
+
+@dataclasses.dataclass
+class ComboBlock:
+    """A block of power-ordered TFS rows as arrays — the streaming twin of
+    :meth:`FeasibilityResult.shares_matrix` over a slice of
+    :meth:`FeasibilityResult.tfs_indices_by_power`.
+
+    ``shares`` feeds a placement backend's ``place_block`` whole; a
+    :class:`TaskSetCombo` is materialised (``materialize(row)``) only for
+    the single winning row, exactly like the exhaustive block walk.
+    """
+
+    variant_idx: np.ndarray  # (B, n_t) int64 — variant choice per task
+    shares: np.ndarray  # (B, n_t) float64 — eq-5 shares, task-major
+    total_power: np.ndarray  # (B,) float64 — bit-identical to outer_sum rows
+    _share_vecs: tuple = dataclasses.field(default=(), repr=False)
+    _power_vecs: tuple = dataclasses.field(default=(), repr=False)
+
+    def __len__(self) -> int:
+        return int(self.variant_idx.shape[0])
+
+    def materialize(self, row: int) -> TaskSetCombo:
+        idx = self.variant_idx[row]
+        shr = tuple(float(v[j]) for v, j in zip(self._share_vecs, idx))
+        pw = tuple(float(v[j]) for v, j in zip(self._power_vecs, idx))
+        return TaskSetCombo(tuple(int(j) for j in idx), shr, pw)
+
+
+class _Frontier:
+    """Struct-of-arrays frontier with O(popped) pops and amortised appends.
+
+    Rows live in capacity-doubling buffers; ``pop_smallest`` extracts the
+    M cheapest rows (argpartition on the float bound only) and refills the
+    holes with rows swapped in from the tail, so a pop copies O(M) rows —
+    not the whole frontier, which made tiny-block walks quadratic.
+    Frontier-internal row order is irrelevant: emission order is decided
+    by the exact leaf keys, the bound only gates it.
+    """
+
+    def __init__(self, n_t: int, cap: int = 1024) -> None:
+        self.n = 0
+        self._n_t = n_t
+        self.bound = np.empty(cap)
+        self.ppow = np.empty(cap)
+        self.pshr = np.empty(cap)
+        self.depth = np.empty(cap, dtype=np.int64)
+        self.chosen = np.empty((cap, n_t), dtype=np.int64)
+
+    def _grow(self, need: int) -> None:
+        cap = self.bound.shape[0]
+        if self.n + need <= cap:
+            return
+        new_cap = max(cap * 2, self.n + need)
+        for name in ("bound", "ppow", "pshr", "depth"):
+            arr = getattr(self, name)
+            buf = np.empty(new_cap, dtype=arr.dtype)
+            buf[: self.n] = arr[: self.n]
+            setattr(self, name, buf)
+        buf = np.empty((new_cap, self._n_t), dtype=np.int64)
+        buf[: self.n] = self.chosen[: self.n]
+        self.chosen = buf
+
+    def append(self, bound, ppow, pshr, depth: int, chosen) -> None:
+        m = bound.shape[0]
+        self._grow(m)
+        lo, hi = self.n, self.n + m
+        self.bound[lo:hi] = bound
+        self.ppow[lo:hi] = ppow
+        self.pshr[lo:hi] = pshr
+        self.depth[lo:hi] = depth
+        self.chosen[lo:hi] = chosen
+        self.n = hi
+
+    def min_bound(self) -> float:
+        return float(self.bound[: self.n].min()) if self.n else np.inf
+
+    def pop_smallest(self, m: int):
+        n = self.n
+        m = min(m, n)
+        if m == n:
+            sel = np.arange(n)
+        else:
+            sel = np.argpartition(self.bound[:n], m - 1)[:m]
+        out = (
+            self.ppow[sel].copy(),
+            self.pshr[sel].copy(),
+            self.depth[sel].copy(),
+            self.chosen[sel].copy(),
+        )
+        if m < n:
+            # Swap tail rows into the popped holes: O(m), order-agnostic.
+            in_tail = sel >= n - m
+            holes = sel[~in_tail]
+            tail_keep = np.ones(m, dtype=bool)
+            tail_keep[sel[in_tail] - (n - m)] = False
+            tail = (n - m) + np.flatnonzero(tail_keep)
+            self.bound[holes] = self.bound[tail]
+            self.ppow[holes] = self.ppow[tail]
+            self.pshr[holes] = self.pshr[tail]
+            self.depth[holes] = self.depth[tail]
+            self.chosen[holes] = self.chosen[tail]
+        self.n = n - m
+        return out
+
+
+def _sort_emission(pp: np.ndarray, ch: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Order an emission run by ``(total_power, flat TSS index)``.
+
+    Stable argsort on the float powers, then a lexicographic
+    variant-index fixup applied only to runs of *exactly* equal power —
+    so the common no-tie case never pays an n_t-key lexsort.
+    """
+    order = np.argsort(pp, kind="stable")
+    pp, ch = pp[order], ch[order]
+    eq = pp[1:] == pp[:-1]
+    if eq.any():
+        n_t = ch.shape[1]
+        starts = np.flatnonzero(np.concatenate([[True], ~eq]))
+        ends = np.append(starts[1:], pp.size)
+        for a, b in zip(starts, ends):
+            if b - a > 1:
+                sub = ch[a:b]
+                o = np.lexsort(tuple(sub[:, k] for k in range(n_t - 1, -1, -1)))
+                ch[a:b] = sub[o]
+    return pp, ch
+
+
+def _drain_chunks(
+    chunks: list[tuple[np.ndarray, np.ndarray]], n: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pop exactly ``n`` rows off the front of a list of (pp, chosen) runs."""
+    pp_parts, ch_parts, got = [], [], 0
+    while got < n:
+        pp, ch = chunks[0]
+        need = n - got
+        if pp.size <= need:
+            pp_parts.append(pp)
+            ch_parts.append(ch)
+            got += pp.size
+            chunks.pop(0)
+        else:
+            pp_parts.append(pp[:need])
+            ch_parts.append(ch[:need])
+            chunks[0] = (pp[need:], ch[need:])
+            got = n
+    return np.concatenate(pp_parts), np.concatenate(ch_parts, axis=0)
+
+
+def _size_stream(block_sizes: int | Iterable[int] | None) -> Iterator[int]:
+    """Normalise a block-size spec into an endless iterator of sizes."""
+    if block_sizes is None:
+        block_sizes = 4096
+    if isinstance(block_sizes, int):
+        if block_sizes < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_sizes}")
+        return itertools.repeat(block_sizes)
+
+    def gen():
+        last = None
+        for s in block_sizes:
+            s = int(s)
+            if s < 1:
+                raise ValueError(f"block_size must be >= 1, got {s}")
+            last = s
+            yield s
+        if last is None:
+            raise ValueError("block_sizes iterable produced no sizes")
+        while True:
+            yield last
+
+    return gen()
+
+
+def iter_feasible_pruned_blocks(
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    block_sizes: int | Iterable[int] | None = None,
+    *,
+    min_expand: int = 16384,
+) -> Iterator[ComboBlock]:
+    """Yield the TFS as power-ordered :class:`ComboBlock` array batches.
+
+    The same best-first branch-and-bound search as
+    :func:`iter_feasible_pruned`, vectorised: the frontier is a
+    struct-of-arrays (priority, prefix power/share, depth, chosen-index
+    matrix) and every round pops the cheapest nodes *in bulk*
+    (``argpartition``), expands each depth group with one broadcast add
+    per task, and prunes children with the vectorised eq-7 prefix bounds
+    — including the heterogeneous capacity-aware device-cover refinement
+    of :func:`config_overhead_lower_bound`, which shrinks the TFS every
+    placement backend has to scan.  Completed rows buffer until no
+    frontier node could still produce a cheaper row, then come out
+    lexsorted by ``(total_power, flat_index)`` — the exact
+    :meth:`FeasibilityResult.tfs_indices_by_power` order, asserted
+    combo-for-combo in ``tests/test_block_enumeration.py``.
+
+    ``block_sizes`` is an int, an iterable (e.g. the scheduler's
+    geometric ramp — early blocks small so a shallow winner stops the
+    walk cheaply, later blocks large to amortise dispatch), or None for
+    a constant 4096.  The final block may be short.
+    """
+    tasks = tuple(tasks)
+    validate_tasks(tasks)
+    n_t = len(tasks)
+    budget = fleet.workable_budget(n_t)
+    share_vecs = tuple(t.shares(fleet.t_slr) for t in tasks)
+    power_vecs = tuple(t.powers() for t in tasks)
+    hetero = fleet.is_heterogeneous
+    capacity = fleet.capacity
+    sizes = _size_stream(block_sizes)
+
+    def build_block(pp: np.ndarray, ch: np.ndarray) -> ComboBlock:
+        if n_t:
+            shr = np.stack(
+                [share_vecs[k][ch[:, k]] for k in range(n_t)], axis=1
+            )
+        else:
+            shr = np.zeros((pp.shape[0], 0), dtype=np.float64)
+        return ComboBlock(
+            variant_idx=ch,
+            shares=shr,
+            total_power=pp,
+            _share_vecs=share_vecs,
+            _power_vecs=power_vecs,
+        )
+
+    def passes(w: np.ndarray) -> np.ndarray:
+        ok = w <= budget + 1e-9
+        if hetero and ok.any():
+            overhead = config_overhead_lower_bound(fleet, n_t, w)
+            ok &= ~(w > capacity - overhead + 1e-9)
+        return ok
+
+    if n_t == 0:
+        # The empty task set has exactly one (empty) combo.
+        if passes(np.zeros(1))[0]:
+            yield build_block(np.zeros(1), np.zeros((1, 0), dtype=np.int64))
+        return
+
+    _, pow_lo = _suffix_min_bounds(power_vecs)
+    _, shr_lo = _suffix_min_bounds(share_vecs)
+
+    # Frontier: internal nodes only.  ``chosen`` columns beyond a node's
+    # depth are 0 and ignored.
+    if not passes(np.asarray([0.0 + shr_lo[0]]))[0]:
+        return
+    frontier = _Frontier(n_t)
+    frontier.append(
+        np.asarray([0.0 + pow_lo[0]]),
+        np.zeros(1),
+        np.zeros(1),
+        0,
+        np.zeros((1, n_t), dtype=np.int64),
+    )
+
+    # Completed rows buffer as (pp, chosen) chunks until emittable; the
+    # cheap min-per-chunk cache gates the common nothing-to-emit rounds.
+    leaf_chunks: list[tuple[np.ndarray, np.ndarray]] = []
+    leaf_min = np.inf
+    ready: list[tuple[np.ndarray, np.ndarray]] = []  # sorted emission runs
+    n_ready = 0
+    want = next(sizes)
+
+    while frontier.n:
+        # Pop the cheapest M frontier nodes (bulk best-first step).
+        M = int(min(frontier.n, max(want, min_expand)))
+        pop_ppow, pop_pshr, pop_depth, pop_chosen = frontier.pop_smallest(M)
+
+        for d in np.unique(pop_depth):
+            d = int(d)
+            g = pop_depth == d
+            nv = tasks[d].nv
+            # One broadcast add per (depth group, task): child prefixes.
+            ppow_c = (pop_ppow[g][:, None] + power_vecs[d][None, :]).ravel()
+            pshr_c = (pop_pshr[g][:, None] + share_vecs[d][None, :]).ravel()
+            chosen_c = np.repeat(pop_chosen[g], nv, axis=0)
+            chosen_c[:, d] = np.tile(
+                np.arange(nv, dtype=np.int64), int(g.sum())
+            )
+            ok = passes(pshr_c + shr_lo[d + 1])
+            if not ok.any():
+                continue
+            ppow_c, pshr_c, chosen_c = ppow_c[ok], pshr_c[ok], chosen_c[ok]
+            if d + 1 == n_t:
+                leaf_chunks.append((ppow_c, chosen_c))
+                leaf_min = min(leaf_min, float(ppow_c.min()))
+            else:
+                frontier.append(
+                    ppow_c + pow_lo[d + 1], ppow_c, pshr_c, d + 1, chosen_c
+                )
+
+        # A buffered leaf is emittable once every remaining frontier node's
+        # (strictly admissible) bound exceeds its exact power: no cheaper
+        # row can appear later, so the emission order is final.
+        fmin = frontier.min_bound()
+        if leaf_min < fmin:
+            leaf_pp = np.concatenate([c[0] for c in leaf_chunks])
+            leaf_ch = np.concatenate([c[1] for c in leaf_chunks], axis=0)
+            emit = leaf_pp < fmin
+            ready.append(_sort_emission(leaf_pp[emit], leaf_ch[emit]))
+            n_ready += int(emit.sum())
+            held = ~emit
+            if held.any():
+                leaf_chunks = [(leaf_pp[held], leaf_ch[held])]
+                leaf_min = float(leaf_pp[held].min())
+            else:
+                leaf_chunks = []
+                leaf_min = np.inf
+        while n_ready >= want:
+            pp, ch = _drain_chunks(ready, want)
+            n_ready -= want
+            yield build_block(pp, ch)
+            want = next(sizes)
+
+    if leaf_chunks:
+        leaf_pp = np.concatenate([c[0] for c in leaf_chunks])
+        leaf_ch = np.concatenate([c[1] for c in leaf_chunks], axis=0)
+        ready.append(_sort_emission(leaf_pp, leaf_ch))
+        n_ready += leaf_pp.size
+    while n_ready:
+        take = min(want, n_ready)
+        pp, ch = _drain_chunks(ready, take)
+        n_ready -= take
+        yield build_block(pp, ch)
+        want = next(sizes)

@@ -20,6 +20,42 @@ the arithmetic replays the same float64 operations in the same order
 paper's worked examples (Figs 2-4) and randomized heterogeneous fleets in
 ``tests/test_placement_backends.py``.
 
+Block-enumeration handoff contract
+----------------------------------
+
+The walk (``repro.core.scheduler._walk_tfs_blocks``) feeds backends whole
+blocks of *power-ordered* TFS rows and owns all winner/rank/reject
+bookkeeping; a backend only ever sees a shares matrix.  The two block
+producers are interchangeable by construction:
+
+* exhaustive — ``FeasibilityResult.shares_matrix`` gathers a slice of
+  ``tfs_indices_by_power()``;
+* streaming — ``feasibility.iter_feasible_pruned_blocks`` yields
+  :class:`repro.core.feasibility.ComboBlock` batches straight from the
+  vectorized branch-and-bound frontier.
+
+Both emit the same total order (ascending total power, exact ties by TSS
+flat index) and the same float64 share values, so a backend's verdicts —
+and therefore the chosen rank — cannot depend on which producer ran or on
+how the stream was chopped into blocks.  Block sizes follow the walk's
+geometric ramp (``scheduler.block_ramp``); a backend must accept any
+``B >= 1`` and may not carry state between blocks.
+
+Asynchronous dispatch (optional)
+--------------------------------
+
+A backend may additionally expose::
+
+    dispatch_block(shares, iis, t_slr, t_cfg, opts) -> () -> BatchPlacement
+
+which *enqueues* the sweep and returns a zero-argument resolver that
+blocks until the verdicts are back.  ``dispatch_block(...)()`` must be
+indistinguishable from ``place_block(...)`` — same arrays, same bits.
+The walk uses it to double-buffer: block k+1 is enqueued while block k
+syncs, hiding enumeration and host↔device latency behind the sweep (jax
+and pallas dispatch asynchronously; eager backends simply omit the hook
+and the walk falls back to ``place_block``).
+
 Registering a new backend
 -------------------------
 
@@ -126,7 +162,13 @@ class PlacementBackend(Protocol):
         t_cfg: np.ndarray,
         opts: PlacementOptions | None = None,
     ) -> BatchPlacement:
-        """Place every row of a ``(B, n_t)`` shares block on the fleet."""
+        """Place every row of a ``(B, n_t)`` shares block on the fleet.
+
+        Backends with asynchronous execution may also implement
+        ``dispatch_block`` (same signature, returns a zero-arg resolver)
+        — see the module docstring's handoff contract; the walk
+        double-buffers through it when present.
+        """
         ...
 
     @classmethod

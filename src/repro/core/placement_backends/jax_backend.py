@@ -16,6 +16,12 @@ is untouched.
 Block shapes are padded to the next power of two, bounding recompilation
 to O(log B) specializations per (n_t, n_f) topology; padded rows are
 sliced off before the verdicts leave the backend.
+
+``dispatch_block`` exposes jax's async dispatch to the scheduler walk:
+the jit'd sweep is *enqueued* and a resolver returned; converting the
+outputs to numpy (the only blocking step) happens when the walk calls
+it, one block later — so enumeration of block k+1 overlaps the device
+sweep of block k (double buffering, see ``base.py``).
 """
 
 from __future__ import annotations
@@ -68,19 +74,26 @@ class JaxPlacementBackend:
             return False
         return True
 
-    def place_block(
+    def dispatch_block(
         self,
         shares: np.ndarray,
         iis: np.ndarray,
         t_slr: np.ndarray,
         t_cfg: np.ndarray,
         opts: PlacementOptions | None = None,
-    ) -> BatchPlacement:
+    ):
+        """Enqueue the jit'd sweep; the returned resolver syncs verdicts.
+
+        The outputs stay on-device until the resolver runs, so callers
+        can overlap enumeration/dispatch of the next block with this
+        one's execution (see the ``dispatch_block`` contract in
+        ``base.py``).
+        """
         shares, iis, t_slr_arr, t_cfg_arr, opts, early = prepare_block(
             shares, iis, t_slr, t_cfg, opts
         )
         if early is not None:
-            return early
+            return lambda: early
         from jax.experimental import enable_x64
 
         B = shares.shape[0]
@@ -89,7 +102,7 @@ class JaxPlacementBackend:
             shares = np.pad(shares, ((0, Bp - B), (0, 0)))
         sweep = _jitted_sweep()
         with enable_x64():
-            feasible, placed, n_splits, devices_used = sweep(
+            outs = sweep(
                 shares,
                 iis,
                 t_slr_arr,
@@ -97,10 +110,24 @@ class JaxPlacementBackend:
                 np.float64(opts.resume_cost),
                 repay_init=opts.repay_init,
             )
-            out = [np.asarray(a)[:B] for a in (feasible, placed, n_splits, devices_used)]
-        return BatchPlacement(
-            feasible=out[0].astype(bool),
-            placed_tasks=out[1].astype(np.int64),
-            n_splits=out[2].astype(np.int64),
-            devices_used=out[3].astype(np.int64),
-        )
+
+        def resolve() -> BatchPlacement:
+            out = [np.asarray(a)[:B] for a in outs]
+            return BatchPlacement(
+                feasible=out[0].astype(bool),
+                placed_tasks=out[1].astype(np.int64),
+                n_splits=out[2].astype(np.int64),
+                devices_used=out[3].astype(np.int64),
+            )
+
+        return resolve
+
+    def place_block(
+        self,
+        shares: np.ndarray,
+        iis: np.ndarray,
+        t_slr: np.ndarray,
+        t_cfg: np.ndarray,
+        opts: PlacementOptions | None = None,
+    ) -> BatchPlacement:
+        return self.dispatch_block(shares, iis, t_slr, t_cfg, opts)()

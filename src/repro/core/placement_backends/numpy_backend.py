@@ -24,6 +24,12 @@ two engines agree bit-for-bit — asserted on the paper's worked examples
 Heterogeneity is native: capacities ``t_slr_j`` and reconfiguration costs
 ``t_cfg_j`` are per-device gathers, so mixed FPGA/GPU/CPU fleets
 (:class:`repro.core.power.DeviceClass`) cost nothing extra.
+
+This backend is deliberately eager — it computes in the caller's thread,
+so it does not implement the optional ``dispatch_block`` hook (see the
+handoff contract in ``base.py``); the scheduler walk falls back to
+``place_block`` and runs unpipelined, which is the right call when the
+"device" is the host CPU itself.
 """
 
 from __future__ import annotations

@@ -45,19 +45,26 @@ class PallasPlacementBackend:
             return False
         return True
 
-    def place_block(
+    def dispatch_block(
         self,
         shares: np.ndarray,
         iis: np.ndarray,
         t_slr: np.ndarray,
         t_cfg: np.ndarray,
         opts: PlacementOptions | None = None,
-    ) -> BatchPlacement:
+    ):
+        """Enqueue the fused kernel; the returned resolver syncs verdicts.
+
+        On TPU the pallas_call dispatches asynchronously like any jit'd
+        computation, so the walk's double buffering overlaps the next
+        block's enumeration with this sweep; in interpret mode execution
+        is eager and the resolver just repackages (see ``base.py``).
+        """
         shares, iis, t_slr_arr, t_cfg_arr, opts, early = prepare_block(
             shares, iis, t_slr, t_cfg, opts
         )
         if early is not None:
-            return early
+            return lambda: early
         import contextlib
 
         from jax.experimental import enable_x64
@@ -76,7 +83,7 @@ class PallasPlacementBackend:
         else:
             precision_ctx = enable_x64()
         with precision_ctx:
-            feasible, placed, n_splits, devices_used = placement_sweep(
+            outs = placement_sweep(
                 shares,
                 iis,
                 t_slr_arr,
@@ -85,10 +92,24 @@ class PallasPlacementBackend:
                 repay_init=opts.repay_init,
                 block_rows=self.block_rows,
             )
-            out = [np.asarray(a) for a in (feasible, placed, n_splits, devices_used)]
-        return BatchPlacement(
-            feasible=out[0].astype(bool),
-            placed_tasks=out[1].astype(np.int64),
-            n_splits=out[2].astype(np.int64),
-            devices_used=out[3].astype(np.int64),
-        )
+
+        def resolve() -> BatchPlacement:
+            out = [np.asarray(a) for a in outs]
+            return BatchPlacement(
+                feasible=out[0].astype(bool),
+                placed_tasks=out[1].astype(np.int64),
+                n_splits=out[2].astype(np.int64),
+                devices_used=out[3].astype(np.int64),
+            )
+
+        return resolve
+
+    def place_block(
+        self,
+        shares: np.ndarray,
+        iis: np.ndarray,
+        t_slr: np.ndarray,
+        t_cfg: np.ndarray,
+        opts: PlacementOptions | None = None,
+    ) -> BatchPlacement:
+        return self.dispatch_block(shares, iis, t_slr, t_cfg, opts)()

@@ -4,7 +4,9 @@ Routes every row of the block through the exact Alg-2/Alg-3 placement
 simulation (:func:`repro.core.placement.place_shares`), which is the
 ground truth all vectorized backends must agree with bit-for-bit.  It is
 O(B) Python round-trips and exists for verification and tiny fleets, not
-for throughput.
+for throughput.  Eager by nature, it omits the optional
+``dispatch_block`` hook (``base.py``): pipelining a synchronous oracle
+would only reorder the Python work it is meant to pin down.
 """
 
 from __future__ import annotations

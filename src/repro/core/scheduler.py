@@ -8,20 +8,36 @@ the TFS in vectorized blocks through a pluggable placement backend
 ``"batched"``) is the zero-dependency block engine, ``"jax"`` a jit'd
 ``lax.while_loop`` sweep, ``"pallas"`` the fused single-kernel sweep,
 ``"scalar"`` the exact one-row-at-a-time oracle, and ``"auto"`` the best
-available.  Block handoff is array-native end to end:
-``feasibility.shares_matrix`` gathers each block and the backend consumes
-it whole — no per-row host round-trips.  The facade bundles
+available.
+
+Block handoff is array-native end to end: the exhaustive path gathers
+blocks with :meth:`FeasibilityResult.shares_matrix`, the streaming path
+pulls whole :class:`repro.core.feasibility.ComboBlock` batches from the
+vectorized branch-and-bound enumerator
+(:func:`repro.core.feasibility.iter_feasible_pruned_blocks`) — no per-row
+heap pushes or ``TaskSetCombo`` objects until the single winning row.
+Blocks follow a geometric size ramp (:func:`block_ramp`) so early-winner
+instances stop after a few cheap small blocks, and backends exposing
+``dispatch_block`` (jax/pallas) are double-buffered: block k+1 is
+enqueued while block k's verdict syncs back.  The facade bundles
 Alg 1 + Alg 2 + Alg 3 and reports the statistics the paper quotes
 (|TSS|, |TFS|, |TNFS|, placement rejects, chosen index).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
+import time
 from typing import Iterable, Iterator, Sequence
 
-from .feasibility import FeasibilityResult, iter_feasible_pruned, search_feasible
+from .feasibility import (
+    FeasibilityResult,
+    iter_feasible_pruned,
+    iter_feasible_pruned_blocks,
+    search_feasible,
+)
 from .placement import PlacementPlan, place_combo
 from .placement_backends import (
     PlacementBackend,
@@ -33,12 +49,72 @@ from .task import FleetSpec, Task, TaskSetCombo, combo_count
 
 __all__ = [
     "ScheduleResult",
+    "WalkStats",
+    "block_ramp",
     "select_lowest_power",
     "select_lowest_power_batched",
     "PADPSFRScheduler",
 ]
 
 DEFAULT_BLOCK_SIZE = 4096
+
+# Adaptive walk defaults: early blocks small so a shallow winner exits
+# after a few cheap dispatches, late blocks large so deep walks amortise
+# per-block overhead (enumeration, padding, device round-trips).
+RAMP_START = 64
+RAMP_CAP = 65536
+RAMP_FACTOR = 8
+
+# How many blocks may be in flight at once when the backend supports
+# asynchronous dispatch: one syncing + one enqueued (double buffering).
+PIPELINE_DEPTH = 2
+
+
+def block_ramp(
+    start: int = RAMP_START, cap: int = RAMP_CAP, factor: int = RAMP_FACTOR
+) -> Iterator[int]:
+    """Geometric block-size schedule: ``start``, growing ×``factor`` to
+    ``cap``, then ``cap`` forever."""
+    size = start
+    while True:
+        yield size
+        size = min(size * factor, cap)
+
+
+@dataclasses.dataclass
+class WalkStats:
+    """Per-phase wall-clock breakdown of one Alg-2 block walk.
+
+    ``enumerate_us`` is time producing blocks (Alg-1 streaming or TFS
+    gathers), ``place_us`` time enqueueing backend sweeps,
+    ``sync_us`` time waiting for verdicts to come back, and
+    ``materialize_us`` the winning row's scalar plan.  ``block_sizes``
+    records the adaptive ramp actually dispatched.
+    """
+
+    enumerate_us: float = 0.0
+    place_us: float = 0.0
+    sync_us: float = 0.0
+    materialize_us: float = 0.0
+    rows: int = 0
+    block_sizes: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_us(self) -> float:
+        return (
+            self.enumerate_us + self.place_us + self.sync_us + self.materialize_us
+        )
+
+    def as_dict(self) -> dict:
+        return {
+            "enumerate_us": self.enumerate_us,
+            "place_us": self.place_us,
+            "sync_us": self.sync_us,
+            "materialize_us": self.materialize_us,
+            "rows": self.rows,
+            "n_blocks": len(self.block_sizes),
+            "block_sizes": list(self.block_sizes),
+        }
 
 
 @dataclasses.dataclass
@@ -110,15 +186,18 @@ def select_lowest_power_batched(
     count_all_rejects: bool = False,
     block_size: int = DEFAULT_BLOCK_SIZE,
     backend: str | PlacementBackend = "numpy",
+    walk_stats: WalkStats | None = None,
     **placement_kw,
 ) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
     """Alg 2 over vectorized TFS blocks — same contract as
     :func:`select_lowest_power`.
 
-    Blocks of ``block_size`` power-sorted rows go through the placement
-    backend at once; the first feasible row wins and its full per-device
-    plan comes from the scalar oracle (bit-identical by construction,
-    asserted in tests).
+    Chops a per-row :class:`TaskSetCombo` stream into fixed blocks for the
+    placement backend.  This is the pre-block-native streaming path (one
+    Python object per TFS row); the scheduler facade now feeds the walk
+    from :func:`repro.core.feasibility.iter_feasible_pruned_blocks`
+    instead, which skips the per-row objects entirely — this entry point
+    remains for external combo streams and as the benchmark baseline.
     """
     if block_size < 1:
         raise ValueError(f"block_size must be >= 1, got {block_size}")
@@ -138,6 +217,7 @@ def select_lowest_power_batched(
         fleet,
         backend=backend,
         count_all_rejects=count_all_rejects,
+        walk_stats=walk_stats,
         **placement_kw,
     )
 
@@ -150,17 +230,23 @@ def _walk_tfs_blocks(
     *,
     backend: str | PlacementBackend,
     count_all_rejects: bool,
+    walk_stats: WalkStats | None = None,
     **placement_kw,
 ) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
-    """Shared Alg-2 walk over batched TFS blocks.
+    """Shared Alg-2 walk over batched TFS blocks, pipelined.
 
     ``block_iter`` yields ``(shares_rows, ref)`` pairs (a (B, n_t)
     array-like plus an opaque block reference); ``materialize(ref, row)``
     produces the winning row's :class:`TaskSetCombo`.  Winner/rank/reject
     bookkeeping lives only here — backend-agnostic by construction — so
-    no two engines can drift apart.  ``backend`` is an engine name (or a
-    ready :class:`PlacementBackend`); each block goes to
-    ``backend.place_block`` as one shares matrix, no per-row host work.
+    no two engines can drift apart.
+
+    Dispatch is double-buffered: each block is enqueued via the backend's
+    ``dispatch_block`` (see :mod:`repro.core.placement_backends.base`;
+    asynchronous on jax/pallas, eager elsewhere) and its verdict resolved
+    only once the next block is in flight, so enumeration and device
+    sweeps overlap.  Blocks resolve strictly in rank order, so the
+    bookkeeping is identical to the synchronous walk.
     """
     if isinstance(backend, str):
         backend = get_backend(backend)
@@ -168,30 +254,87 @@ def _walk_tfs_blocks(
     t_slr_arr = fleet.t_slr_arr
     t_cfg_arr = fleet.t_cfg_arr
     opts = PlacementOptions(**placement_kw)
+    stats = walk_stats if walk_stats is not None else WalkStats()
+    dispatch = getattr(backend, "dispatch_block", None)
+    # Eager backends compute at dispatch time, so holding a second block
+    # in flight would only enumerate/place one ramp-larger block past the
+    # winner for nothing; depth > 1 pays off only with async dispatch.
+    depth = PIPELINE_DEPTH if dispatch is not None else 1
+    now = time.perf_counter
+
     rejects = 0
     winner: tuple[TaskSetCombo, PlacementPlan, int] | None = None
     rank_base = 0
-    for shares, ref in block_iter:
-        bp = backend.place_block(shares, iis, t_slr_arr, t_cfg_arr, opts)
-        n_rows = bp.feasible.shape[0]
+    # (resolve, ref, rank_base, n_rows) for blocks enqueued but not synced.
+    pending: collections.deque = collections.deque()
+
+    def resolve_oldest() -> bool:
+        """Sync the oldest in-flight block; True once the winner is known."""
+        nonlocal rejects, winner
+        resolve, ref, base, n_rows = pending.popleft()
+        t0 = now()
+        bp = resolve()
+        stats.sync_us += (now() - t0) * 1e6
         if winner is None:
             r = bp.first_feasible()
             if r >= 0:
+                t0 = now()
                 combo = materialize(ref, r)
                 plan = place_combo(combo, tasks, fleet, **placement_kw)
-                winner = (combo, plan, rank_base + r)
+                stats.materialize_us += (now() - t0) * 1e6
+                winner = (combo, plan, base + r)
                 rejects += r  # rows before the first feasible are all rejects
-                if not count_all_rejects:
-                    break
-                rejects += int((~bp.feasible[r:]).sum())
-            else:
-                rejects += n_rows
+                if count_all_rejects:
+                    rejects += int((~bp.feasible[r:]).sum())
+                return True
+            rejects += n_rows
         else:
             rejects += int((~bp.feasible).sum())
+        return winner is not None
+
+    stream = iter(block_iter)
+    while True:
+        t0 = now()
+        item = next(stream, None)
+        stats.enumerate_us += (now() - t0) * 1e6
+        if item is None:
+            break
+        shares, ref = item
+        n_rows = len(shares)
+        t0 = now()
+        if dispatch is not None:
+            resolve = dispatch(shares, iis, t_slr_arr, t_cfg_arr, opts)
+        else:
+            bp = backend.place_block(shares, iis, t_slr_arr, t_cfg_arr, opts)
+            resolve = lambda bp=bp: bp  # noqa: E731 — eager backends
+        stats.place_us += (now() - t0) * 1e6
+        stats.rows += n_rows
+        stats.block_sizes.append(n_rows)
+        pending.append((resolve, ref, rank_base, n_rows))
         rank_base += n_rows
+        while len(pending) >= depth:
+            if resolve_oldest() and not count_all_rejects:
+                # Later in-flight blocks hold strictly higher-rank rows;
+                # their verdicts are irrelevant once the winner is known.
+                pending.clear()
+                break
+        if winner is not None and not count_all_rejects:
+            break
+    while pending:
+        if resolve_oldest() and not count_all_rejects:
+            pending.clear()
     if winner is None:
         return None, None, -1, rejects
     return winner[0], winner[1], winner[2], rejects
+
+
+def _block_size_schedule(block_size: int | None) -> Iterator[int]:
+    """The walk's block sizes: a fixed size, or the geometric ramp."""
+    if block_size is None:
+        return block_ramp()
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    return itertools.repeat(block_size)
 
 
 def _select_from_feasibility(
@@ -200,8 +343,9 @@ def _select_from_feasibility(
     fleet: FleetSpec,
     *,
     count_all_rejects: bool = False,
-    block_size: int = DEFAULT_BLOCK_SIZE,
+    block_size: int | None = DEFAULT_BLOCK_SIZE,
     backend: str | PlacementBackend = "numpy",
+    walk_stats: WalkStats | None = None,
     **placement_kw,
 ) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
     """Fast exhaustive path: batched sweeps over flat TFS indices.
@@ -210,13 +354,14 @@ def _select_from_feasibility(
     each block is one fancy-indexed shares-matrix gather
     (:meth:`FeasibilityResult.shares_matrix`) handed whole to the backend.
     """
-    if block_size < 1:
-        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    sizes = _block_size_schedule(block_size)
     order = feas.tfs_indices_by_power()
 
     def blocks():
-        for lo in range(0, order.size, block_size):
-            idx = order[lo : lo + block_size]
+        lo = 0
+        while lo < order.size:
+            idx = order[lo : lo + next(sizes)]
+            lo += idx.size
             yield feas.shares_matrix(idx), idx
 
     return _walk_tfs_blocks(
@@ -226,6 +371,41 @@ def _select_from_feasibility(
         fleet,
         backend=backend,
         count_all_rejects=count_all_rejects,
+        walk_stats=walk_stats,
+        **placement_kw,
+    )
+
+
+def _select_streaming_blocks(
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    *,
+    count_all_rejects: bool = False,
+    block_size: int | None = None,
+    backend: str | PlacementBackend = "numpy",
+    walk_stats: WalkStats | None = None,
+    **placement_kw,
+) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
+    """Streaming path: block-native branch-and-bound feeding the walk.
+
+    :func:`iter_feasible_pruned_blocks` yields whole power-ordered
+    :class:`ComboBlock` batches (arrays, no per-row objects); only the
+    winning row is materialised as a :class:`TaskSetCombo`.
+    """
+    sizes = _block_size_schedule(block_size)
+
+    def blocks():
+        for blk in iter_feasible_pruned_blocks(tasks, fleet, sizes):
+            yield blk.shares, blk
+
+    return _walk_tfs_blocks(
+        blocks(),
+        lambda blk, r: blk.materialize(r),
+        tasks,
+        fleet,
+        backend=backend,
+        count_all_rejects=count_all_rejects,
+        walk_stats=walk_stats,
         **placement_kw,
     )
 
@@ -236,15 +416,21 @@ class PADPSFRScheduler:
     The paper's contribution as a reusable component: construct with a
     :class:`FleetSpec`, call :meth:`schedule` with the periodic task set.
     ``exhaustive=None`` auto-selects the vectorised exhaustive engine for
-    small variant products and the branch-and-bound streaming engine for
-    large ones.  ``engine`` selects the placement backend through the
-    registry (:mod:`repro.core.placement_backends`): ``"scalar"``,
-    ``"numpy"`` (default; alias ``"batched"``), ``"jax"``, ``"pallas"``,
-    or ``"auto"`` for the best available.  ``"scalar"`` runs the paper's
-    row-at-a-time walk (:func:`select_lowest_power`) directly — early
-    exit at the winner, bookkeeping independent of the block walk — so
-    scalar-vs-block parity tests cross-check two separate Alg-2
-    implementations.
+    small variant products and the block-native branch-and-bound streaming
+    engine for large ones.  ``engine`` selects the placement backend
+    through the registry (:mod:`repro.core.placement_backends`):
+    ``"scalar"``, ``"numpy"`` (default; alias ``"batched"``), ``"jax"``,
+    ``"pallas"``, or ``"auto"`` for the best available.  ``"scalar"``
+    runs the paper's row-at-a-time walk (:func:`select_lowest_power`)
+    directly — early exit at the winner, bookkeeping independent of the
+    block walk — so scalar-vs-block parity tests cross-check two separate
+    Alg-2 implementations.
+
+    ``block_size=None`` (the default) walks the TFS on the geometric
+    ramp (:func:`block_ramp`): instances whose winner sits in the first
+    few rows never pay full-block enumeration or dispatch latency, while
+    deep walks grow to ``RAMP_CAP``-row blocks.  Pass an int to pin a
+    fixed block size; results are invariant either way.
     """
 
     def __init__(
@@ -254,9 +440,9 @@ class PADPSFRScheduler:
         exhaustive: bool | None = None,
         exhaustive_limit: int = 2_000_000,
         engine: str = "numpy",
-        block_size: int = DEFAULT_BLOCK_SIZE,
+        block_size: int | None = None,
     ) -> None:
-        if block_size < 1:
+        if block_size is not None and block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         self.fleet = fleet
         self.exhaustive = exhaustive
@@ -268,34 +454,32 @@ class PADPSFRScheduler:
     def feasibility(self, tasks: Sequence[Task]) -> FeasibilityResult:
         return search_feasible(tasks, self.fleet)
 
-    def _combo_stream(
-        self, tasks: Sequence[Task]
-    ) -> tuple[Iterator[TaskSetCombo], FeasibilityResult | None]:
-        n = combo_count(tasks)
-        use_exhaustive = (
-            self.exhaustive
-            if self.exhaustive is not None
-            else n <= self.exhaustive_limit
-        )
-        if use_exhaustive:
-            feas = search_feasible(tasks, self.fleet)
-            return feas.iter_tfs_by_power(), feas
-        return iter_feasible_pruned(tasks, self.fleet), None
+    def _use_exhaustive(self, tasks: Sequence[Task]) -> bool:
+        if self.exhaustive is not None:
+            return self.exhaustive
+        return combo_count(tasks) <= self.exhaustive_limit
 
     def schedule(
         self,
         tasks: Sequence[Task],
         *,
         count_all_rejects: bool = False,
+        walk_stats: WalkStats | None = None,
         **placement_kw,
     ) -> ScheduleResult:
         tasks = tuple(tasks)
-        stream, feas = self._combo_stream(tasks)
+        use_exhaustive = self._use_exhaustive(tasks)
+        feas = search_feasible(tasks, self.fleet) if use_exhaustive else None
         if self.engine == "scalar":
             # The paper's walk as written: one scalar simulation per row
             # with early exit at the winner, and winner/rank/reject
             # bookkeeping entirely independent of _walk_tfs_blocks — this
             # is what the cross-engine parity tests pin the block walk to.
+            stream: Iterator[TaskSetCombo] = (
+                feas.iter_tfs_by_power()
+                if feas is not None
+                else iter_feasible_pruned(tasks, self.fleet)
+            )
             combo, plan, rank, rejects = select_lowest_power(
                 stream,
                 tasks,
@@ -311,16 +495,17 @@ class PADPSFRScheduler:
                 count_all_rejects=count_all_rejects,
                 block_size=self.block_size,
                 backend=self._backend,
+                walk_stats=walk_stats,
                 **placement_kw,
             )
         else:
-            combo, plan, rank, rejects = select_lowest_power_batched(
-                stream,
+            combo, plan, rank, rejects = _select_streaming_blocks(
                 tasks,
                 self.fleet,
                 count_all_rejects=count_all_rejects,
                 block_size=self.block_size,
                 backend=self._backend,
+                walk_stats=walk_stats,
                 **placement_kw,
             )
         n_tss = combo_count(tasks)

@@ -8,6 +8,8 @@ references directly (``repro.models`` uses ``ExecConfig.attn_impl``).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from . import ref
@@ -19,7 +21,10 @@ from .ssd_scan import ssd_scan_pallas
 __all__ = ["flash_attention", "ssd_scan", "rglru_scan", "placement_sweep", "on_tpu"]
 
 
+@functools.cache
 def on_tpu() -> bool:
+    # Cached: the placement walk probes this once per dispatched block and
+    # the default backend cannot change within a process.
     return jax.default_backend() == "tpu"
 
 
@@ -88,7 +93,12 @@ def placement_sweep(
 ):
     """Fused Alg-2 TFS-block placement sweep (Pallas on TPU, interpret
     elsewhere).  Oracle: ``ref.placement_sweep_ref``; the scheduler-facing
-    entry is ``repro.core.placement_backends`` (engine="pallas")."""
+    entry is ``repro.core.placement_backends`` (engine="pallas").
+
+    Returns device arrays without forcing a sync: like any jit'd call the
+    kernel dispatches asynchronously, and only converting the outputs to
+    numpy blocks — which is what the backend's ``dispatch_block`` resolver
+    defers until the next block is already in flight."""
     return placement_sweep_pallas(
         shares, iis, t_slr, t_cfg,
         resume_cost=resume_cost, repay_init=repay_init, block_rows=block_rows,

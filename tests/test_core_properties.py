@@ -15,7 +15,9 @@ from repro.core import (
     Task,
     TaskVariant,
     combo_count,
+    config_overhead_lower_bound,
     iter_feasible_pruned,
+    iter_feasible_pruned_blocks,
     outer_sum,
     place_batch,
     place_combo,
@@ -84,14 +86,32 @@ def test_tfs_tnfs_partition_tss(tasks, fleet):
 @settings(max_examples=30, deadline=None)
 @given(tasks=tasks_strategy(max_tasks=4), fleet=fleets)
 def test_pruned_iterator_matches_exhaustive(tasks, fleet):
-    """Branch-and-bound stream == power-sorted TFS of the exhaustive engine."""
+    """Branch-and-bound stream == power-sorted TFS of the exhaustive
+    engine, combo for combo — including exact-power tie order."""
     feas = search_feasible(tasks, fleet)
-    exhaustive = [c.total_power for c in feas.iter_tfs_by_power()]
-    pruned = [c.total_power for c in iter_feasible_pruned(tasks, fleet)]
-    assert len(exhaustive) == len(pruned)
-    np.testing.assert_allclose(sorted(exhaustive), sorted(pruned), rtol=1e-12)
-    # both ascending by power
-    assert all(a <= b + 1e-9 for a, b in zip(pruned, pruned[1:]))
+    exhaustive = list(feas.iter_tfs_by_power())
+    pruned = list(iter_feasible_pruned(tasks, fleet))
+    assert pruned == exhaustive
+    # ascending by power
+    powers = [c.total_power for c in pruned]
+    assert all(a <= b + 1e-9 for a, b in zip(powers, powers[1:]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    tasks=tasks_strategy(max_tasks=4),
+    fleet=fleets,
+    block_size=st.sampled_from([1, 3, 64, 4096]),
+)
+def test_block_enumerator_matches_exhaustive(tasks, fleet, block_size):
+    """The vectorized block enumerator emits the exhaustive power-sorted
+    TFS exactly, for any block size."""
+    feas = search_feasible(tasks, fleet)
+    exhaustive = list(feas.iter_tfs_by_power())
+    streamed = []
+    for blk in iter_feasible_pruned_blocks(tasks, fleet, block_size):
+        streamed.extend(blk.materialize(r) for r in range(len(blk)))
+    assert streamed == exhaustive
 
 
 @settings(max_examples=30, deadline=None)
@@ -220,6 +240,31 @@ def test_batched_engine_matches_scalar_oracle(tasks, fleet):
     assert rb.total_power == rs.total_power
     if rb.feasible:
         assert rb.combo == rs.combo
+
+
+@settings(max_examples=60, deadline=None)
+@given(tasks=tasks_strategy(max_tasks=4), fleet=hetero_fleets)
+def test_tightened_eq7_bound_never_prunes_placeable_combo(tasks, fleet):
+    """Soundness of the capacity-aware min-cost device-cover refinement:
+    with ``extra_cfgs=0`` (the strict necessary condition) every combo the
+    bound rejects is truly unplaceable by the scalar Alg-2/3 oracle.
+
+    (The enumerators apply the default ``extra_cfgs=1`` charge — the
+    paper's own one-split allowance, identical to the exhaustive
+    ``search_feasible`` filter; exactness of that equivalence is covered
+    by ``test_block_enumerator_matches_exhaustive`` above.)
+    """
+    feas = search_feasible(tasks, fleet)
+    overhead = config_overhead_lower_bound(
+        fleet, len(tasks), feas.sum_shr, extra_cfgs=0
+    )
+    rejected = np.flatnonzero(feas.sum_shr > fleet.capacity - overhead + 1e-9)
+    for idx in rejected[:64]:
+        combo = feas.combo_at(int(idx))
+        plan = place_combo(combo, tasks, fleet)
+        assert not plan.feasible, (
+            f"strict eq-7 refinement pruned placeable combo {combo.variant_idx}"
+        )
 
 
 @settings(max_examples=40, deadline=None)
