@@ -19,7 +19,13 @@
   (heap + per-row combos through ``select_lowest_power_batched``) and
   by the block-native pipeline — with the per-phase WalkStats
   breakdown (enumerate / place / sync / materialize) and the adaptive
-  block-ramp sizes recorded in the JSON artifact.
+  block-ramp sizes recorded in the JSON artifact;
+* delta replanning (service steady state): a task arrives on the
+  deep-rank instance after an exhaustively recorded solve — warm
+  ``replan()`` (recorded verdicts + resumable frontier) vs cold
+  ``schedule()`` of the extended set, bit-identity asserted, cold/warm
+  microseconds and the speedup recorded as ``replan_cold_*`` /
+  ``replan_warm_*`` rows plus a ``replan`` JSON section.
 
 CLI (the CI benchmark-smoke job):
 
@@ -63,6 +69,7 @@ __all__ = [
     "bench_backend_sweep",
     "bench_enumeration_sweep",
     "bench_streaming_deep",
+    "bench_replan",
     "main",
 ]
 
@@ -364,6 +371,86 @@ def bench_streaming_deep(quick: bool = False) -> tuple[list[Row], dict]:
     return rows, streaming
 
 
+def bench_replan(quick: bool = False) -> tuple[list[Row], dict]:
+    """Service steady state: warm delta replan vs cold ``schedule()``.
+
+    The deep-rank streaming instance is solved once with exhaustive
+    recording (``record_state=True, record_exhaustive=True`` — the
+    service layer's first solve, every TFS row gets a placement
+    verdict), then a light task arrives.  The warm replan reuses the
+    recorded verdicts (reject monotonicity skips dispatch for every
+    recorded reject) and must produce a plan bit-identical to a cold
+    ``schedule()`` of the extended set — asserted here, not just
+    claimed.  Acceptance: warm ≥ 10x under cold on the full instance.
+    """
+    tasks, fleet = _deep_instance(quick)
+    sched = PADPSFRScheduler(fleet, exhaustive=False)
+
+    def record():
+        return sched.schedule(tasks, record_state=True, record_exhaustive=True)
+
+    rec = record()
+    state = rec.plan_state
+    arrival = Task(
+        name="arrival",
+        period=10.0,
+        data=25.0,
+        init_interval=0.5,
+        variants=(
+            TaskVariant(cu=1, throughput=5.0, power=1.0),
+            TaskVariant(cu=2, throughput=10.0, power=2.5),
+        ),
+    )
+    extended = list(tasks) + [arrival]
+
+    warm_res = sched.replan(state, extended)
+    cold_res = sched.schedule(extended)
+    identical = (
+        warm_res.feasible == cold_res.feasible
+        and warm_res.chosen_rank == cold_res.chosen_rank
+        and warm_res.n_placement_rejects == cold_res.n_placement_rejects
+        and warm_res.total_power == cold_res.total_power
+        and (
+            not cold_res.feasible
+            or (
+                warm_res.combo.variant_idx == cold_res.combo.variant_idx
+                and str(warm_res.plan) == str(cold_res.plan)
+            )
+        )
+    )
+    assert identical, "warm replan diverged from cold schedule"
+
+    us_record = timeit(record, repeat=1, warmup=0)
+    us_warm = timeit(lambda: sched.replan(state, extended), repeat=3, warmup=0)
+    us_cold = timeit(lambda: sched.schedule(extended), repeat=3, warmup=0)
+    tag = f"{len(extended)}t_arrival_rank{cold_res.chosen_rank}"
+    speedup = us_cold / us_warm
+    rows = [
+        Row(
+            f"replan_cold_{tag}",
+            us_cold,
+            f"rank={cold_res.chosen_rank};from-scratch schedule()",
+        ),
+        Row(
+            f"replan_warm_{tag}",
+            us_warm,
+            f"rank={warm_res.chosen_rank};speedup={speedup:.1f}x"
+            f";bit_identical={identical}",
+        ),
+    ]
+    replan_summary = {
+        "instance": tag,
+        "chosen_rank": cold_res.chosen_rank,
+        "record_us": us_record,
+        "cold_us": us_cold,
+        "warm_us": us_warm,
+        "speedup": speedup,
+        "bit_identical": identical,
+        "recorded_rows": state.n_recorded,
+    }
+    return rows, replan_summary
+
+
 def bench_hetero_fleet(quick: bool = False) -> list[Row]:
     """End-to-end PADPS-FR on mixed FPGA/GPU/CPU fleets at growing sizes."""
     rows = []
@@ -456,6 +543,7 @@ def main(argv: list[str] | None = None) -> int:
     )
     enum_sweep: dict = {}
     streaming: dict = {}
+    replan_summary: dict = {}
     if args.sweep_only:
         rows = []
     else:
@@ -464,6 +552,8 @@ def main(argv: list[str] | None = None) -> int:
         rows.extend(enum_rows)
         stream_rows, streaming = bench_streaming_deep(quick=args.quick)
         rows.extend(stream_rows)
+        replan_rows, replan_summary = bench_replan(quick=args.quick)
+        rows.extend(replan_rows)
     sweep_rows, sweep = bench_backend_sweep(quick=args.quick, backends=backends)
     rows.extend(sweep_rows)
     for row in rows:
@@ -480,6 +570,7 @@ def main(argv: list[str] | None = None) -> int:
                     "backend_sweep": sweep,
                     "enumeration_sweep": enum_sweep,
                     "streaming": streaming,
+                    "replan": replan_summary,
                 },
                 fh,
                 indent=2,

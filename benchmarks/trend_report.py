@@ -70,11 +70,21 @@ def trend(datas: list[dict], labels: list[str]) -> dict:
         (d.get("backend_sweep") or {}).get("numpy_jax_crossover_rows")
         for d in datas
     ]
+    # Cold-vs-warm replan rows arrived with the service layer; artifacts
+    # from older runs simply don't have them — record None, never raise.
+    replan = {
+        key: [(d.get("replan") or {}).get(key) for d in datas]
+        for key in ("cold_us", "warm_us", "speedup")
+    }
+    replan["missing_files"] = [
+        lb for lb, d in zip(labels, datas) if not d.get("replan")
+    ]
     return {
         "files": labels,
         "rows": rows,
         "backend_rows_per_s": sweep_series,
         "numpy_jax_crossover_rows": crossovers,
+        "replan": replan,
     }
 
 
@@ -115,6 +125,31 @@ def render(t: dict) -> str:
         xs = [x for x in t["numpy_jax_crossover_rows"] if x is not None]
         if xs:
             out.append(f"numpy<->jax crossover (rows): {t['numpy_jax_crossover_rows']}")
+    replan = t.get("replan") or {}
+    if any(v is not None for v in replan.get("speedup", [])):
+        out.append("")
+        out.append("delta replan (warm arrival vs cold schedule):")
+        for key in ("cold_us", "warm_us"):
+            cells = " ".join(f"{_fmt(v):>14}" for v in replan[key])
+            out.append(f"{'replan ' + key:<24} {cells}")
+        cells = " ".join(
+            f"{_fmt(v, 'x'):>14}" if v is not None else f"{'-':>14}"
+            for v in replan["speedup"]
+        )
+        out.append(f"{'replan speedup':<24} {cells}")
+        if replan.get("missing_files"):
+            out.append(
+                "note: no replan rows in "
+                + ", ".join(replan["missing_files"])
+                + " (artifact predates the delta-replan benchmark; "
+                "re-run benchmarks.scheduler_scale to record them)"
+            )
+    elif replan.get("missing_files"):
+        out.append("")
+        out.append(
+            "delta replan: no artifact carries replan rows yet "
+            "(all predate the delta-replan benchmark) — skipped"
+        )
     return "\n".join(out)
 
 

@@ -1,0 +1,76 @@
+"""Scheduler-as-a-service: a day in the life of a fleet under churn.
+
+A data center doesn't call ``schedule()`` once — it sees a continuous
+stream of task arrivals, exits, and device failures.  This demo drives
+:class:`repro.service.SchedulerService` through such a trace and prints
+the per-event telemetry: which latency tier handled each event
+(``admission`` filter / plan ``cache`` / ``warm`` delta replan /
+``general`` re-solve), how long it took, and what the live plan looks
+like afterwards.
+
+The service records exhaustive replan state on each solve, so a task
+arrival warm-starts the Alg-1 walk from the previous plan (surviving
+branch-and-bound frontier + previous winner as incumbent bound) instead
+of re-enumerating — see ``docs/architecture.md`` ("the replan
+lifecycle") and ``benchmarks/scheduler_scale.py`` for the cold-vs-warm
+numbers.
+
+Run:  PYTHONPATH=src python examples/service_demo.py
+"""
+
+from repro.core import FleetSpec, Task, TaskVariant
+from repro.service import DeviceFailure, SchedulerService, TaskArrival, TaskExit
+
+
+def _task(name, period, data, ii, *variants):
+    return Task(
+        name=name, period=period, data=data, init_interval=ii,
+        variants=tuple(TaskVariant(cu=1, throughput=t, power=p)
+                       for t, p in variants),
+    )
+
+
+def main() -> int:
+    fleet = FleetSpec(n_f=3, t_slr=30.0, t_cfg=1.0, name="pod-0")
+    svc = SchedulerService(fleet, engine="numpy")
+
+    trace = [
+        TaskArrival(_task("cam0", 10.0, 20.0, 1.0, (2.0, 5.0), (4.0, 8.0))),
+        TaskArrival(_task("fft", 10.0, 40.0, 1.0, (4.0, 4.0), (8.0, 6.0))),
+        TaskArrival(_task("crypt", 10.0, 30.0, 1.0, (6.0, 3.0), (12.0, 9.0))),
+        # hopeless demand: rejected by the closed-form eq-7 admission filter
+        TaskArrival(_task("giant", 10.0, 9000.0, 1.0, (2.0, 1.0))),
+        TaskExit("crypt"),
+        # same task set as two events ago -> plan-cache hit
+        TaskArrival(_task("crypt", 10.0, 30.0, 1.0, (6.0, 3.0), (12.0, 9.0))),
+        DeviceFailure(),
+        TaskExit("cam0"),
+    ]
+
+    print(f"fleet: {fleet.n_f} devices, t_slr={fleet.t_slr}, t_cfg={fleet.t_cfg}")
+    print()
+    hdr = f"{'event':<22} {'tier':<10} {'ok':<4} {'ms':>8}  outcome"
+    print(hdr)
+    print("-" * len(hdr))
+    for ev in trace:
+        tel = svc.replay([ev])[0]
+        if tel.admitted and tel.feasible:
+            outcome = (f"power={tel.total_power:.1f} rank={tel.chosen_rank} "
+                       f"({tel.n_tasks} tasks)")
+        elif tel.admitted:
+            outcome = "accepted, no feasible plan"
+        else:
+            outcome = f"rejected: {tel.reason}"
+        print(f"{tel.event:<22} {tel.path:<10} {str(tel.admitted):<4} "
+              f"{tel.latency_s * 1e3:>8.2f}  {outcome}")
+
+    print()
+    print(f"final fleet: {svc.fleet.n_f} device(s); "
+          f"tasks: {[t.name for t in svc.tasks]}")
+    if svc.plan is not None and svc.plan.feasible:
+        print(svc.plan.summary(list(svc.tasks)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

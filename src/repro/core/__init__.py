@@ -4,6 +4,7 @@
 
 from .task import DeviceProfile, FleetSpec, Task, TaskSetCombo, TaskVariant, combo_count
 from .feasibility import (
+    BlockEnumerator,
     ComboBlock,
     FeasibilityResult,
     config_overhead_lower_bound,
@@ -23,6 +24,7 @@ from .placement_backends import (
     resolve_engine,
 )
 from .placement_batched import BatchPlacement, place_batch, place_combos_batch
+from .replan import PlanState
 from .scheduler import (
     PADPSFRScheduler,
     ScheduleResult,
@@ -49,6 +51,7 @@ __all__ = [
     "TaskSetCombo",
     "TaskVariant",
     "combo_count",
+    "BlockEnumerator",
     "ComboBlock",
     "FeasibilityResult",
     "config_overhead_lower_bound",
@@ -72,6 +75,7 @@ __all__ = [
     "resolve_engine",
     "place_batch",
     "place_combos_batch",
+    "PlanState",
     "PADPSFRScheduler",
     "ScheduleResult",
     "WalkStats",

@@ -44,6 +44,7 @@ from .task import FleetSpec, Task, TaskSetCombo, combo_count, validate_tasks
 __all__ = [
     "FeasibilityResult",
     "ComboBlock",
+    "BlockEnumerator",
     "search_feasible",
     "iter_feasible_pruned",
     "iter_feasible_pruned_blocks",
@@ -355,11 +356,16 @@ class ComboBlock:
     ``shares`` feeds a placement backend's ``place_block`` whole; a
     :class:`TaskSetCombo` is materialised (``materialize(row)``) only for
     the single winning row, exactly like the exhaustive block walk.
+    ``sum_shr`` carries each row's left-to-right-folded total share — the
+    exact value the eq-7 leaf test saw — so a recorded walk
+    (:mod:`repro.core.replan`) can re-apply eq. 7 to row *extensions*
+    bit-identically to a cold enumeration of the extended task set.
     """
 
     variant_idx: np.ndarray  # (B, n_t) int64 — variant choice per task
     shares: np.ndarray  # (B, n_t) float64 — eq-5 shares, task-major
     total_power: np.ndarray  # (B,) float64 — bit-identical to outer_sum rows
+    sum_shr: np.ndarray | None = None  # (B,) float64 — folded eq-7 LHS
     _share_vecs: tuple = dataclasses.field(default=(), repr=False)
     _power_vecs: tuple = dataclasses.field(default=(), repr=False)
 
@@ -421,6 +427,30 @@ class _Frontier:
     def min_bound(self) -> float:
         return float(self.bound[: self.n].min()) if self.n else np.inf
 
+    def clone(self) -> "_Frontier":
+        """Independent copy (buffers trimmed to the live rows)."""
+        out = _Frontier.__new__(_Frontier)
+        out.n = self.n
+        out._n_t = self._n_t
+        cap = max(self.n, 1)
+        out.bound = self.bound[:cap].copy()
+        out.ppow = self.ppow[:cap].copy()
+        out.pshr = self.pshr[:cap].copy()
+        out.depth = self.depth[:cap].copy()
+        out.chosen = self.chosen[:cap].copy()
+        return out
+
+    def keep_where(self, mask: np.ndarray) -> None:
+        """Drop live rows where ``mask`` is False (bound-pruning on resume)."""
+        sel = np.flatnonzero(mask[: self.n])
+        m = sel.size
+        self.bound[:m] = self.bound[sel]
+        self.ppow[:m] = self.ppow[sel]
+        self.pshr[:m] = self.pshr[sel]
+        self.depth[:m] = self.depth[sel]
+        self.chosen[:m] = self.chosen[sel]
+        self.n = m
+
     def pop_smallest(self, m: int):
         n = self.n
         m = min(m, n)
@@ -450,7 +480,9 @@ class _Frontier:
         return out
 
 
-def _sort_emission(pp: np.ndarray, ch: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+def _sort_emission(
+    pp: np.ndarray, ps: np.ndarray, ch: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Order an emission run by ``(total_power, flat TSS index)``.
 
     Stable argsort on the float powers, then a lexicographic
@@ -458,7 +490,7 @@ def _sort_emission(pp: np.ndarray, ch: np.ndarray) -> tuple[np.ndarray, np.ndarr
     so the common no-tie case never pays an n_t-key lexsort.
     """
     order = np.argsort(pp, kind="stable")
-    pp, ch = pp[order], ch[order]
+    pp, ps, ch = pp[order], ps[order], ch[order]
     eq = pp[1:] == pp[:-1]
     if eq.any():
         n_t = ch.shape[1]
@@ -469,28 +501,35 @@ def _sort_emission(pp: np.ndarray, ch: np.ndarray) -> tuple[np.ndarray, np.ndarr
                 sub = ch[a:b]
                 o = np.lexsort(tuple(sub[:, k] for k in range(n_t - 1, -1, -1)))
                 ch[a:b] = sub[o]
-    return pp, ch
+                ps[a:b] = ps[a:b][o]
+    return pp, ps, ch
 
 
 def _drain_chunks(
-    chunks: list[tuple[np.ndarray, np.ndarray]], n: int
-) -> tuple[np.ndarray, np.ndarray]:
-    """Pop exactly ``n`` rows off the front of a list of (pp, chosen) runs."""
-    pp_parts, ch_parts, got = [], [], 0
+    chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray]], n: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pop exactly ``n`` rows off the front of a list of (pp, ps, chosen) runs."""
+    pp_parts, ps_parts, ch_parts, got = [], [], [], 0
     while got < n:
-        pp, ch = chunks[0]
+        pp, ps, ch = chunks[0]
         need = n - got
         if pp.size <= need:
             pp_parts.append(pp)
+            ps_parts.append(ps)
             ch_parts.append(ch)
             got += pp.size
             chunks.pop(0)
         else:
             pp_parts.append(pp[:need])
+            ps_parts.append(ps[:need])
             ch_parts.append(ch[:need])
-            chunks[0] = (pp[need:], ch[need:])
+            chunks[0] = (pp[need:], ps[need:], ch[need:])
             got = n
-    return np.concatenate(pp_parts), np.concatenate(ch_parts, axis=0)
+    return (
+        np.concatenate(pp_parts),
+        np.concatenate(ps_parts),
+        np.concatenate(ch_parts, axis=0),
+    )
 
 
 def _size_stream(block_sizes: int | Iterable[int] | None) -> Iterator[int]:
@@ -518,14 +557,9 @@ def _size_stream(block_sizes: int | Iterable[int] | None) -> Iterator[int]:
     return gen()
 
 
-def iter_feasible_pruned_blocks(
-    tasks: Sequence[Task],
-    fleet: FleetSpec,
-    block_sizes: int | Iterable[int] | None = None,
-    *,
-    min_expand: int = 16384,
-) -> Iterator[ComboBlock]:
-    """Yield the TFS as power-ordered :class:`ComboBlock` array batches.
+class BlockEnumerator:
+    """Stateful block-native TFS enumerator — the resumable core of
+    :func:`iter_feasible_pruned_blocks`.
 
     The same best-first branch-and-bound search as
     :func:`iter_feasible_pruned`, vectorised: the frontier is a
@@ -541,76 +575,166 @@ def iter_feasible_pruned_blocks(
     :meth:`FeasibilityResult.tfs_indices_by_power` order, asserted
     combo-for-combo in ``tests/test_block_enumeration.py``.
 
-    ``block_sizes`` is an int, an iterable (e.g. the scheduler's
-    geometric ramp — early blocks small so a shallow winner stops the
-    walk cheaply, later blocks large to amortise dispatch), or None for
-    a constant 4096.  The final block may be short.
-    """
-    tasks = tuple(tasks)
-    validate_tasks(tasks)
-    n_t = len(tasks)
-    budget = fleet.workable_budget(n_t)
-    share_vecs = tuple(t.shares(fleet.t_slr) for t in tasks)
-    power_vecs = tuple(t.powers() for t in tasks)
-    hetero = fleet.is_heterogeneous
-    capacity = fleet.capacity
-    sizes = _size_stream(block_sizes)
+    Being an explicit object (rather than a generator) buys the delta
+    replanner (:mod:`repro.core.replan`) two things:
 
-    def build_block(pp: np.ndarray, ch: np.ndarray) -> ComboBlock:
-        if n_t:
+    * **snapshot/restore** — :meth:`clone` copies the live frontier,
+      buffered leaves and ready runs, so a later replan can *resume* the
+      walk exactly where a previous schedule stopped instead of
+      re-enumerating the combo space from scratch;
+    * **incumbent-bound pruning** — :meth:`prune_above` installs an upper
+      bound on total power (a known-placeable plan's power): frontier
+      nodes whose admissible bound exceeds it can never produce a better
+      row and are dropped, before and during expansion.
+
+    ``next_block(want)`` returns the next ``want`` rows in emission order
+    as a :class:`ComboBlock` (short only when the walk is exhausted), or
+    ``None`` when nothing remains.
+    """
+
+    def __init__(
+        self,
+        tasks: Sequence[Task],
+        fleet: FleetSpec,
+        *,
+        min_expand: int = 16384,
+        incumbent_power: float | None = None,
+    ) -> None:
+        tasks = tuple(tasks)
+        validate_tasks(tasks)
+        self.tasks = tasks
+        self.fleet = fleet
+        self.n_t = n_t = len(tasks)
+        self.min_expand = min_expand
+        self.incumbent_power = (
+            float(incumbent_power) if incumbent_power is not None else np.inf
+        )
+        self.budget = fleet.workable_budget(n_t)
+        self.share_vecs = tuple(t.shares(fleet.t_slr) for t in tasks)
+        self.power_vecs = tuple(t.powers() for t in tasks)
+        self._hetero = fleet.is_heterogeneous
+        self._capacity = fleet.capacity
+        self.rows_emitted = 0
+
+        # Completed rows buffer as (pp, ps, chosen) chunks until emittable;
+        # the cheap min-per-chunk cache gates nothing-to-emit rounds.
+        self._leaf_chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self._leaf_min = np.inf
+        self._ready: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self._n_ready = 0
+        self._empty_set_pending = False
+
+        if n_t == 0:
+            # The empty task set has exactly one (empty) combo.
+            self._frontier = _Frontier(0)
+            self._empty_set_pending = bool(self._passes(np.zeros(1))[0]) and (
+                0.0 <= self.incumbent_power
+            )
+            return
+
+        _, self._pow_lo = _suffix_min_bounds(self.power_vecs)
+        _, self._shr_lo = _suffix_min_bounds(self.share_vecs)
+
+        # Frontier: internal nodes only.  ``chosen`` columns beyond a
+        # node's depth are 0 and ignored.
+        self._frontier = _Frontier(n_t)
+        root_bound = 0.0 + self._pow_lo[0]
+        if self._passes(np.asarray([0.0 + self._shr_lo[0]]))[0] and not (
+            root_bound > self.incumbent_power
+        ):
+            self._frontier.append(
+                np.asarray([root_bound]),
+                np.zeros(1),
+                np.zeros(1),
+                0,
+                np.zeros((1, n_t), dtype=np.int64),
+            )
+
+    # -- construction helpers ------------------------------------------------
+
+    def clone(self) -> "BlockEnumerator":
+        """Independent copy of the live search state (frontier, buffered
+        leaves, ready runs) sharing the immutable per-task arrays.  The
+        clone resumes emission exactly where this enumerator stands; the
+        original is untouched — this is the frontier snapshot a
+        :class:`repro.core.replan.PlanState` keeps between replans."""
+        out = BlockEnumerator.__new__(BlockEnumerator)
+        out.__dict__.update(self.__dict__)
+        out._frontier = self._frontier.clone()
+        # Chunk/run arrays are never mutated in place after creation, so a
+        # shallow list copy keeps the clone independent.
+        out._leaf_chunks = list(self._leaf_chunks)
+        out._ready = list(self._ready)
+        return out
+
+    def prune_above(self, incumbent_power: float) -> None:
+        """Install an incumbent upper bound on total power.
+
+        Drops every frontier node whose admissible bound — and every
+        buffered/ready row whose exact power — exceeds ``incumbent_power``;
+        subsequent expansions prune children the same way.  Rows with
+        power exactly equal to the bound are kept (the incumbent row
+        itself must still be emitted).  Sound because frontier bounds are
+        strict underestimates of any completion's power."""
+        inc = float(incumbent_power)
+        self.incumbent_power = min(self.incumbent_power, inc)
+        if self._frontier.n:
+            self._frontier.keep_where(
+                self._frontier.bound[: self._frontier.n] <= inc
+            )
+        kept_chunks = []
+        self._leaf_min = np.inf
+        for pp, ps, ch in self._leaf_chunks:
+            m = pp <= inc
+            if m.any():
+                pp, ps, ch = pp[m], ps[m], ch[m]
+                kept_chunks.append((pp, ps, ch))
+                self._leaf_min = min(self._leaf_min, float(pp.min()))
+        self._leaf_chunks = kept_chunks
+        kept_ready = []
+        self._n_ready = 0
+        for pp, ps, ch in self._ready:
+            k = int(np.searchsorted(pp, inc, side="right"))
+            if k:
+                kept_ready.append((pp[:k], ps[:k], ch[:k]))
+                self._n_ready += k
+        self._ready = kept_ready
+
+    # -- search internals ----------------------------------------------------
+
+    def _passes(self, w: np.ndarray) -> np.ndarray:
+        ok = w <= self.budget + 1e-9
+        if self._hetero and ok.any():
+            overhead = config_overhead_lower_bound(self.fleet, self.n_t, w)
+            ok &= ~(w > self._capacity - overhead + 1e-9)
+        return ok
+
+    def _build_block(
+        self, pp: np.ndarray, ps: np.ndarray, ch: np.ndarray
+    ) -> ComboBlock:
+        if self.n_t:
             shr = np.stack(
-                [share_vecs[k][ch[:, k]] for k in range(n_t)], axis=1
+                [self.share_vecs[k][ch[:, k]] for k in range(self.n_t)], axis=1
             )
         else:
             shr = np.zeros((pp.shape[0], 0), dtype=np.float64)
+        self.rows_emitted += pp.shape[0]
         return ComboBlock(
             variant_idx=ch,
             shares=shr,
             total_power=pp,
-            _share_vecs=share_vecs,
-            _power_vecs=power_vecs,
+            sum_shr=ps,
+            _share_vecs=self.share_vecs,
+            _power_vecs=self.power_vecs,
         )
 
-    def passes(w: np.ndarray) -> np.ndarray:
-        ok = w <= budget + 1e-9
-        if hetero and ok.any():
-            overhead = config_overhead_lower_bound(fleet, n_t, w)
-            ok &= ~(w > capacity - overhead + 1e-9)
-        return ok
-
-    if n_t == 0:
-        # The empty task set has exactly one (empty) combo.
-        if passes(np.zeros(1))[0]:
-            yield build_block(np.zeros(1), np.zeros((1, 0), dtype=np.int64))
-        return
-
-    _, pow_lo = _suffix_min_bounds(power_vecs)
-    _, shr_lo = _suffix_min_bounds(share_vecs)
-
-    # Frontier: internal nodes only.  ``chosen`` columns beyond a node's
-    # depth are 0 and ignored.
-    if not passes(np.asarray([0.0 + shr_lo[0]]))[0]:
-        return
-    frontier = _Frontier(n_t)
-    frontier.append(
-        np.asarray([0.0 + pow_lo[0]]),
-        np.zeros(1),
-        np.zeros(1),
-        0,
-        np.zeros((1, n_t), dtype=np.int64),
-    )
-
-    # Completed rows buffer as (pp, chosen) chunks until emittable; the
-    # cheap min-per-chunk cache gates the common nothing-to-emit rounds.
-    leaf_chunks: list[tuple[np.ndarray, np.ndarray]] = []
-    leaf_min = np.inf
-    ready: list[tuple[np.ndarray, np.ndarray]] = []  # sorted emission runs
-    n_ready = 0
-    want = next(sizes)
-
-    while frontier.n:
+    def _expand_round(self, want: int) -> None:
+        """One bulk best-first step: pop, expand, prune, gate-emit."""
+        frontier = self._frontier
+        tasks, n_t = self.tasks, self.n_t
+        inc = self.incumbent_power
         # Pop the cheapest M frontier nodes (bulk best-first step).
-        M = int(min(frontier.n, max(want, min_expand)))
+        M = int(min(frontier.n, max(want, self.min_expand)))
         pop_ppow, pop_pshr, pop_depth, pop_chosen = frontier.pop_smallest(M)
 
         for d in np.unique(pop_depth):
@@ -618,55 +742,147 @@ def iter_feasible_pruned_blocks(
             g = pop_depth == d
             nv = tasks[d].nv
             # One broadcast add per (depth group, task): child prefixes.
-            ppow_c = (pop_ppow[g][:, None] + power_vecs[d][None, :]).ravel()
-            pshr_c = (pop_pshr[g][:, None] + share_vecs[d][None, :]).ravel()
+            ppow_c = (pop_ppow[g][:, None] + self.power_vecs[d][None, :]).ravel()
+            pshr_c = (pop_pshr[g][:, None] + self.share_vecs[d][None, :]).ravel()
             chosen_c = np.repeat(pop_chosen[g], nv, axis=0)
             chosen_c[:, d] = np.tile(
                 np.arange(nv, dtype=np.int64), int(g.sum())
             )
-            ok = passes(pshr_c + shr_lo[d + 1])
+            ok = self._passes(pshr_c + self._shr_lo[d + 1])
+            if inc != np.inf:
+                # Incumbent bound: the admissible power bound (exact at
+                # leaf depth) already exceeds a known-placeable plan.
+                ok &= ppow_c + self._pow_lo[d + 1] <= inc
             if not ok.any():
                 continue
             ppow_c, pshr_c, chosen_c = ppow_c[ok], pshr_c[ok], chosen_c[ok]
             if d + 1 == n_t:
-                leaf_chunks.append((ppow_c, chosen_c))
-                leaf_min = min(leaf_min, float(ppow_c.min()))
+                self._leaf_chunks.append((ppow_c, pshr_c, chosen_c))
+                self._leaf_min = min(self._leaf_min, float(ppow_c.min()))
             else:
                 frontier.append(
-                    ppow_c + pow_lo[d + 1], ppow_c, pshr_c, d + 1, chosen_c
+                    ppow_c + self._pow_lo[d + 1], ppow_c, pshr_c, d + 1, chosen_c
                 )
 
         # A buffered leaf is emittable once every remaining frontier node's
         # (strictly admissible) bound exceeds its exact power: no cheaper
         # row can appear later, so the emission order is final.
         fmin = frontier.min_bound()
-        if leaf_min < fmin:
-            leaf_pp = np.concatenate([c[0] for c in leaf_chunks])
-            leaf_ch = np.concatenate([c[1] for c in leaf_chunks], axis=0)
+        if self._leaf_min < fmin:
+            leaf_pp = np.concatenate([c[0] for c in self._leaf_chunks])
+            leaf_ps = np.concatenate([c[1] for c in self._leaf_chunks])
+            leaf_ch = np.concatenate([c[2] for c in self._leaf_chunks], axis=0)
             emit = leaf_pp < fmin
-            ready.append(_sort_emission(leaf_pp[emit], leaf_ch[emit]))
-            n_ready += int(emit.sum())
+            self._ready.append(
+                _sort_emission(leaf_pp[emit], leaf_ps[emit], leaf_ch[emit])
+            )
+            self._n_ready += int(emit.sum())
             held = ~emit
             if held.any():
-                leaf_chunks = [(leaf_pp[held], leaf_ch[held])]
-                leaf_min = float(leaf_pp[held].min())
+                self._leaf_chunks = [
+                    (leaf_pp[held], leaf_ps[held], leaf_ch[held])
+                ]
+                self._leaf_min = float(leaf_pp[held].min())
             else:
-                leaf_chunks = []
-                leaf_min = np.inf
-        while n_ready >= want:
-            pp, ch = _drain_chunks(ready, want)
-            n_ready -= want
-            yield build_block(pp, ch)
-            want = next(sizes)
+                self._leaf_chunks = []
+                self._leaf_min = np.inf
 
-    if leaf_chunks:
-        leaf_pp = np.concatenate([c[0] for c in leaf_chunks])
-        leaf_ch = np.concatenate([c[1] for c in leaf_chunks], axis=0)
-        ready.append(_sort_emission(leaf_pp, leaf_ch))
-        n_ready += leaf_pp.size
-    while n_ready:
-        take = min(want, n_ready)
-        pp, ch = _drain_chunks(ready, take)
-        n_ready -= take
-        yield build_block(pp, ch)
+    def _flush_leaves(self) -> None:
+        if not self._leaf_chunks:
+            return
+        leaf_pp = np.concatenate([c[0] for c in self._leaf_chunks])
+        leaf_ps = np.concatenate([c[1] for c in self._leaf_chunks])
+        leaf_ch = np.concatenate([c[2] for c in self._leaf_chunks], axis=0)
+        self._ready.append(_sort_emission(leaf_pp, leaf_ps, leaf_ch))
+        self._n_ready += leaf_pp.size
+        self._leaf_chunks = []
+        self._leaf_min = np.inf
+
+    # -- emission ------------------------------------------------------------
+
+    def next_block(self, want: int) -> ComboBlock | None:
+        """The next ``want`` emission-ordered rows, or ``None`` at the end.
+
+        Blocks are full-size while the walk can still produce rows; only
+        the final block is short.  Successive calls with varying ``want``
+        reproduce :func:`iter_feasible_pruned_blocks` with the same size
+        stream exactly."""
+        if want < 1:
+            raise ValueError(f"block size must be >= 1, got {want}")
+        if self.n_t == 0:
+            if not self._empty_set_pending:
+                return None
+            self._empty_set_pending = False
+            return self._build_block(
+                np.zeros(1), np.zeros(1), np.zeros((1, 0), dtype=np.int64)
+            )
+        while self._frontier.n and self._n_ready < want:
+            self._expand_round(want)
+        if not self._frontier.n:
+            self._flush_leaves()
+        if not self._n_ready:
+            return None
+        take = min(want, self._n_ready)
+        pp, ps, ch = _drain_chunks(self._ready, take)
+        self._n_ready -= take
+        return self._build_block(pp, ps, ch)
+
+    @property
+    def exhausted(self) -> bool:
+        """True when no further row can be emitted."""
+        return not (
+            self._frontier.n
+            or self._n_ready
+            or self._leaf_chunks
+            or self._empty_set_pending
+        )
+
+
+def iter_feasible_pruned_blocks(
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    block_sizes: int | Iterable[int] | None = None,
+    *,
+    min_expand: int = 16384,
+) -> Iterator[ComboBlock]:
+    """Yield the TFS as power-ordered :class:`ComboBlock` array batches.
+
+    Generator facade over :class:`BlockEnumerator` (see its docstring for
+    the search itself).  ``block_sizes`` is an int, an iterable (e.g. the
+    scheduler's geometric ramp — early blocks small so a shallow winner
+    stops the walk cheaply, later blocks large to amortise dispatch), or
+    None for a constant 4096.  The final block may be short.
+
+    Example — stream the feasible rows of a 2-task instance:
+
+        >>> from repro.core.task import FleetSpec, Task, TaskVariant
+        >>> def v(th, pw):
+        ...     return TaskVariant(cu=1, throughput=th, power=pw)
+        >>> tasks = [
+        ...     Task("a", period=10.0, data=20.0, init_interval=1.0,
+        ...          variants=(v(2.0, 5.0), v(4.0, 8.0))),
+        ...     Task("b", period=10.0, data=40.0, init_interval=1.0,
+        ...          variants=(v(4.0, 4.0), v(8.0, 6.0))),
+        ... ]
+        >>> fleet = FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0)
+        >>> for blk in iter_feasible_pruned_blocks(tasks, fleet, 4):
+        ...     for r in range(len(blk)):
+        ...         print(blk.variant_idx[r], blk.total_power[r])
+        [0 1] 11.0
+        [1 0] 12.0
+        [1 1] 14.0
+
+    Rows arrive in ascending total power; the one combo whose summed
+    share violates eq. 7 — both tasks in their big-share variant, 60
+    against a workable budget of 57 — is pruned without ever being
+    materialised.
+    """
+    sizes = _size_stream(block_sizes)
+    enum = BlockEnumerator(tasks, fleet, min_expand=min_expand)
+    want = next(sizes)
+    while True:
+        blk = enum.next_block(want)
+        if blk is None:
+            return
+        yield blk
         want = next(sizes)

@@ -41,6 +41,15 @@ how the stream was chopped into blocks.  Block sizes follow the walk's
 geometric ramp (``scheduler.block_ramp``); a backend must accept any
 ``B >= 1`` and may not carry state between blocks.
 
+The delta replanner (``repro.core.replan``) leans on the same two
+guarantees: recorded per-row verdicts from a previous solve are *reused*
+across calls (sound only because verdicts are bit-identical and
+block-shape-independent), and its warm mini-walk feeds gathered candidate
+blocks — power-sorted but not contiguous in any enumerator's emission —
+through the very same ``place_block`` / ``dispatch_block`` entry points.
+A backend that met this contract before the service layer existed needs
+no changes to serve replans.
+
 Asynchronous dispatch (optional)
 --------------------------------
 

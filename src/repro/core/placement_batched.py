@@ -43,6 +43,20 @@ def place_batch(
     for the Fig-2/3/4 pinning.  ``backend`` selects the block engine
     (:mod:`repro.core.placement_backends`); every backend agrees with the
     scalar oracle bit-for-bit.
+
+    Example — two rows on a 2x30 fleet (``t_cfg=1``): the first fits with
+    one DP-wrap split, the second still has share left after the last
+    device and is rejected:
+
+        >>> import numpy as np
+        >>> from repro.core.task import FleetSpec
+        >>> fleet = FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0)
+        >>> bp = place_batch(
+        ...     np.array([[20.0, 30.0], [40.0, 25.0]]), [1.0, 1.0], fleet)
+        >>> bp.feasible.tolist(), bp.n_splits.tolist()
+        ([True, False], [1, 2])
+        >>> bp.first_feasible()
+        0
     """
     opts = PlacementOptions(
         t_capture=t_capture, t_store=t_store, repay_init=repay_init

@@ -1,0 +1,656 @@
+"""Delta replanning: warm-start the Alg 1+2 walk from a previous plan.
+
+A long-running fleet (:mod:`repro.service`) sees task arrivals and exits
+continuously; re-running the full power-sorted TFS walk from scratch on
+every event is wasted work when almost everything about the instance is
+unchanged.  This module makes one ``schedule()`` pay for the next:
+
+* :func:`schedule_recorded` runs the normal streaming walk but snapshots
+  a :class:`PlanState` — every emitted TFS row (power, folded eq-7 share
+  sum, variant choice), every placement verdict the walk actually
+  resolved, and the live :class:`~repro.core.feasibility.BlockEnumerator`
+  (the surviving branch-and-bound frontier) at the point the walk
+  stopped.
+* :func:`replan` reschedules a new task tuple from that state.  A single
+  appended **arrival** takes the warm path below; everything else
+  (exits, fleet edits, bulk changes) falls back to a fresh recorded walk
+  that still seeds the projected previous winner as an *incumbent* upper
+  power bound (:meth:`BlockEnumerator.prune_above`).
+
+Warm arrival path
+-----------------
+
+Let the old task set be ``T`` (``n`` tasks) and ``T' = T + [j]``.  Three
+facts make the old walk's work reusable bit-for-bit:
+
+1. **TFS projection.**  Appending a task only shrinks the eq-7 budget
+   (``n_f*t_slr - (n+2)*t_cfg``) and only grows the heterogeneous
+   config-overhead bound, so every eq-7-workable row of ``T'`` restricts
+   to a workable row of ``T``.  The new TFS is therefore exactly
+   ``{(r, v) : r in TFS(T), v a variant of j, eq7'(sum_shr(r)+shr_jv)}``
+   — a filtered cross product of *already enumerated* rows with the new
+   task's variants.  Because :class:`~repro.core.feasibility.ComboBlock`
+   carries each row's left-to-right folded share sum (``sum_shr``), the
+   filter re-applies eq. 7 with the identical float64 operations a cold
+   enumeration of ``T'`` would fold — same bits, same verdicts.
+2. **Reject monotonicity.**  The placement simulator
+   (:func:`repro.core.placement.place_shares`) walks tasks strictly in
+   order, so a row that failed placement for ``T`` fails for every
+   extension ``(r, v)``: recorded *reject* verdicts transfer to the new
+   instance and those candidates skip backend dispatch entirely — they
+   only count toward the winner's rank.
+3. **Incumbent bound.**  The old winner extended with the cheapest
+   placeable variant of ``j`` is a feasible plan of ``T'``; its power
+   ``P_inc`` caps the search.  Candidates above ``P_inc`` are discarded
+   and the resumed frontier walk (:meth:`BlockEnumerator.clone` +
+   :meth:`~BlockEnumerator.prune_above`) only pulls old-TFS rows that
+   could still beat it — typically none when the old walk ran deep.
+
+The surviving candidates are sorted by the cold emission key — ``(total
+power, TSS flat index)``, realised as a lexsort over ``(power, parent
+variant columns, new-variant index)`` — and walked through the backend
+in order.  The first placeable candidate is *provably* the same row a
+cold ``schedule(T')`` would choose, at the same rank, with the same
+scalar plan.  ``tests/test_service_replay.py`` asserts this bit-identity
+property over randomized event sequences and engines.
+
+The warm path returns a *thin* state (no recorded rows, no frontier):
+replanning again from it silently takes the incumbent-seeded fresh-walk
+path, which re-records and restores full warmth.  The
+:class:`repro.service.SchedulerService` layers a plan cache on top so
+steady-state churn (a task leaving and returning) skips even that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .feasibility import BlockEnumerator, config_overhead_lower_bound
+from .placement import place_combo
+from .placement_backends import PlacementBackend, PlacementOptions
+from .scheduler import (
+    ScheduleResult,
+    WalkStats,
+    _block_size_schedule,
+    _walk_tfs_blocks,
+)
+from .task import FleetSpec, Task, TaskSetCombo, combo_count
+
+__all__ = [
+    "PlanState",
+    "VERDICT_REJECT",
+    "VERDICT_PLACEABLE",
+    "VERDICT_UNKNOWN",
+    "schedule_recorded",
+    "replan",
+]
+
+# Per-row placement verdicts recorded by the walk.  Only REJECT is
+# exploitable across arrivals (reject monotonicity); PLACEABLE children
+# still need dispatch — a feasible row's extension may well not place.
+VERDICT_REJECT = 0
+VERDICT_PLACEABLE = 1
+VERDICT_UNKNOWN = 2
+
+_WARM_BLOCK = 4096  # dispatch block size for the candidate mini-walk
+
+
+@dataclasses.dataclass
+class PlanState:
+    """Everything a later :func:`replan` can reuse from one walk.
+
+    ``rec_*`` arrays hold the first ``R`` rows of the instance's
+    power-ordered TFS exactly as emitted (power and eq-7 share sum are
+    the enumerator's own left-to-right folds); ``enum`` resumes emission
+    at row ``R``.  Together they cover every TFS row with total power
+    ``<= complete_below`` (``inf`` for an unbounded cold walk; the
+    incumbent bound when one pruned the walk; ``-inf`` for the thin
+    state a warm replan returns).  ``enum`` is private mutable state —
+    replanners only ever touch a :meth:`BlockEnumerator.clone` of it.
+    """
+
+    tasks: tuple[Task, ...]
+    fleet: FleetSpec
+    engine: str  # backend name whose verdicts rec_verdict holds
+    placement_kw: dict
+    result: ScheduleResult = dataclasses.field(repr=False)
+    rec_pow: np.ndarray = dataclasses.field(repr=False)  # (R,) float64
+    rec_sumshr: np.ndarray = dataclasses.field(repr=False)  # (R,) float64
+    rec_chosen: np.ndarray = dataclasses.field(repr=False)  # (R, n_t) int64
+    rec_verdict: np.ndarray = dataclasses.field(repr=False)  # (R,) int8
+    enum: BlockEnumerator | None = dataclasses.field(repr=False)
+    complete_below: float = np.inf
+
+    @property
+    def n_recorded(self) -> int:
+        return int(self.rec_pow.size)
+
+
+class _Recorder:
+    """Accumulates emitted blocks + resolved verdicts during one walk."""
+
+    def __init__(self, n_t: int) -> None:
+        self._n_t = n_t
+        self._chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self._verdicts: dict[int, np.ndarray] = {}  # rank_base -> int8 block
+        self._bases: list[int] = []
+        self._total = 0
+
+    def on_emit(self, blk) -> None:
+        self._chunks.append((blk.total_power, blk.sum_shr, blk.variant_idx))
+        self._bases.append(self._total)
+        self._total += len(blk)
+
+    def on_verdict(self, base: int, feasible: np.ndarray) -> None:
+        self._verdicts[base] = np.where(
+            feasible, VERDICT_PLACEABLE, VERDICT_REJECT
+        ).astype(np.int8)
+
+    def arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        if not self._chunks:
+            return (
+                np.empty(0),
+                np.empty(0),
+                np.empty((0, self._n_t), dtype=np.int64),
+                np.empty(0, dtype=np.int8),
+            )
+        pow_ = np.concatenate([c[0] for c in self._chunks])
+        sumshr = np.concatenate([c[1] for c in self._chunks])
+        chosen = np.concatenate([c[2] for c in self._chunks], axis=0)
+        verdict = np.full(self._total, VERDICT_UNKNOWN, dtype=np.int8)
+        for base, v in self._verdicts.items():
+            verdict[base : base + v.size] = v
+        return pow_, sumshr, chosen, verdict
+
+
+def _eq7_leaf_mask(fleet: FleetSpec, n_t: int, w: np.ndarray) -> np.ndarray:
+    """The enumerator's leaf-level eq-7 test, bit-identical (same float64
+    comparisons as :meth:`BlockEnumerator._passes` on a completed row)."""
+    ok = w <= fleet.workable_budget(n_t) + 1e-9
+    if fleet.is_heterogeneous and ok.any():
+        overhead = config_overhead_lower_bound(fleet, n_t, w)
+        ok &= ~(w > fleet.capacity - overhead + 1e-9)
+    return ok
+
+
+def _combo_from_idx(
+    idx: Sequence[int],
+    share_vecs: Sequence[np.ndarray],
+    power_vecs: Sequence[np.ndarray],
+) -> TaskSetCombo:
+    return TaskSetCombo(
+        tuple(int(j) for j in idx),
+        tuple(float(v[j]) for v, j in zip(share_vecs, idx)),
+        tuple(float(v[j]) for v, j in zip(power_vecs, idx)),
+    )
+
+
+def schedule_recorded(
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    backend: PlacementBackend,
+    *,
+    block_size: int | None = None,
+    count_all_rejects: bool = False,
+    walk_stats: WalkStats | None = None,
+    incumbent_power: float | None = None,
+    exhaustive: bool = False,
+    **placement_kw,
+) -> ScheduleResult:
+    """The streaming ``schedule()`` walk, with :class:`PlanState` capture.
+
+    Identical winner/rank/reject bookkeeping to the cold streaming path —
+    the only additions are the recorder taps and the optional
+    ``incumbent_power`` bound, which prunes rows *after* the winner-to-be
+    (emission is power-ordered, so every row up to and including the
+    winner survives the bound and the result is unchanged).
+
+    ``exhaustive`` keeps walking past the winner so *every* TFS row gets
+    a recorded placement verdict and the enumerator drains dry.  The
+    reported result is still bit-identical to the cold default (rank
+    rejects, same winner); what changes is the state's warmth — a later
+    arrival replan needs no band drain and dispatches only extensions of
+    known-placeable rows.  Pay once, replan cheap thereafter: this is the
+    service layer's steady-state mode.
+    """
+    tasks = tuple(tasks)
+    enum = BlockEnumerator(tasks, fleet)
+    complete_below = np.inf
+    if incumbent_power is not None:
+        enum.prune_above(incumbent_power)
+        complete_below = float(incumbent_power)
+    sizes = _block_size_schedule(block_size)
+    rec = _Recorder(len(tasks))
+
+    def blocks():
+        while True:
+            blk = enum.next_block(next(sizes))
+            if blk is None:
+                return
+            rec.on_emit(blk)
+            yield blk.shares, blk
+
+    combo, plan, rank, rejects = _walk_tfs_blocks(
+        blocks(),
+        lambda blk, r: blk.materialize(r),
+        tasks,
+        fleet,
+        backend=backend,
+        count_all_rejects=count_all_rejects or exhaustive,
+        walk_stats=walk_stats,
+        on_verdict=rec.on_verdict,
+        **placement_kw,
+    )
+    if exhaustive and not count_all_rejects and combo is not None:
+        rejects = rank  # mirror the cold default's stop-at-winner count
+    res = ScheduleResult(
+        feasible=combo is not None,
+        combo=combo,
+        plan=plan,
+        chosen_rank=rank,
+        n_tss=combo_count(tasks),
+        n_tfs=-1,
+        n_tnfs=-1,
+        n_placement_rejects=rejects,
+        total_power=combo.total_power if combo else float("inf"),
+    )
+    rec_pow, rec_sumshr, rec_chosen, rec_verdict = rec.arrays()
+    res.plan_state = PlanState(
+        tasks=tasks,
+        fleet=fleet,
+        engine=backend.name,
+        placement_kw=dict(placement_kw),
+        result=res,
+        rec_pow=rec_pow,
+        rec_sumshr=rec_sumshr,
+        rec_chosen=rec_chosen,
+        rec_verdict=rec_verdict,
+        enum=enum,
+        complete_below=complete_below,
+    )
+    return res
+
+
+def replan(
+    state: PlanState,
+    tasks: Sequence[Task],
+    *,
+    backend: PlacementBackend,
+    fleet: FleetSpec | None = None,
+    block_size: int | None = None,
+    walk_stats: WalkStats | None = None,
+    **placement_kw,
+) -> ScheduleResult:
+    """Reschedule ``tasks`` reusing whatever ``state`` makes sound.
+
+    Dispatches to the warm arrival path when ``tasks`` appends exactly
+    one task to ``state.tasks`` on an unchanged fleet (and
+    backend/options match, so recorded verdicts are meaningful);
+    otherwise runs an incumbent-seeded fresh recorded walk against
+    ``fleet`` (default: the state's fleet).  Always bit-identical to a
+    cold ``schedule(tasks)`` on that fleet.
+    """
+    tasks = tuple(tasks)
+    if fleet is None:
+        fleet = state.fleet
+    if tasks == state.tasks and fleet == state.fleet:
+        return state.result
+    compatible = (
+        fleet == state.fleet
+        and backend.name == state.engine
+        and dict(placement_kw) == state.placement_kw
+    )
+    if (
+        compatible
+        and len(tasks) == len(state.tasks) + 1
+        and tasks[:-1] == state.tasks
+    ):
+        out = _replan_arrival(
+            state, tasks[-1], backend=backend, walk_stats=walk_stats,
+            **placement_kw,
+        )
+        if out is not None:
+            return out
+    return _replan_general(
+        state,
+        tasks,
+        fleet,
+        backend=backend,
+        block_size=block_size,
+        walk_stats=walk_stats,
+        **placement_kw,
+    )
+
+
+def _row_placeable(
+    shares_row: np.ndarray,
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    backend: PlacementBackend,
+    opts: PlacementOptions,
+) -> bool:
+    bp = backend.place_block(
+        shares_row[None, :],
+        [t.init_interval for t in tasks],
+        fleet.t_slr_arr,
+        fleet.t_cfg_arr,
+        opts,
+    )
+    return bool(bp.feasible[0])
+
+
+def _replan_general(
+    state: PlanState,
+    tasks: tuple[Task, ...],
+    fleet: FleetSpec,
+    *,
+    backend: PlacementBackend,
+    block_size: int | None,
+    walk_stats: WalkStats | None,
+    **placement_kw,
+) -> ScheduleResult:
+    """Exits / fleet edits / bulk deltas: fresh recorded walk, seeded with
+    the old winner projected onto the new task tuple as an incumbent.
+
+    The projection keeps each surviving task's previous variant choice;
+    it is only a *bound*, verified from scratch (eq. 7 + a placement
+    probe) against the new instance and fleet, so no monotonicity
+    assumption about removals is needed — if the probe fails, the walk
+    simply runs unbounded and the replan degrades to a plain cold
+    recorded walk.
+    """
+    incumbent = None
+    if state.result.feasible:
+        prev = {
+            t.name: j
+            for t, j in zip(state.tasks, state.result.combo.variant_idx)
+        }
+        if all(t.name in prev and prev[t.name] < t.nv for t in tasks):
+            share_vecs = [t.shares(fleet.t_slr) for t in tasks]
+            power_vecs = [t.powers() for t in tasks]
+            idx = [prev[t.name] for t in tasks]
+            combo = _combo_from_idx(idx, share_vecs, power_vecs)
+            w = np.asarray([float(sum(combo.shares))])
+            if _eq7_leaf_mask(fleet, len(tasks), w)[0] and _row_placeable(
+                np.asarray(combo.shares),
+                tasks,
+                fleet,
+                backend,
+                PlacementOptions(**placement_kw),
+            ):
+                incumbent = combo.total_power
+    return schedule_recorded(
+        tasks,
+        fleet,
+        backend,
+        block_size=block_size,
+        walk_stats=walk_stats,
+        incumbent_power=incumbent,
+        **placement_kw,
+    )
+
+
+def _thin_state(
+    tasks: tuple[Task, ...],
+    fleet: FleetSpec,
+    backend: PlacementBackend,
+    placement_kw: dict,
+    res: ScheduleResult,
+) -> PlanState:
+    """State with no recording/frontier (``complete_below = -inf``): the
+    next replan from it silently takes the general fresh-walk path."""
+    return PlanState(
+        tasks=tasks,
+        fleet=fleet,
+        engine=backend.name,
+        placement_kw=dict(placement_kw),
+        result=res,
+        rec_pow=np.empty(0),
+        rec_sumshr=np.empty(0),
+        rec_chosen=np.empty((0, len(tasks)), dtype=np.int64),
+        rec_verdict=np.empty(0, dtype=np.int8),
+        enum=None,
+        complete_below=-np.inf,
+    )
+
+
+def _count_lex_less(rows: np.ndarray, ref: np.ndarray) -> int:
+    """How many ``rows`` sort lexicographically before ``ref`` (all rows
+    are assumed distinct from ``ref``)."""
+    if not rows.size:
+        return 0
+    neq = rows != ref[None, :]
+    first = np.argmax(neq, axis=1)
+    r = np.arange(rows.shape[0])
+    return int((rows[r, first] < ref[first]).sum())
+
+
+def _replan_arrival(
+    state: PlanState,
+    new_task: Task,
+    *,
+    backend: PlacementBackend,
+    walk_stats: WalkStats | None,
+    **placement_kw,
+) -> ScheduleResult | None:
+    """Warm path for one appended arrival; None means *fall back*.
+
+    See the module docstring for the three soundness facts this leans
+    on.  Every comparison against recorded folds uses the exact float64
+    values a cold enumeration of the extended set would produce, so the
+    winner, its rank, and its plan are bit-identical to cold.
+    """
+    if not state.result.feasible:
+        return None
+    fleet = state.fleet
+    tasks2 = state.tasks + (new_task,)
+    n2 = len(tasks2)
+    shr_j = new_task.shares(fleet.t_slr)
+    pow_j = new_task.powers()
+    opts = PlacementOptions(**placement_kw)
+    prev = state.result.combo
+    prev_sumshr = float(sum(prev.shares))
+
+    # --- incumbent: old winner ⊕ cheapest placeable variant of the new
+    # task.  Variants probed in ascending power; eq. 7 first (cheap),
+    # then one single-row backend dispatch.  A failed probe does NOT
+    # force a fallback: the walk below simply runs unbounded — the
+    # common shape of an arrival the saturated fleet cannot admit, where
+    # the recorded rejects let us prove infeasibility almost for free.
+    P_inc = np.inf
+    for vv in np.argsort(pow_j, kind="stable"):
+        vv = int(vv)
+        w = np.asarray([prev_sumshr + shr_j[vv]])
+        if not _eq7_leaf_mask(fleet, n2, w)[0]:
+            continue
+        row = np.asarray(list(prev.shares) + [float(shr_j[vv])])
+        if _row_placeable(row, tasks2, fleet, backend, opts):
+            P_inc = float(prev.total_power + pow_j[vv])
+            break
+
+    # Parent rows that could extend into a candidate at or below P_inc.
+    # Over-inclusive margin: the exact per-candidate filter is below.
+    if np.isfinite(P_inc):
+        band_hi = P_inc - float(pow_j.min()) + 1e-9 * max(1.0, abs(P_inc))
+    else:
+        band_hi = np.inf
+    if band_hi > state.complete_below:
+        return None  # recording + frontier don't cover the band: fall back
+
+    # --- band rows: resume the snapshot frontier for old-TFS rows the
+    # previous walk never emitted (usually none when it ran deep).
+    chunks_pow = [state.rec_pow]
+    chunks_sumshr = [state.rec_sumshr]
+    chunks_chosen = [state.rec_chosen]
+    chunks_verdict = [state.rec_verdict]
+    if state.enum is not None and not state.enum.exhausted:
+        resume = state.enum.clone()
+        if np.isfinite(band_hi):
+            resume.prune_above(band_hi)
+        while True:
+            blk = resume.next_block(65536)
+            if blk is None:
+                break
+            chunks_pow.append(blk.total_power)
+            chunks_sumshr.append(blk.sum_shr)
+            chunks_chosen.append(blk.variant_idx)
+            chunks_verdict.append(
+                np.full(len(blk), VERDICT_UNKNOWN, dtype=np.int8)
+            )
+    def _cat(chunks, axis=0):  # skip the full copy when nothing was drained
+        return chunks[0] if len(chunks) == 1 else np.concatenate(chunks, axis=axis)
+
+    all_pow = _cat(chunks_pow)
+    all_sumshr = _cat(chunks_sumshr)
+    all_chosen = _cat(chunks_chosen, axis=0)
+    all_verdict = _cat(chunks_verdict)
+    n_t = len(state.tasks)
+    nv_j = new_task.nv
+
+    # --- dispatch candidates: extensions of non-reject parents (reject
+    # parents can't place — reject monotonicity — and only count toward
+    # rank).  Exact filters: cold's eq-7 fold and the incumbent bound.
+    disp = np.flatnonzero(all_verdict != VERDICT_REJECT)
+    rej = np.flatnonzero(all_verdict == VERDICT_REJECT)
+    cand_parent: list[np.ndarray] = []
+    cand_v: list[np.ndarray] = []
+    for v in range(nv_j):
+        cp = all_pow[disp] + pow_j[v]
+        cs = all_sumshr[disp] + shr_j[v]
+        keep = (cp <= P_inc) & _eq7_leaf_mask(fleet, n2, cs)
+        sel = disp[keep]
+        cand_parent.append(sel)
+        cand_v.append(np.full(sel.size, v, dtype=np.int64))
+    parent = np.concatenate(cand_parent)
+    vcol = np.concatenate(cand_v)
+    cpow = all_pow[parent] + pow_j[vcol]
+    # Cold emission order is (total_power, TSS flat index).  Power alone
+    # determines the winner's *power* (the walk below goes block-by-block
+    # in nondecreasing power), so sort on that single cheap key; the flat
+    # -index tie-break is resolved exactly, but only among the handful of
+    # candidates that share the winner's power.
+    order = np.argsort(cpow, kind="stable")
+    parent, vcol, cpow = parent[order], vcol[order], cpow[order]
+
+    # --- mini-walk: the power-ordered candidates through the backend.
+    share_vecs = tuple(t.shares(fleet.t_slr) for t in tasks2)
+    power_vecs = tuple(t.powers() for t in tasks2)
+    iis2 = [t.init_interval for t in tasks2]
+    t_slr_arr, t_cfg_arr = fleet.t_slr_arr, fleet.t_cfg_arr
+
+    def dispatch(sel_parent, sel_v):
+        shares = np.empty((sel_parent.size, n2))
+        ch = all_chosen[sel_parent]
+        for k in range(n_t):
+            shares[:, k] = share_vecs[k][ch[:, k]]
+        shares[:, n_t] = shr_j[sel_v]
+        bp = backend.place_block(shares, iis2, t_slr_arr, t_cfg_arr, opts)
+        if walk_stats is not None:
+            walk_stats.rows += sel_parent.size
+            walk_stats.block_sizes.append(sel_parent.size)
+        return bp
+
+    win = -1
+    for lo in range(0, parent.size, _WARM_BLOCK):
+        hi = min(lo + _WARM_BLOCK, parent.size)
+        r = dispatch(parent[lo:hi], vcol[lo:hi]).first_feasible()
+        if r >= 0:
+            win = lo + r
+            break
+    if win < 0:
+        # No extension places.  Cold would have dispatched every row of
+        # the new TFS (dispatchable + reject-parent candidates) and
+        # returned infeasible with that many rejects — bit-identical.
+        # The incumbent row is always among the candidates, so a finite
+        # P_inc guarantees a winner; reaching here without one is a
+        # soundness bug worth failing loudly on.
+        assert not np.isfinite(P_inc), "warm replan lost its incumbent row"
+        n_rej_cand = 0
+        for v in range(nv_j):
+            cp = all_pow[rej] + pow_j[v]
+            cs = all_sumshr[rej] + shr_j[v]
+            n_rej_cand += int(
+                ((cp <= P_inc) & _eq7_leaf_mask(fleet, n2, cs)).sum()
+            )
+        res = ScheduleResult(
+            feasible=False,
+            combo=None,
+            plan=None,
+            chosen_rank=-1,
+            n_tss=combo_count(tasks2),
+            n_tfs=-1,
+            n_tnfs=-1,
+            n_placement_rejects=int(parent.size) + n_rej_cand,
+            total_power=float("inf"),
+        )
+        res.plan_state = _thin_state(tasks2, fleet, backend, placement_kw, res)
+        return res
+
+    # --- exact winner among the candidates sharing the winning power:
+    # cold breaks power ties by TSS flat index, i.e. lexicographically on
+    # (parent variant columns, new-variant index).  Re-dispatch the tie
+    # group (tiny; usually size 1) and keep the lex-least feasible row.
+    win_pow = float(cpow[win])
+    t_lo = int(np.searchsorted(cpow, win_pow, side="left"))
+    t_hi = int(np.searchsorted(cpow, win_pow, side="right"))
+    if t_hi - t_lo > 1:
+        ties = np.arange(t_lo, t_hi)
+        bp = dispatch(parent[ties], vcol[ties])
+        feas = np.flatnonzero(np.asarray(bp.feasible))
+        tie_keys = np.concatenate(
+            [all_chosen[parent[ties]], vcol[ties][:, None]], axis=1
+        )
+        fk = tie_keys[feas]
+        best = feas[
+            np.lexsort(tuple(fk[:, c] for c in range(fk.shape[1] - 1, -1, -1)))[0]
+        ]
+        win = t_lo + int(best)
+
+    # --- global rank: candidates strictly cheaper than the winner, plus
+    # equal-power candidates that sort lexicographically before it —
+    # counting both dispatched and reject-parent extensions.
+    win_parent_row = all_chosen[parent[win]]
+    win_key = np.append(win_parent_row, vcol[win])
+    rank = t_lo
+    if t_hi - t_lo > 1:
+        rank += _count_lex_less(tie_keys, win_key)
+    for v in range(nv_j):
+        cp = all_pow[rej] + pow_j[v]
+        cs = all_sumshr[rej] + shr_j[v]
+        ok = (cp <= win_pow) & _eq7_leaf_mask(fleet, n2, cs)
+        sel = rej[ok]
+        cps = cp[ok]
+        rank += int((cps < win_pow).sum())
+        ties = sel[cps == win_pow]
+        if ties.size:
+            tie_keys = np.concatenate(
+                [
+                    all_chosen[ties],
+                    np.full((ties.size, 1), v, dtype=np.int64),
+                ],
+                axis=1,
+            )
+            rank += _count_lex_less(tie_keys, win_key)
+
+    # --- materialise the winner exactly like the cold walk does.
+    idx_full = list(int(j) for j in win_parent_row) + [int(vcol[win])]
+    combo = _combo_from_idx(idx_full, share_vecs, power_vecs)
+    plan = place_combo(combo, tasks2, fleet, **placement_kw)
+    res = ScheduleResult(
+        feasible=True,
+        combo=combo,
+        plan=plan,
+        chosen_rank=rank,
+        n_tss=combo_count(tasks2),
+        n_tfs=-1,
+        n_tnfs=-1,
+        n_placement_rejects=rank,
+        total_power=combo.total_power,
+    )
+    # Thin state: correct for cache/inspection; the next replan from it
+    # takes the general path (which restores a full recording).
+    res.plan_state = _thin_state(tasks2, fleet, backend, placement_kw, res)
+    return res

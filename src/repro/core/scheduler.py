@@ -128,6 +128,9 @@ class ScheduleResult:
     n_tnfs: int
     n_placement_rejects: int  # TFS rows Alg 2 rejected before success
     total_power: float
+    # Warm-start snapshot (``schedule(record_state=True)`` / ``replan``):
+    # recorded TFS rows + the resumable enumerator, for delta replanning.
+    plan_state: "object | None" = dataclasses.field(default=None, repr=False)
 
     def summary(self, tasks: Sequence[Task] | None = None) -> str:
         if not self.feasible:
@@ -231,6 +234,7 @@ def _walk_tfs_blocks(
     backend: str | PlacementBackend,
     count_all_rejects: bool,
     walk_stats: WalkStats | None = None,
+    on_verdict=None,
     **placement_kw,
 ) -> tuple[TaskSetCombo | None, PlacementPlan | None, int, int]:
     """Shared Alg-2 walk over batched TFS blocks, pipelined.
@@ -247,6 +251,13 @@ def _walk_tfs_blocks(
     only once the next block is in flight, so enumeration and device
     sweeps overlap.  Blocks resolve strictly in rank order, so the
     bookkeeping is identical to the synchronous walk.
+
+    ``on_verdict(rank_base, feasible)`` — when given — is called with
+    every resolved block's boolean verdict vector (including the winning
+    block's, before the walk stops).  Blocks enqueued but abandoned once
+    the winner is known never reach it: the delta replanner
+    (:mod:`repro.core.replan`) records those rows as *unknown* rather
+    than inventing verdicts.
     """
     if isinstance(backend, str):
         backend = get_backend(backend)
@@ -275,6 +286,8 @@ def _walk_tfs_blocks(
         t0 = now()
         bp = resolve()
         stats.sync_us += (now() - t0) * 1e6
+        if on_verdict is not None:
+            on_verdict(base, bp.feasible)
         if winner is None:
             r = bp.first_feasible()
             if r >= 0:
@@ -465,9 +478,58 @@ class PADPSFRScheduler:
         *,
         count_all_rejects: bool = False,
         walk_stats: WalkStats | None = None,
+        record_state: bool = False,
+        record_exhaustive: bool = False,
         **placement_kw,
     ) -> ScheduleResult:
+        """Run Alg 1 + Alg 2 + Alg 3 on ``tasks``: enumerate the workable
+        combos (eq. 7), walk them in ascending total power through the
+        placement backend, and return the first placeable combo with its
+        full per-device plan.
+
+        With ``record_state=True`` the walk additionally snapshots every
+        enumerated row, its placement verdict, and the live
+        branch-and-bound frontier into ``result.plan_state`` — the
+        warm-start input :meth:`replan` needs.  Recording always uses the
+        streaming block-native engine (results are bit-identical to the
+        exhaustive path either way, but ``n_tfs``/``n_tnfs`` are not
+        counted and report ``-1``).  ``record_exhaustive=True``
+        additionally walks *past* the winner so every TFS row carries a
+        placement verdict — slower once, but subsequent arrival replans
+        skip dispatch for all recorded rejects (the service layer's
+        steady-state mode).
+
+        Example (the eq-5 shares here are 30 or 15 per task against a
+        2-device budget of ``2*30 - 3*1 = 57``):
+
+            >>> from repro.core.task import FleetSpec, Task, TaskVariant
+            >>> def v(th, pw):
+            ...     return TaskVariant(cu=1, throughput=th, power=pw)
+            >>> tasks = [
+            ...     Task("a", period=10.0, data=20.0, init_interval=1.0,
+            ...          variants=(v(2.0, 5.0), v(4.0, 8.0))),
+            ...     Task("b", period=10.0, data=40.0, init_interval=1.0,
+            ...          variants=(v(4.0, 4.0), v(8.0, 6.0))),
+            ... ]
+            >>> sched = PADPSFRScheduler(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0))
+            >>> res = sched.schedule(tasks)
+            >>> res.feasible, res.combo.variant_idx, res.total_power
+            (True, (0, 1), 11.0)
+        """
         tasks = tuple(tasks)
+        if record_state:
+            from . import replan as _replan
+
+            return _replan.schedule_recorded(
+                tasks,
+                self.fleet,
+                self._backend,
+                block_size=self.block_size,
+                count_all_rejects=count_all_rejects,
+                walk_stats=walk_stats,
+                exhaustive=record_exhaustive,
+                **placement_kw,
+            )
         use_exhaustive = self._use_exhaustive(tasks)
         feas = search_feasible(tasks, self.fleet) if use_exhaustive else None
         if self.engine == "scalar":
@@ -521,4 +583,62 @@ class PADPSFRScheduler:
             n_tnfs=n_tnfs,
             n_placement_rejects=rejects,
             total_power=combo.total_power if combo else float("inf"),
+        )
+
+    def replan(
+        self,
+        state,
+        tasks: Sequence[Task],
+        *,
+        walk_stats: WalkStats | None = None,
+        **placement_kw,
+    ) -> ScheduleResult:
+        """Reschedule ``tasks`` warm-starting from a previous plan.
+
+        ``state`` is the :class:`repro.core.replan.PlanState` recorded by
+        ``schedule(..., record_state=True)`` (or by a previous
+        :meth:`replan`).  A single task *arrival* (``tasks`` extends
+        ``state.tasks`` by one appended task) reuses the recorded rows and
+        the surviving branch-and-bound frontier; any other delta (exits,
+        fleet changes, multiple arrivals) falls back to a fresh recorded
+        walk seeded with the previous winner as an incumbent power bound.
+        Either way the returned plan is bit-identical to a cold
+        :meth:`schedule` of the same task tuple — only the latency
+        differs.  See :mod:`repro.core.replan` for the mechanism and the
+        soundness argument.
+
+        Example — continue from the :meth:`schedule` doctest's instance,
+        with a third task arriving:
+
+            >>> from repro.core.task import FleetSpec, Task, TaskVariant
+            >>> def v(th, pw):
+            ...     return TaskVariant(cu=1, throughput=th, power=pw)
+            >>> tasks = [
+            ...     Task("a", period=10.0, data=20.0, init_interval=1.0,
+            ...          variants=(v(2.0, 5.0), v(4.0, 8.0))),
+            ...     Task("b", period=10.0, data=40.0, init_interval=1.0,
+            ...          variants=(v(4.0, 4.0), v(8.0, 6.0))),
+            ... ]
+            >>> sched = PADPSFRScheduler(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0))
+            >>> res = sched.schedule(tasks, record_state=True)
+            >>> c = Task("c", period=10.0, data=30.0, init_interval=1.0,
+            ...          variants=(v(6.0, 3.0), v(12.0, 9.0)))
+            >>> warm = sched.replan(res.plan_state, tasks + [c])
+            >>> warm.feasible, warm.combo.variant_idx, warm.total_power
+            (True, (1, 1, 0), 17.0)
+            >>> cold = sched.schedule(tasks + [c])
+            >>> (warm.combo, warm.total_power, warm.chosen_rank) == (
+            ...     cold.combo, cold.total_power, cold.chosen_rank)
+            True
+        """
+        from . import replan as _replan
+
+        return _replan.replan(
+            state,
+            tuple(tasks),
+            backend=self._backend,
+            fleet=self.fleet,
+            block_size=self.block_size,
+            walk_stats=walk_stats,
+            **placement_kw,
         )

@@ -153,7 +153,14 @@ def make_hetero_fleet(
     reference slice — eq. 5 shares are defined against it, per-device
     capacities derate from it.
 
-        make_hetero_fleet({"fpga": 4, "gpu": 2, "cpu": 8}, t_slr=3600.0)
+    Example — two FPGAs plus one GPU (slightly derated capacity, near-free
+    reconfiguration):
+
+        >>> fleet = make_hetero_fleet({"fpga": 2, "gpu": 1}, t_slr=60.0)
+        >>> fleet.n_f, [d.klass for d in fleet.devices]
+        (3, ['fpga', 'fpga', 'gpu'])
+        >>> [(d.t_slr, round(d.t_cfg, 2)) for d in fleet.devices]
+        [(60.0, 6.0), (60.0, 6.0), (54.0, 0.06)]
     """
     items = class_counts.items() if isinstance(class_counts, dict) else class_counts
     profiles: list[DeviceProfile] = []

@@ -1,0 +1,15 @@
+# Scheduler-as-a-service: a live plan maintained across task arrivals,
+# exits and device failures, with delta replanning (repro.core.replan)
+# underneath.  See docs/architecture.md for the replan lifecycle.
+
+from .events import DeviceFailure, Event, TaskArrival, TaskExit
+from .service import ReplanTelemetry, SchedulerService
+
+__all__ = [
+    "DeviceFailure",
+    "Event",
+    "TaskArrival",
+    "TaskExit",
+    "ReplanTelemetry",
+    "SchedulerService",
+]

@@ -1,0 +1,53 @@
+"""Event vocabulary for the scheduling service.
+
+A data-center fleet is not a one-shot instance: tasks arrive, tasks
+finish, devices fail (the scheduler-lifecycle framing — admit / place /
+reconfigure — of the energy-efficiency survey arXiv:2309.12884).  The
+service consumes a stream of these events and keeps a live plan; each
+event is a plain frozen dataclass so traces can be built, logged and
+replayed deterministically (``SchedulerService.replay``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from ..core.task import Task
+
+__all__ = ["TaskArrival", "TaskExit", "DeviceFailure", "Event"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskArrival:
+    """A new periodic task asks to join the fleet."""
+
+    task: Task
+
+    def describe(self) -> str:
+        return f"arrival({self.task.name})"
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskExit:
+    """A running task leaves (completed or cancelled), freeing capacity."""
+
+    name: str
+
+    def describe(self) -> str:
+        return f"exit({self.name})"
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceFailure:
+    """A fleet device goes dark.  ``device`` indexes the failed device;
+    ``-1`` means the last one (the only distinguishable choice on a
+    homogeneous fleet)."""
+
+    device: int = -1
+
+    def describe(self) -> str:
+        return f"device_failure({self.device})"
+
+
+Event = Union[TaskArrival, TaskExit, DeviceFailure]

@@ -1,0 +1,228 @@
+"""A long-running scheduler-as-a-service wrapper around PADPS-FR.
+
+The paper's Algs 1-3 solve a *static* instance; :class:`SchedulerService`
+keeps a fleet's plan alive across a stream of
+:mod:`~repro.service.events` — task arrivals, task exits, device
+failures — with three latency tiers per event:
+
+1. **admission filter** — a closed-form eq-7 lower bound (every task at
+   its cheapest share) rejects hopeless arrivals without touching the
+   combo walk at all;
+2. **plan cache** — a task set the service has already solved on the
+   current fleet (steady-state churn: a task leaves and comes back) is
+   answered from memory;
+3. **delta replanner** — everything else goes through
+   :meth:`repro.core.scheduler.PADPSFRScheduler.replan`, which
+   warm-starts the Alg 1+2 walk from the previous
+   :class:`~repro.core.replan.PlanState` and stays bit-identical to a
+   cold ``schedule()`` of the same task set.
+
+Every event returns a :class:`ReplanTelemetry` row, so a trace replay
+doubles as a latency/provenance log.  Arrivals that turn out infeasible
+are *rolled back* — the previous plan keeps serving and the telemetry
+records the rejection; device failures are never rolled back (the
+device is gone), so an unlucky fleet can end up with ``feasible=False``
+telemetry and a degraded (``None``) plan until exits free capacity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Sequence
+
+from ..core.scheduler import PADPSFRScheduler, ScheduleResult
+from ..core.task import FleetSpec, Task
+from .events import DeviceFailure, Event, TaskArrival, TaskExit
+
+__all__ = ["ReplanTelemetry", "SchedulerService"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanTelemetry:
+    """What one event cost and what it did to the plan."""
+
+    event: str  # e.g. "arrival(decode-7b)"
+    admitted: bool  # did the fleet state actually change?
+    path: str  # "admission" | "cache" | "warm" | "general" | "noop"
+    latency_s: float
+    n_tasks: int  # tasks in service after the event
+    feasible: bool  # is there a live plan after the event?
+    total_power: float  # inf when infeasible / no tasks
+    chosen_rank: int  # -1 when infeasible / no tasks
+    reason: str = ""  # human detail for rejections / degradations
+
+
+class SchedulerService:
+    """Event-driven scheduling facade with delta replanning.
+
+    ``record_exhaustive=True`` (the default) makes each fresh walk keep
+    going past its winner so every TFS row carries a placement verdict —
+    the first solve on a big instance costs more, but subsequent arrival
+    replans skip dispatch for every recorded reject (the ≥10x
+    steady-state path measured in ``benchmarks/scheduler_scale.py``).
+    Set it to ``False`` to optimise for one-shot latency instead.
+    """
+
+    def __init__(
+        self,
+        fleet: FleetSpec,
+        *,
+        engine: str = "numpy",
+        record_exhaustive: bool = True,
+        cache_plans: bool = True,
+        **placement_kw,
+    ) -> None:
+        self.fleet = fleet
+        self.engine = engine
+        self.record_exhaustive = record_exhaustive
+        self.cache_plans = cache_plans
+        self.placement_kw = dict(placement_kw)
+        self._sched = PADPSFRScheduler(fleet, engine=engine)
+        self._tasks: tuple[Task, ...] = ()
+        self._result: ScheduleResult | None = None
+        self._cache: dict[tuple, ScheduleResult] = {}
+        self.telemetry: list[ReplanTelemetry] = []
+
+    # -- public state ---------------------------------------------------
+    @property
+    def tasks(self) -> tuple[Task, ...]:
+        return self._tasks
+
+    @property
+    def plan(self) -> ScheduleResult | None:
+        """The live plan (None while the service holds no tasks)."""
+        return self._result
+
+    # -- events ---------------------------------------------------------
+    def submit(self, task: Task) -> ReplanTelemetry:
+        """Admit ``task`` if a feasible plan including it exists."""
+        t0 = time.perf_counter()
+        if any(t.name == task.name for t in self._tasks):
+            return self._log(
+                f"arrival({task.name})", False, "admission", t0,
+                reason="duplicate task name",
+            )
+        target = self._tasks + (task,)
+        lo = sum(min(t.shares(self.fleet.t_slr)) for t in target)
+        if lo > self.fleet.workable_budget(len(target)) + 1e-9:
+            # Even the cheapest variant of every task overshoots eq. 7:
+            # the TFS is provably empty, no walk needed.
+            return self._log(
+                f"arrival({task.name})", False, "admission", t0,
+                reason="eq-7 lower bound exceeds fleet budget",
+            )
+        res, path = self._solve(target)
+        if not res.feasible:
+            return self._log(
+                f"arrival({task.name})", False, path, t0,
+                reason="no placeable combo; arrival rolled back",
+            )
+        self._tasks, self._result = target, res
+        return self._log(f"arrival({task.name})", True, path, t0)
+
+    def remove(self, name: str) -> ReplanTelemetry:
+        """Release the named task's capacity and replan the remainder."""
+        t0 = time.perf_counter()
+        if all(t.name != name for t in self._tasks):
+            return self._log(
+                f"exit({name})", False, "admission", t0,
+                reason="unknown task name",
+            )
+        target = tuple(t for t in self._tasks if t.name != name)
+        if not target:
+            self._tasks, self._result = (), None
+            return self._log(f"exit({name})", True, "noop", t0)
+        res, path = self._solve(target)
+        # an exit is never rolled back: the task is gone either way.
+        self._tasks, self._result = target, res
+        return self._log(f"exit({name})", True, path, t0)
+
+    def fail_device(self, device: int = -1) -> ReplanTelemetry:
+        """Drop one device from the fleet and replan on what's left."""
+        t0 = time.perf_counter()
+        if self.fleet.n_f <= 1:
+            return self._log(
+                f"device_failure({device})", False, "admission", t0,
+                reason="cannot fail the last device",
+            )
+        if self.fleet.is_heterogeneous:
+            idx = device % self.fleet.n_f
+            profiles = tuple(
+                d for j, d in enumerate(self.fleet.devices) if j != idx
+            )
+            self.fleet = FleetSpec.heterogeneous(profiles, name=self.fleet.name)
+        else:
+            self.fleet = dataclasses.replace(self.fleet, n_f=self.fleet.n_f - 1)
+        self._sched = PADPSFRScheduler(self.fleet, engine=self.engine)
+        if not self._tasks:
+            return self._log(f"device_failure({device})", True, "noop", t0)
+        res, path = self._solve(self._tasks)
+        # never rolled back; the plan may come back infeasible (degraded).
+        self._result = res
+        return self._log(f"device_failure({device})", True, path, t0)
+
+    def replay(self, events: Iterable[Event]) -> list[ReplanTelemetry]:
+        """Apply an event trace in order; returns one telemetry row each."""
+        out = []
+        for ev in events:
+            if isinstance(ev, TaskArrival):
+                out.append(self.submit(ev.task))
+            elif isinstance(ev, TaskExit):
+                out.append(self.remove(ev.name))
+            elif isinstance(ev, DeviceFailure):
+                out.append(self.fail_device(ev.device))
+            else:
+                raise TypeError(f"unknown event {ev!r}")
+        return out
+
+    # -- internals ------------------------------------------------------
+    def _cache_key(self, tasks: Sequence[Task]) -> tuple:
+        return (tuple(tasks), self.fleet)
+
+    def _solve(self, target: tuple[Task, ...]) -> tuple[ScheduleResult, str]:
+        key = self._cache_key(target)
+        if self.cache_plans and key in self._cache:
+            return self._cache[key], "cache"
+        state = self._result.plan_state if self._result is not None else None
+        if state is not None:
+            res = self._sched.replan(state, target, **self.placement_kw)
+            # thin state (complete_below == -inf) marks the warm path;
+            # the general path re-records and returns a full state.
+            st = res.plan_state
+            path = "warm" if st is not None and st.complete_below == -float("inf") else "general"
+        else:
+            res = self._sched.schedule(
+                target,
+                record_state=True,
+                record_exhaustive=self.record_exhaustive,
+                **self.placement_kw,
+            )
+            path = "general"
+        if self.cache_plans and res.feasible:
+            self._cache[key] = res
+        return res, path
+
+    def _log(
+        self,
+        event: str,
+        admitted: bool,
+        path: str,
+        t0: float,
+        *,
+        reason: str = "",
+    ) -> ReplanTelemetry:
+        res = self._result
+        row = ReplanTelemetry(
+            event=event,
+            admitted=admitted,
+            path=path,
+            latency_s=time.perf_counter() - t0,
+            n_tasks=len(self._tasks),
+            feasible=res is not None and res.feasible,
+            total_power=res.total_power if res is not None else float("inf"),
+            chosen_rank=res.chosen_rank if res is not None else -1,
+            reason=reason,
+        )
+        self.telemetry.append(row)
+        return row

@@ -50,7 +50,7 @@ def test_serve_cli():
     assert "generated" in proc.stdout
 
 
-def _bench_artifact(us_by_name, rows_per_s=None, crossover=None):
+def _bench_artifact(us_by_name, rows_per_s=None, crossover=None, replan=None):
     doc = {
         "benchmark": "scheduler_scale",
         "rows": [{"name": n, "us": v, "derived": ""} for n, v in us_by_name.items()],
@@ -62,6 +62,8 @@ def _bench_artifact(us_by_name, rows_per_s=None, crossover=None):
             "rows_per_s": rows_per_s,
             "numpy_jax_crossover_rows": crossover,
         }
+    if replan is not None:
+        doc["replan"] = replan
     return doc
 
 
@@ -91,6 +93,33 @@ def test_trend_report_cli(tmp_path):
     # fewer than two artifacts is a usage error
     proc = _run(["benchmarks.trend_report", str(a)])
     assert proc.returncode != 0
+
+
+def test_trend_report_replan_rows_graceful(tmp_path):
+    """Artifacts predating the delta-replan benchmark must not crash the
+    trend report — clear note, exit 0 (the CI bench-smoke contract)."""
+    old = tmp_path / "BENCH_old.json"
+    new = tmp_path / "BENCH_new.json"
+    old.write_text(json.dumps(_bench_artifact({"alg2_batched_tfs4096": 1000.0})))
+    new.write_text(json.dumps(_bench_artifact(
+        {"alg2_batched_tfs4096": 900.0, "replan_warm_11t": 150.0},
+        replan={"cold_us": 2.0e6, "warm_us": 1.6e5, "speedup": 12.5,
+                "bit_identical": True},
+    )))
+
+    # old + new: replan trend renders, with a note about the older file
+    proc = _run(["benchmarks.trend_report", str(old), str(new)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "delta replan" in proc.stdout
+    assert "12.5x" in proc.stdout
+    assert "predates the delta-replan benchmark" in proc.stdout
+
+    # two pre-replan artifacts: skipped with a message, still exit 0
+    old2 = tmp_path / "BENCH_old2.json"
+    old2.write_text(json.dumps(_bench_artifact({"alg2_batched_tfs4096": 950.0})))
+    proc = _run(["benchmarks.trend_report", str(old), str(old2)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "no artifact carries replan rows" in proc.stdout
 
 
 @pytest.mark.slow

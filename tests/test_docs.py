@@ -1,0 +1,36 @@
+"""Docs stay true: links resolve and architecture snippets execute.
+
+Runs ``tools/check_docs.py`` in a subprocess (same invocation as the CI
+docs leg) so documented APIs can't drift from the real ones.
+"""
+
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(extra):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(
+        [sys.executable, "tools/check_docs.py"] + extra,
+        capture_output=True, text=True, timeout=300, env=env, cwd=_ROOT,
+    )
+
+
+def test_docs_links_and_snippets():
+    proc = _run([])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+    # the architecture tour must actually exercise code, not just prose
+    assert "snippet(s) executed" in proc.stdout
+    assert "0 snippet(s)" not in proc.stdout
+
+
+def test_docs_checker_catches_broken_link(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [missing](does/not/exist.py)\n")
+    proc = _run(["--no-snippets", str(bad)])
+    assert proc.returncode == 1
+    assert "broken link" in proc.stdout

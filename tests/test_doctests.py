@@ -1,0 +1,31 @@
+"""Public-API doctests, wired into tier-1.
+
+Runs :func:`doctest.testmod` over the modules whose docstrings carry
+worked examples, so the examples in ``PADPSFRScheduler.schedule`` /
+``replan``, ``iter_feasible_pruned_blocks``, ``place_batch`` and
+``make_hetero_fleet`` are executed on every test run (the plain pytest
+invocation — no ``--doctest-modules`` flag needed).
+"""
+
+import doctest
+
+import pytest
+
+import repro.core.feasibility
+import repro.core.placement_batched
+import repro.core.scheduler
+import repro.core.variants
+
+_MODULES = [
+    repro.core.feasibility,
+    repro.core.placement_batched,
+    repro.core.scheduler,
+    repro.core.variants,
+]
+
+
+@pytest.mark.parametrize("mod", _MODULES, ids=lambda m: m.__name__)
+def test_module_doctests(mod):
+    result = doctest.testmod(mod, verbose=False)
+    assert result.attempted > 0, f"{mod.__name__} lost its doctest examples"
+    assert result.failed == 0

@@ -1,0 +1,225 @@
+"""Event-replay equivalence: the service's live plan is always
+bit-identical to a cold ``schedule()`` of whatever task set survived.
+
+This is the warm-start soundness property from ``repro.core.replan``
+exercised end-to-end: random traces of arrivals / exits / device
+failures flow through :class:`repro.service.SchedulerService` (plan
+cache on and off, exhaustive recording on and off), and after every
+trace the final plan — winner variants, power, rank, reject count, and
+the scalar placement plan itself — must equal a from-scratch solve of
+the final task tuple on the final fleet, across placement engines.
+"""
+
+import random
+
+import pytest
+
+from repro.core import FleetSpec, PADPSFRScheduler, Task, TaskVariant
+from repro.core.placement_backends import available_backends
+from repro.service import (
+    DeviceFailure,
+    SchedulerService,
+    TaskArrival,
+    TaskExit,
+)
+
+ENGINES = [e for e in ("scalar", "numpy", "jax") if e in available_backends()]
+
+
+def _rand_task(rng, name, *, int_powers=False):
+    variants = tuple(
+        TaskVariant(
+            cu=1,
+            throughput=rng.uniform(1.0, 8.0),
+            power=float(rng.randint(1, 8)) if int_powers else rng.uniform(1, 10),
+        )
+        for _ in range(rng.randint(1, 3))
+    )
+    return Task(
+        name=name,
+        period=rng.uniform(5, 20),
+        data=rng.uniform(10, 60),
+        init_interval=rng.uniform(0.0, 1.0),
+        variants=variants,
+    )
+
+
+def _assert_matches_cold(svc):
+    if not svc.tasks:
+        assert svc.plan is None
+        return
+    cold = PADPSFRScheduler(svc.fleet, engine=svc.engine).schedule(svc.tasks)
+    live = svc.plan
+    assert live is not None
+    assert live.feasible == cold.feasible
+    assert live.chosen_rank == cold.chosen_rank
+    assert live.n_placement_rejects == cold.n_placement_rejects
+    assert live.total_power == cold.total_power
+    if cold.feasible:
+        assert live.combo.variant_idx == cold.combo.variant_idx
+        assert str(live.plan) == str(cold.plan)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_random_event_traces_bit_identical(engine):
+    n_trials = 6 if engine == "scalar" else 10
+    for seed in range(n_trials):
+        rng = random.Random(1000 * ENGINES.index(engine) + seed)
+        fleet = FleetSpec(
+            n_f=rng.randint(2, 3),
+            t_slr=rng.uniform(15, 40),
+            t_cfg=rng.uniform(0.0, 1.5),
+        )
+        svc = SchedulerService(
+            fleet,
+            engine=engine,
+            record_exhaustive=bool(seed % 2),
+            cache_plans=bool(seed % 3),
+        )
+        counter = 0
+        events = []
+        for _ in range(rng.randint(3, 6)):
+            roll = rng.random()
+            if roll < 0.55 or not svc.tasks:
+                counter += 1
+                events.append(
+                    TaskArrival(
+                        _rand_task(rng, f"t{counter}", int_powers=seed % 2 == 0)
+                    )
+                )
+            elif roll < 0.9:
+                events.append(TaskExit(rng.choice(svc.tasks).name))
+            elif svc.fleet.n_f > 1:
+                events.append(DeviceFailure())
+            svc.replay(events[-1:])
+            _assert_matches_cold(svc)
+        assert len(svc.telemetry) == len(events)
+
+
+def test_warm_arrival_levels_match_cold():
+    """Direct replan-level check, hammering the tie-break path with
+    integer powers and both recording modes."""
+    for seed in range(14):
+        rng = random.Random(77 + seed)
+        fleet = FleetSpec(
+            n_f=rng.randint(1, 3),
+            t_slr=rng.uniform(15, 40),
+            t_cfg=rng.uniform(0.0, 1.5),
+        )
+        tasks = [
+            _rand_task(rng, f"t{i}", int_powers=True)
+            for i in range(rng.randint(2, 4))
+        ]
+        sch = PADPSFRScheduler(fleet, engine="numpy")
+        rec = sch.schedule(
+            tasks, record_state=True, record_exhaustive=seed % 2 == 0
+        )
+        extended = tasks + [_rand_task(rng, "new", int_powers=True)]
+        warm = sch.replan(rec.plan_state, extended)
+        cold = sch.schedule(extended)
+        assert warm.feasible == cold.feasible
+        assert warm.chosen_rank == cold.chosen_rank
+        assert warm.n_placement_rejects == cold.n_placement_rejects
+        assert warm.total_power == cold.total_power
+        if cold.feasible:
+            assert warm.combo.variant_idx == cold.combo.variant_idx
+            assert str(warm.plan) == str(cold.plan)
+
+
+def _v(th, pw):
+    return TaskVariant(cu=1, throughput=th, power=pw)
+
+
+def _abc():
+    a = Task("a", period=10.0, data=20.0, init_interval=1.0,
+             variants=(_v(2.0, 5.0), _v(4.0, 8.0)))
+    b = Task("b", period=10.0, data=40.0, init_interval=1.0,
+             variants=(_v(4.0, 4.0), _v(8.0, 6.0)))
+    c = Task("c", period=10.0, data=30.0, init_interval=1.0,
+             variants=(_v(6.0, 3.0), _v(12.0, 9.0)))
+    return a, b, c
+
+
+def test_admission_filter_and_rollback():
+    a, b, c = _abc()
+    svc = SchedulerService(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0))
+    assert svc.submit(a).admitted and svc.submit(b).admitted
+    before = svc.plan
+
+    dup = svc.submit(Task("a", period=9.0, data=5.0, init_interval=0.0,
+                          variants=(_v(5.0, 1.0),)))
+    assert not dup.admitted and dup.path == "admission"
+    assert "duplicate" in dup.reason
+
+    hopeless = svc.submit(Task("big", period=10.0, data=10000.0,
+                               init_interval=1.0, variants=(_v(2.0, 1.0),)))
+    assert not hopeless.admitted and hopeless.path == "admission"
+    assert "eq-7" in hopeless.reason
+
+    # passes the eq-7 filter (modest share) but can never place: its II
+    # exceeds every device's usable window — rolled back after replan
+    tight = svc.submit(Task("tight", period=10.0, data=48.0,
+                            init_interval=29.0, variants=(_v(6.0, 1.0),)))
+    assert not tight.admitted and tight.path in ("warm", "general")
+    assert svc.tasks == (a, b)
+    assert svc.plan is before  # untouched plan object
+
+    _assert_matches_cold(svc)
+
+
+def test_plan_cache_steady_state_churn():
+    a, b, _ = _abc()
+    svc = SchedulerService(FleetSpec(n_f=3, t_slr=30.0, t_cfg=1.0))
+    svc.submit(a)
+    svc.submit(b)
+    svc.remove(b.name)
+    back = svc.submit(b)  # same tuple (a, b) on the same fleet as before
+    assert back.path == "cache"
+    assert back.latency_s < 0.05
+    _assert_matches_cold(svc)
+
+    uncached = SchedulerService(
+        FleetSpec(n_f=3, t_slr=30.0, t_cfg=1.0), cache_plans=False
+    )
+    uncached.submit(a)
+    uncached.submit(b)
+    uncached.remove(b.name)
+    assert uncached.submit(b).path != "cache"
+    _assert_matches_cold(uncached)
+
+
+def test_device_failure_degrades_and_replans():
+    a, b, c = _abc()
+    svc = SchedulerService(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0))
+    svc.submit(a)
+    svc.submit(b)
+    tel = svc.fail_device()
+    assert tel.admitted and svc.fleet.n_f == 1
+    _assert_matches_cold(svc)
+
+    last = svc.fail_device()
+    assert not last.admitted and "last device" in last.reason
+    assert svc.fleet.n_f == 1
+
+    # heterogeneous failure drops the indexed profile
+    from repro.core import DeviceProfile
+
+    hsvc = SchedulerService(FleetSpec.heterogeneous(
+        [DeviceProfile(t_slr=30.0, t_cfg=1.0),
+         DeviceProfile(t_slr=20.0, t_cfg=0.1, klass="gpu")]))
+    hsvc.submit(a)
+    hsvc.fail_device(1)
+    assert hsvc.fleet.n_f == 1 and hsvc.fleet.devices[0].klass == "fpga"
+    _assert_matches_cold(hsvc)
+
+
+def test_telemetry_trace_is_complete():
+    a, b, _ = _abc()
+    svc = SchedulerService(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0))
+    svc.replay([TaskArrival(a), TaskArrival(b), TaskExit("a")])
+    assert [t.event for t in svc.telemetry] == [
+        "arrival(a)", "arrival(b)", "exit(a)",
+    ]
+    assert all(t.latency_s >= 0 for t in svc.telemetry)
+    assert svc.telemetry[-1].n_tasks == 1
+    assert svc.telemetry[-1].feasible

@@ -1,0 +1,132 @@
+"""Docs health check: markdown links resolve, architecture snippets run.
+
+Two stdlib-only checks, wired into CI's docs leg and tier-1
+(``tests/test_docs.py``):
+
+1. **Link check** — every relative markdown link ``[text](target)`` in the
+   given files must point at an existing file or directory (anchors are
+   stripped; ``http(s)``/``mailto`` targets are skipped — CI has no
+   network guarantee).
+2. **Snippet check** — every fenced ```` ```python ```` block in
+   ``docs/architecture.md`` is executed (each in a fresh namespace) under
+   the repo's ``src`` layout, so the documented API can never drift from
+   the real one.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py [--no-snippets] [FILES...]
+
+With no FILES the default set is ``docs/**/*.md``, ``ROADMAP.md``,
+``CHANGES.md``, and ``README.md`` when present.  Exit 0 iff everything
+passes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images is unnecessary (same resolution rule)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def default_files() -> list[str]:
+    files = sorted(glob.glob(os.path.join(_ROOT, "docs", "**", "*.md"),
+                             recursive=True))
+    for name in ("ROADMAP.md", "CHANGES.md", "README.md"):
+        path = os.path.join(_ROOT, name)
+        if os.path.exists(path):
+            files.append(path)
+    return files
+
+
+def check_links(path: str) -> list[str]:
+    """Return a list of human-readable problems for one markdown file."""
+    problems = []
+    with open(path) as fh:
+        text = fh.read()
+    # ignore link-looking text inside fenced code blocks
+    lines, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            lines.append(line)
+    for target in _LINK_RE.findall("\n".join(lines)):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            problems.append(
+                f"{os.path.relpath(path, _ROOT)}: broken link -> {target}"
+            )
+    return problems
+
+
+def python_snippets(path: str) -> list[tuple[int, str]]:
+    """Extract ``(start_line, source)`` for every ```python fence."""
+    snippets, buf, start, lang = [], None, 0, None
+    with open(path) as fh:
+        for lineno, line in enumerate(fh, 1):
+            m = _FENCE_RE.match(line)
+            if m and buf is None:
+                lang, start, buf = m.group(1), lineno + 1, []
+            elif line.startswith("```") and buf is not None:
+                if lang == "python":
+                    snippets.append((start, "".join(buf)))
+                buf = None
+            elif buf is not None:
+                buf.append(line)
+    return snippets
+
+
+def check_snippets(path: str) -> list[str]:
+    problems = []
+    for start, src in python_snippets(path):
+        try:
+            exec(compile(src, f"{path}:{start}", "exec"), {"__name__": "__snippet__"})
+        except Exception as exc:  # report and keep checking the rest
+            problems.append(
+                f"{os.path.relpath(path, _ROOT)}:{start}: snippet failed: "
+                f"{type(exc).__name__}: {exc}"
+            )
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", help="markdown files (default: docs set)")
+    ap.add_argument("--no-snippets", action="store_true",
+                    help="only check links, skip executing python fences")
+    args = ap.parse_args(argv)
+    files = [os.path.abspath(f) for f in args.files] or default_files()
+
+    problems: list[str] = []
+    for path in files:
+        problems.extend(check_links(path))
+    arch = os.path.join(_ROOT, "docs", "architecture.md")
+    if not args.no_snippets and os.path.exists(arch):
+        problems.extend(check_snippets(arch))
+
+    n_snip = 0 if args.no_snippets else len(python_snippets(arch)) \
+        if os.path.exists(arch) else 0
+    if problems:
+        print("\n".join(problems))
+        print(f"FAIL: {len(problems)} problem(s) in {len(files)} file(s)")
+        return 1
+    print(f"OK: {len(files)} markdown file(s) link-checked, "
+          f"{n_snip} snippet(s) executed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
