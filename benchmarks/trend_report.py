@@ -79,12 +79,31 @@ def trend(datas: list[dict], labels: list[str]) -> dict:
     replan["missing_files"] = [
         lb for lb, d in zip(labels, datas) if not d.get("replan")
     ]
+    # Same deal for fleet-parallel batching: the section only exists in
+    # artifacts recorded after schedule_many landed — older files get None
+    # cells and a note, never an exception.
+    fp_speedup: dict[str, list[float | None]] = {}
+    for d in datas:
+        for key in ((d.get("fleet_parallel") or {}).get("points") or {}):
+            fp_speedup.setdefault(key, [])
+    for d in datas:
+        pts = (d.get("fleet_parallel") or {}).get("points") or {}
+        for key, series in fp_speedup.items():
+            p = pts.get(key)
+            series.append(float(p["speedup"]) if p else None)
+    fleet_parallel = {
+        "speedup": fp_speedup,
+        "missing_files": [
+            lb for lb, d in zip(labels, datas) if not d.get("fleet_parallel")
+        ],
+    }
     return {
         "files": labels,
         "rows": rows,
         "backend_rows_per_s": sweep_series,
         "numpy_jax_crossover_rows": crossovers,
         "replan": replan,
+        "fleet_parallel": fleet_parallel,
     }
 
 
@@ -149,6 +168,31 @@ def render(t: dict) -> str:
         out.append(
             "delta replan: no artifact carries replan rows yet "
             "(all predate the delta-replan benchmark) — skipped"
+        )
+    fp = t.get("fleet_parallel") or {}
+    if any(
+        v is not None for series in fp.get("speedup", {}).values() for v in series
+    ):
+        out.append("")
+        out.append("fleet-parallel batching (schedule_many vs solo loop, speedup):")
+        for key, series in sorted(fp["speedup"].items()):
+            cells = " ".join(
+                f"{_fmt(v, 'x'):>14}" if v is not None else f"{'-':>14}"
+                for v in series
+            )
+            out.append(f"{'fleet ' + key:<24} {cells}")
+        if fp.get("missing_files"):
+            out.append(
+                "note: no fleet_parallel section in "
+                + ", ".join(fp["missing_files"])
+                + " (artifact predates batched scheduling; "
+                "re-run benchmarks.scheduler_scale to record it)"
+            )
+    elif fp.get("missing_files"):
+        out.append("")
+        out.append(
+            "fleet-parallel batching: no artifact carries fleet_parallel "
+            "rows yet (all predate schedule_many) — skipped"
         )
     return "\n".join(out)
 

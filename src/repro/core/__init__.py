@@ -15,6 +15,7 @@ from .feasibility import (
 )
 from .placement import DataSplit, DeviceScript, PlacementPlan, Segment, place_combo, place_shares
 from .placement_backends import (
+    InstanceBatch,
     PlacementBackend,
     PlacementOptions,
     available_backends,
@@ -27,6 +28,7 @@ from .placement_batched import BatchPlacement, place_batch, place_combos_batch
 from .replan import PlanState
 from .scheduler import (
     PADPSFRScheduler,
+    ScheduleInstance,
     ScheduleResult,
     WalkStats,
     block_ramp,
@@ -66,6 +68,7 @@ __all__ = [
     "place_combo",
     "place_shares",
     "BatchPlacement",
+    "InstanceBatch",
     "PlacementBackend",
     "PlacementOptions",
     "available_backends",
@@ -77,6 +80,7 @@ __all__ = [
     "place_combos_batch",
     "PlanState",
     "PADPSFRScheduler",
+    "ScheduleInstance",
     "ScheduleResult",
     "WalkStats",
     "block_ramp",

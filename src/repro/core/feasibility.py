@@ -84,6 +84,23 @@ class FeasibilityResult:
         powers = tuple(float(t.variants[j].power) for t, j in zip(self.tasks, idx))
         return TaskSetCombo(tuple(int(j) for j in idx), shares, powers)
 
+    def _share_columns(self) -> "tuple[list[np.ndarray], list[int]]":
+        """Per-task eq-5 share vectors (and nv list), computed once.
+
+        :meth:`shares_matrix` runs once per dispatched block on the
+        scheduler's hot path — recomputing ``t.shares`` (a fresh
+        exec-times array per call) for every gather dominated deep
+        walks, and dominated the whole batched ``schedule_many`` floor.
+        """
+        cached = getattr(self, "_share_cols", None)
+        if cached is None:
+            cached = (
+                [t.shares(self.fleet.t_slr) for t in self.tasks],
+                [t.nv for t in self.tasks],
+            )
+            self._share_cols = cached
+        return cached
+
     def shares_matrix(self, flat_indices: np.ndarray) -> np.ndarray:
         """Materialise a block of TSS rows as a ``(B, n_t)`` shares matrix.
 
@@ -93,12 +110,12 @@ class FeasibilityResult:
         (:func:`repro.core.placement_batched.place_batch`).
         """
         flat_indices = np.asarray(flat_indices, dtype=np.int64)
-        nvs = [t.nv for t in self.tasks]
+        cols, nvs = self._share_columns()
         idx = np.unravel_index(flat_indices, nvs)
-        cols = [
-            t.shares(self.fleet.t_slr)[ji] for t, ji in zip(self.tasks, idx)
-        ]
-        return np.stack(cols, axis=1)
+        out = np.empty((flat_indices.size, len(cols)), dtype=np.float64)
+        for i, (col, ji) in enumerate(zip(cols, idx)):
+            np.take(col, ji, out=out[:, i])
+        return out
 
     def tfs_indices_by_power(self) -> np.ndarray:
         """Flat indices of TFS rows, ascending total power (Alg 2 line 1).

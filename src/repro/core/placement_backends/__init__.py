@@ -17,11 +17,14 @@ engines (see :mod:`.base` for the contract and how to register new ones):
 
 from .base import (
     BatchPlacement,
+    InstanceBatch,
     PlacementBackend,
     PlacementOptions,
     available_backends,
     backend_names,
+    dispatch_instance_blocks,
     get_backend,
+    place_instance_blocks,
     prepare_block,
     register_backend,
     resolve_engine,
@@ -34,11 +37,14 @@ from . import scalar_backend as _scalar_backend  # noqa: F401
 
 __all__ = [
     "BatchPlacement",
+    "InstanceBatch",
     "PlacementBackend",
     "PlacementOptions",
     "available_backends",
     "backend_names",
+    "dispatch_instance_blocks",
     "get_backend",
+    "place_instance_blocks",
     "prepare_block",
     "register_backend",
     "resolve_engine",

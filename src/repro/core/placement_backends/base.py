@@ -50,6 +50,58 @@ through the very same ``place_block`` / ``dispatch_block`` entry points.
 A backend that met this contract before the service layer existed needs
 no changes to serve replans.
 
+Fleet-parallel batching (optional)
+----------------------------------
+
+``schedule_many`` runs *many independent scheduling instances* — same
+array shapes after padding, different fleets/tasks — through one batched
+program.  The batched unit of work is an :class:`InstanceBatch`: the B
+instances' current blocks stacked on a leading instance axis and padded to
+common ``(R, n_t, n_f)`` extents, with per-instance effective counts
+(``n_t_eff``/``n_f_eff``/``n_rows``) marking the live region of each
+slice.  A backend may implement::
+
+    place_blocks(batch, opts, *, shard=None)    -> list[BatchPlacement]
+    dispatch_blocks(batch, opts, *, shard=None) -> () -> list[BatchPlacement]
+
+(one :class:`BatchPlacement` per instance; ``shard`` requests an
+instance-axis device mesh — ``"auto"`` = all devices, clamped to what the
+host offers, ignored by meshless backends, never verdict-changing.)
+
+Each returned :class:`BatchPlacement` is trimmed to that instance's
+``n_rows`` and must be **bit-identical** to a solo ``place_block`` on the
+trimmed instance (``batch.instance_view(i)``) — padding may never leak
+into verdicts.  The canonical reference is :func:`place_instance_blocks`,
+the loop-over-instances fallback the walk uses for any backend that does
+not implement the batched surface; the numpy backend's ``place_blocks``
+is exactly that loop, and every vmapped/grid-extended path is tested
+bit-for-bit against it.  Padding rules (also the rules ``pack`` applies):
+
+* rows ``r >= n_rows[i]``: zero shares, verdicts are garbage and sliced
+  off before the trimmed result is built;
+* task columns ``t >= n_t_eff[i]``: never read — the sweep's task cursor
+  stops at ``n_t_eff``, so padded columns cannot perturb the float64
+  chain (padding with zero-*share* tasks instead would change verdicts,
+  because a zero-share task still pays ``t_cfg`` on placement);
+* device slots ``j >= n_f_eff[i]``: never read — the device cursor dies
+  (row infeasible) before touching them.  ``n_f_eff == 0`` with live
+  tasks reproduces the empty-fleet early path (all rows infeasible);
+  ``n_t_eff == 0`` reproduces the empty-block path (all rows feasible).
+
+A batched backend may further expose the zero-copy raw surface::
+
+    dispatch_blocks_raw(batch, opts, *, shard=None)
+        -> (() -> (feasible, placed_tasks, n_splits, devices_used)) | None
+
+where the resolver returns the four *untrimmed* verdict arrays of shape
+``(B', Rp)`` with ``B' >= len(batch)`` and ``Rp >= max(n_rows)`` —
+entries outside an instance's live region are padding and undefined,
+live entries bit-identical to the trimmed surface.  ``None`` means the
+batch is degenerate for this backend (caller falls back to
+``dispatch_blocks`` / the per-instance loop).  The lockstep many-walk
+prefers this surface so its round bookkeeping can run as a handful of
+vectorized reductions instead of B per-instance result objects.
+
 Asynchronous dispatch (optional)
 --------------------------------
 
@@ -102,6 +154,7 @@ import numpy as np
 
 __all__ = [
     "BatchPlacement",
+    "InstanceBatch",
     "PlacementOptions",
     "PlacementBackend",
     "register_backend",
@@ -110,6 +163,8 @@ __all__ = [
     "backend_names",
     "available_backends",
     "prepare_block",
+    "place_instance_blocks",
+    "dispatch_instance_blocks",
 ]
 
 
@@ -155,6 +210,175 @@ class PlacementOptions:
     @property
     def resume_cost(self) -> float:
         return self.t_capture + self.t_store
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceBatch:
+    """B independent scheduling instances' blocks, stacked and padded.
+
+    The fleet-parallel unit of work (see the module docstring's batching
+    contract).  Build one with :meth:`pack`; recover instance ``i``'s
+    trimmed solo-call arguments with :meth:`instance_view`.  Padded
+    regions hold zeros and are never read by a conforming backend.
+    """
+
+    shares: np.ndarray  # (B, R, n_t) float64 — rows padded to max r_i
+    iis: np.ndarray  # (B, n_t) float64
+    t_slr: np.ndarray  # (B, n_f) float64
+    t_cfg: np.ndarray  # (B, n_f) float64
+    n_t_eff: np.ndarray  # (B,) int32 — live task columns per instance
+    n_f_eff: np.ndarray  # (B,) int32 — live device slots per instance
+    n_rows: np.ndarray  # (B,) int32 — live rows per instance
+
+    def __len__(self) -> int:
+        return self.shares.shape[0]
+
+    @classmethod
+    def pack(
+        cls,
+        blocks: "list[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]",
+    ) -> "InstanceBatch":
+        """Stack per-instance ``(shares, iis, t_slr, t_cfg)`` tuples.
+
+        Instances may disagree on row count, task count and fleet size;
+        everything is zero-padded up to the batch maxima and the effective
+        counts record each instance's live extents.  An empty list packs
+        to a valid zero-instance batch.
+        """
+        B = len(blocks)
+        if B == 0:
+            z = np.zeros((0, 0), dtype=np.float64)
+            zi = np.zeros(0, dtype=np.int32)
+            return cls(
+                shares=np.zeros((0, 0, 0), dtype=np.float64),
+                iis=z, t_slr=z, t_cfg=z,
+                n_t_eff=zi, n_f_eff=zi, n_rows=zi,
+            )
+        canon = []
+        for shares_i, iis_i, slr_i, cfg_i in blocks:
+            shares_i = np.ascontiguousarray(shares_i, dtype=np.float64)
+            if shares_i.ndim != 2:
+                raise ValueError(
+                    f"each shares block must be (r, n_t), got {shares_i.shape}"
+                )
+            iis_i = np.asarray(iis_i, dtype=np.float64).reshape(-1)
+            slr_i = np.asarray(slr_i, dtype=np.float64).reshape(-1)
+            cfg_i = np.asarray(cfg_i, dtype=np.float64).reshape(-1)
+            if iis_i.shape[0] != shares_i.shape[1]:
+                raise ValueError(
+                    f"init_intervals length {iis_i.shape[0]} != n_t {shares_i.shape[1]}"
+                )
+            if slr_i.shape != cfg_i.shape:
+                raise ValueError("t_slr/t_cfg must have matching shapes")
+            canon.append((shares_i, iis_i, slr_i, cfg_i))
+        r0, nt0 = canon[0][0].shape
+        nf0 = canon[0][2].shape[0]
+        if all(
+            s.shape[0] == r0 and s.shape[1] == nt0 and sl.shape[0] == nf0
+            for s, _, sl, _ in canon
+        ):
+            # Uniform batch (the lockstep walk's steady state: every live
+            # instance on the same ramp step): one C-level stack per
+            # field, no padding pass.
+            return cls(
+                shares=np.stack([s for s, _, _, _ in canon]),
+                iis=np.stack([x for _, x, _, _ in canon]),
+                t_slr=np.stack([x for _, _, x, _ in canon]),
+                t_cfg=np.stack([x for _, _, _, x in canon]),
+                n_t_eff=np.full(B, nt0, dtype=np.int32),
+                n_f_eff=np.full(B, nf0, dtype=np.int32),
+                n_rows=np.full(B, r0, dtype=np.int32),
+            )
+        R = max(s.shape[0] for s, _, _, _ in canon)
+        n_t = max(s.shape[1] for s, _, _, _ in canon)
+        n_f = max(sl.shape[0] for _, _, sl, _ in canon)
+        shares = np.zeros((B, R, n_t), dtype=np.float64)
+        iis = np.zeros((B, n_t), dtype=np.float64)
+        t_slr = np.zeros((B, n_f), dtype=np.float64)
+        t_cfg = np.zeros((B, n_f), dtype=np.float64)
+        n_t_eff = np.zeros(B, dtype=np.int32)
+        n_f_eff = np.zeros(B, dtype=np.int32)
+        n_rows = np.zeros(B, dtype=np.int32)
+        for i, (shares_i, iis_i, slr_i, cfg_i) in enumerate(canon):
+            r_i, nt_i = shares_i.shape
+            nf_i = slr_i.shape[0]
+            shares[i, :r_i, :nt_i] = shares_i
+            iis[i, :nt_i] = iis_i
+            t_slr[i, :nf_i] = slr_i
+            t_cfg[i, :nf_i] = cfg_i
+            n_t_eff[i] = nt_i
+            n_f_eff[i] = nf_i
+            n_rows[i] = r_i
+        return cls(
+            shares=shares, iis=iis, t_slr=t_slr, t_cfg=t_cfg,
+            n_t_eff=n_t_eff, n_f_eff=n_f_eff, n_rows=n_rows,
+        )
+
+    def instance_view(
+        self, i: int
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Instance ``i``'s trimmed ``(shares, iis, t_slr, t_cfg)``.
+
+        Exactly what a solo ``place_block`` call on the original
+        (pre-padding) instance would receive.
+        """
+        r, nt, nf = int(self.n_rows[i]), int(self.n_t_eff[i]), int(self.n_f_eff[i])
+        return (
+            self.shares[i, :r, :nt],
+            self.iis[i, :nt],
+            self.t_slr[i, :nf],
+            self.t_cfg[i, :nf],
+        )
+
+
+def place_instance_blocks(
+    backend: "PlacementBackend",
+    batch: InstanceBatch,
+    opts: PlacementOptions | None = None,
+) -> list[BatchPlacement]:
+    """Loop-over-instances reference for the batched surface.
+
+    Runs ``backend.place_block`` on each instance's trimmed view; every
+    batched ``place_blocks`` implementation must match this bit-for-bit
+    per instance.  Also the walk's fallback for backends that predate the
+    batched contract.
+    """
+    return [
+        backend.place_block(*batch.instance_view(i), opts) for i in range(len(batch))
+    ]
+
+
+def dispatch_instance_blocks(
+    backend: "PlacementBackend",
+    batch: InstanceBatch,
+    opts: PlacementOptions | None = None,
+    *,
+    shard: int | str | None = None,
+):
+    """Batched async dispatch with per-instance fallback.
+
+    Prefers the backend's ``dispatch_blocks``; else its ``place_blocks``;
+    else per-instance ``dispatch_block``/``place_block``.  Returns a
+    zero-arg resolver yielding ``list[BatchPlacement]`` either way.
+
+    ``shard`` asks the backend to split the instance axis across that many
+    jax devices (``"auto"`` = as many as available); backends without a
+    device mesh — and the per-instance fallbacks — accept and ignore it,
+    clamping is the backend's job, and verdicts must not depend on it.
+    """
+    hook = getattr(backend, "dispatch_blocks", None)
+    if hook is not None:
+        return hook(batch, opts, shard=shard)
+    batched = getattr(backend, "place_blocks", None)
+    if batched is not None:
+        result = batched(batch, opts, shard=shard)
+        return lambda: result
+    solo = getattr(backend, "dispatch_block", None)
+    if solo is not None:
+        resolvers = [solo(*batch.instance_view(i), opts) for i in range(len(batch))]
+        return lambda: [r() for r in resolvers]
+    result = place_instance_blocks(backend, batch, opts)
+    return lambda: result
 
 
 @runtime_checkable

@@ -39,7 +39,9 @@ import numpy as np
 from ..placement import _EPS
 from .base import (
     BatchPlacement,
+    InstanceBatch,
     PlacementOptions,
+    place_instance_blocks,
     prepare_block,
     register_backend,
 )
@@ -133,3 +135,21 @@ class NumpyPlacementBackend:
             n_splits=n_splits,
             devices_used=devices_used,
         )
+
+    def place_blocks(
+        self,
+        batch: InstanceBatch,
+        opts: PlacementOptions | None = None,
+        *,
+        shard=None,
+    ) -> list[BatchPlacement]:
+        """Loop-over-instances — the bit-exact fleet-parallel reference.
+
+        Deliberately *not* vectorized over the instance axis: each
+        instance's trimmed view goes through the plain ``place_block``
+        path, so this is the ground truth every vmapped / grid-extended
+        batched backend is tested against (see the batching contract in
+        ``base.py``).  ``shard`` is accepted for signature compatibility
+        and ignored — there is no device mesh here.
+        """
+        return place_instance_blocks(self, batch, opts)

@@ -12,6 +12,13 @@ Float64 comes from the same scoped ``enable_x64`` as the jax backend, so
 interpret-mode verdicts are bit-identical to the scalar oracle.  On TPU
 hardware float64 is unavailable; there the kernel lowers at float32 and
 bit-parity relaxes to float32 accuracy (see ``kernels/placement_step.py``).
+
+Fleet-parallel batching: ``dispatch_blocks`` wraps the grid-extended
+kernel (:func:`repro.kernels.ops.placement_sweep_batch`) — the pallas
+grid gains a leading instance axis, so one kernel launch sweeps every
+instance's block with its own task/device tables.  ``shard`` is accepted
+and ignored: a pallas_call runs on one device, and instance-axis device
+layout is the jax backend's ``shard_map`` job (see ``base.py``).
 """
 
 from __future__ import annotations
@@ -20,7 +27,9 @@ import numpy as np
 
 from .base import (
     BatchPlacement,
+    InstanceBatch,
     PlacementOptions,
+    place_instance_blocks,
     prepare_block,
     register_backend,
 )
@@ -113,3 +122,110 @@ class PallasPlacementBackend:
         opts: PlacementOptions | None = None,
     ) -> BatchPlacement:
         return self.dispatch_block(shares, iis, t_slr, t_cfg, opts)()
+
+    def dispatch_blocks_raw(
+        self,
+        batch: InstanceBatch,
+        opts: PlacementOptions | None = None,
+        *,
+        shard=None,
+    ):
+        """Enqueue the grid-extended launch; resolver returns raw arrays.
+
+        Same raw batching contract as the jax backend (see ``base.py``):
+        the resolver yields the four untrimmed ``(B', Rp)`` verdict
+        arrays, and ``None`` signals a degenerate batch the kernel cannot
+        express (callers fall back to the per-instance surface).
+        ``shard`` is ignored: sharding the instance axis is ``shard_map``
+        territory (engine="jax"); a single kernel launch lives on one
+        device.
+        """
+        B = len(batch)
+        if B == 0:
+            return None
+        if opts is None:
+            opts = PlacementOptions()
+        if batch.shares.shape[2] == 0 or batch.t_slr.shape[1] == 0:
+            # Zero-width task/device tables cannot flow through the kernel;
+            # prepare_block's early paths answer every instance.
+            return None
+        import contextlib
+
+        from jax.experimental import enable_x64
+
+        from repro.kernels.ops import on_tpu, placement_sweep_batch
+
+        shares, iis = batch.shares, batch.iis
+        t_slr, t_cfg = batch.t_slr, batch.t_cfg
+        if on_tpu():
+            precision_ctx = contextlib.nullcontext()
+            shares = shares.astype(np.float32)
+            iis = iis.astype(np.float32)
+            t_slr = t_slr.astype(np.float32)
+            t_cfg = t_cfg.astype(np.float32)
+        else:
+            precision_ctx = enable_x64()
+        with precision_ctx:
+            outs = placement_sweep_batch(
+                shares,
+                iis,
+                t_slr,
+                t_cfg,
+                batch.n_t_eff,
+                batch.n_f_eff,
+                resume_cost=opts.resume_cost,
+                repay_init=opts.repay_init,
+                block_rows=self.block_rows,
+            )
+
+        return lambda: tuple(np.asarray(a) for a in outs)
+
+    def dispatch_blocks(
+        self,
+        batch: InstanceBatch,
+        opts: PlacementOptions | None = None,
+        *,
+        shard=None,
+    ):
+        """Enqueue one grid-extended kernel launch over all B instances.
+
+        The grid's leading axis walks instances, so every instance's
+        block sweeps in the same ``pallas_call`` — resolver contract as
+        the jax backend's (trimmed per-instance verdicts, bit-identical
+        to the numpy loop reference in interpret mode).
+        """
+        B = len(batch)
+        if B == 0:
+            return lambda: []
+        raw = self.dispatch_blocks_raw(batch, opts, shard=shard)
+        if raw is None:
+            result = place_instance_blocks(
+                self, batch, opts if opts is not None else PlacementOptions()
+            )
+            return lambda: result
+
+        def resolve() -> list[BatchPlacement]:
+            feas, placed, n_splits, devices_used = raw()
+            out = []
+            for i in range(B):
+                r = int(batch.n_rows[i])
+                out.append(
+                    BatchPlacement(
+                        feasible=feas[i, :r].astype(bool),
+                        placed_tasks=placed[i, :r].astype(np.int64),
+                        n_splits=n_splits[i, :r].astype(np.int64),
+                        devices_used=devices_used[i, :r].astype(np.int64),
+                    )
+                )
+            return out
+
+        return resolve
+
+    def place_blocks(
+        self,
+        batch: InstanceBatch,
+        opts: PlacementOptions | None = None,
+        *,
+        shard=None,
+    ) -> list[BatchPlacement]:
+        return self.dispatch_blocks(batch, opts, shard=shard)()

@@ -7,6 +7,11 @@ O(B) Python round-trips and exists for verification and tiny fleets, not
 for throughput.  Eager by nature, it omits the optional
 ``dispatch_block`` hook (``base.py``): pipelining a synchronous oracle
 would only reorder the Python work it is meant to pin down.
+
+It likewise omits the fleet-parallel ``place_blocks`` surface: the walk's
+:func:`repro.core.placement_backends.base.place_instance_blocks` fallback
+loops ``schedule_many`` batches through this oracle one instance at a
+time, which *is* the definition of correct here.
 """
 
 from __future__ import annotations

@@ -14,11 +14,18 @@ import jax
 
 from . import ref
 from .flash_attention import flash_attention_pallas
-from .placement_step import placement_sweep_pallas
+from .placement_step import placement_sweep_batch_pallas, placement_sweep_pallas
 from .rglru_scan import rglru_scan_pallas
 from .ssd_scan import ssd_scan_pallas
 
-__all__ = ["flash_attention", "ssd_scan", "rglru_scan", "placement_sweep", "on_tpu"]
+__all__ = [
+    "flash_attention",
+    "ssd_scan",
+    "rglru_scan",
+    "placement_sweep",
+    "placement_sweep_batch",
+    "on_tpu",
+]
 
 
 @functools.cache
@@ -101,6 +108,31 @@ def placement_sweep(
     defers until the next block is already in flight."""
     return placement_sweep_pallas(
         shares, iis, t_slr, t_cfg,
+        resume_cost=resume_cost, repay_init=repay_init, block_rows=block_rows,
+        interpret=not on_tpu(),
+    )
+
+
+def placement_sweep_batch(
+    shares,
+    iis,
+    t_slr,
+    t_cfg,
+    n_t_eff,
+    n_f_eff,
+    *,
+    resume_cost=0.0,
+    repay_init=True,
+    block_rows=1024,
+):
+    """Fleet-parallel fused sweep over a ``(B, R, n_t)`` instance stack
+    (Pallas on TPU, interpret elsewhere).  Oracle:
+    ``ref.placement_sweep_batch_ref``; scheduler-facing entry is
+    ``PADPSFRScheduler.schedule_many`` (engine="pallas").  Ragged
+    instances arrive padded — ``n_t_eff``/``n_f_eff`` carry each
+    instance's live extents so padded columns are never read."""
+    return placement_sweep_batch_pallas(
+        shares, iis, t_slr, t_cfg, n_t_eff, n_f_eff,
         resume_cost=resume_cost, repay_init=repay_init, block_rows=block_rows,
         interpret=not on_tpu(),
     )

@@ -33,7 +33,7 @@ from jax.experimental import pallas as pl
 
 from .ref import _PLACE_EPS
 
-__all__ = ["placement_sweep_pallas"]
+__all__ = ["placement_sweep_pallas", "placement_sweep_batch_pallas"]
 
 
 def _onehot(cursor, width: int):
@@ -168,6 +168,205 @@ def placement_sweep_pallas(
         repay_init=repay_init, block_rows=block_rows, interpret=interpret,
     )
     return feas[:B], placed[:B], n_splits[:B], devices_used[:B]
+
+
+def _placement_sweep_batch_kernel(
+    shares_ref,  # (1, bR, n_t) — one instance's row tile
+    iis_ref,  # (1, n_t) — this instance's task table
+    slr_ref,  # (1, n_f) — this instance's device capacities
+    cfg_ref,  # (1, n_f)
+    eff_ref,  # (1, 2) int32 — [n_t_eff, n_f_eff] for this instance
+    resume_ref,  # (1, 1)
+    feas_ref,  # (1, bR, 1) int32 out
+    placed_ref,  # (1, bR, 1) int32 out
+    splits_ref,  # (1, bR, 1) int32 out
+    devused_ref,  # (1, bR, 1) int32 out
+    *,
+    n_steps: int,
+    repay_init: bool,
+):
+    """Instance-axis twin of ``_placement_sweep_kernel``.
+
+    The grid is ``(B, Rp // bR)``: axis 0 walks instances (each grid cell
+    sees its own ``iis``/``t_slr``/``t_cfg`` tables and effective counts),
+    axis 1 walks row tiles within the instance's block.  The step
+    arithmetic is the single-instance kernel's with the static
+    ``n_t``/``n_f`` widths replaced by the *traced* effective counts —
+    padded columns/slots are never read, so live rows replay the exact
+    float64 chain and verdicts stay bit-identical per instance.
+    """
+    shares = shares_ref[0]  # (bR, n_t)
+    iis_row = iis_ref[...]  # (1, n_t)
+    slr_row = slr_ref[...]  # (1, n_f)
+    cfg_row = cfg_ref[...]
+    n_t_eff = eff_ref[0, 0]
+    n_f_eff = eff_ref[0, 1]
+    resume_cost = resume_ref[0, 0]
+    bB, n_t = shares.shape
+    n_f = slr_row.shape[1]
+    dt = shares.dtype
+
+    c0 = jnp.full((bB, 1), slr_row[0, 0], dtype=dt)
+    state = (
+        jnp.zeros((bB, 1), jnp.int32),  # j
+        jnp.zeros((bB, 1), jnp.int32),  # k
+        c0,  # c
+        jnp.zeros((bB, 1), dt),  # tsd
+        jnp.zeros((bB, 1), jnp.bool_),  # dead
+        jnp.zeros((bB, 1), jnp.int32),  # n_splits
+        jnp.zeros((bB, 1), jnp.int32),  # devices_used
+    )
+
+    def step(_, state):
+        j, k, c, tsd, dead, n_splits, devices_used = state
+        live = ~dead & (k < n_t_eff)
+        kk = jnp.minimum(k, n_t - 1)
+        jj = jnp.minimum(j, n_f - 1)
+        oh_k = _onehot(kk, n_t)
+        oh_j = _onehot(jj, n_f)
+        ii = _select(oh_k, iis_row)
+        tcfg = _select(oh_j, cfg_row)
+        carried = tsd > _PLACE_EPS
+        extra = jnp.where(carried, ii if repay_init else resume_cost, 0.0)
+        rem = _select(oh_k, shares) - tsd
+        avail = (c - tcfg) - extra
+        can_start = (c > tcfg + ii + _PLACE_EPS) & (avail > _PLACE_EPS) & live
+        split = can_start & (rem - avail > _PLACE_EPS)
+        fits = can_start & ~split
+
+        devices_used = jnp.where(
+            can_start, jnp.maximum(devices_used, jj + 1), devices_used
+        )
+        tsd = jnp.where(split, tsd + avail, tsd)
+        n_splits = n_splits + (split & ~carried)
+
+        c_after = avail - rem
+        closure = fits & (c_after <= tcfg + ii + _PLACE_EPS)
+        c = jnp.where(fits, c_after, c)
+        k = k + fits
+        tsd = jnp.where(fits, 0.0, tsd)
+
+        advance = (~can_start | split | closure) & live
+        j_next = j + advance
+        still_working = k < n_t_eff
+        overflow = advance & (j_next >= n_f_eff) & still_working
+        dead = dead | overflow
+        refill = advance & (j_next < n_f_eff)
+        c = jnp.where(refill, _select(_onehot(jnp.minimum(j_next, n_f - 1), n_f), slr_row), c)
+        return (j_next, k, c, tsd, dead, n_splits, devices_used)
+
+    j, k, c, tsd, dead, n_splits, devices_used = jax.lax.fori_loop(
+        0, n_steps, step, state
+    )
+    feas_ref[0] = ((k >= n_t_eff) & ~dead).astype(jnp.int32)
+    placed_ref[0] = k
+    splits_ref[0] = n_splits
+    devused_ref[0] = devices_used
+
+
+def placement_sweep_batch_pallas(
+    shares: jax.Array,  # (B, R, n_t) — stacked, padded instance blocks
+    iis: jax.Array,  # (B, n_t)
+    t_slr: jax.Array,  # (B, n_f)
+    t_cfg: jax.Array,  # (B, n_f)
+    n_t_eff: jax.Array,  # (B,) int
+    n_f_eff: jax.Array,  # (B,) int
+    *,
+    resume_cost=0.0,
+    repay_init: bool = True,
+    block_rows: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fleet-parallel fused sweep; same contract as
+    ``ref.placement_sweep_batch_ref``.
+
+    One ``pallas_call`` sweeps every instance's block: the grid gains a
+    leading instance axis, each cell streaming one ``(block_rows, n_t)``
+    row tile of one instance through VMEM together with that instance's
+    per-task/per-device tables.  Rows are padded to the next power of two
+    (>= 8) outside the jit boundary — distinct (B, R) batch shapes
+    collapse onto O(log R) compiled specializations per (B, n_t, n_f)
+    topology.  Padded rows and all-padding instances (``n_t_eff == 0``)
+    trivially "place" and are the caller's to slice off.
+    """
+    B, R, n_t = shares.shape
+    Rp = 8
+    while Rp < R:
+        Rp <<= 1
+    if Rp != R:
+        shares = jnp.pad(shares, ((0, 0), (0, Rp - R), (0, 0)))
+    eff = jnp.stack(
+        [jnp.asarray(n_t_eff, jnp.int32), jnp.asarray(n_f_eff, jnp.int32)], axis=1
+    )  # (B, 2)
+    feas, placed, n_splits, devices_used = _placement_sweep_batch_padded(
+        shares, iis, t_slr, t_cfg, eff, resume_cost,
+        repay_init=repay_init, block_rows=block_rows, interpret=interpret,
+    )
+    return (
+        feas[:, :R],
+        placed[:, :R],
+        n_splits[:, :R],
+        devices_used[:, :R],
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("repay_init", "block_rows", "interpret"),
+)
+def _placement_sweep_batch_padded(
+    shares: jax.Array,  # (B, Rp, n_t) — Rp a power of two >= 8
+    iis: jax.Array,
+    t_slr: jax.Array,
+    t_cfg: jax.Array,
+    eff: jax.Array,  # (B, 2) int32
+    resume_cost,
+    *,
+    repay_init: bool,
+    block_rows: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    B, Rp, n_t = shares.shape
+    n_f = t_slr.shape[1]
+    dt = shares.dtype
+    bR = min(block_rows, Rp)
+    if Rp % bR:
+        raise ValueError(f"block_rows={block_rows} must divide padded R={Rp}")
+
+    kernel = functools.partial(
+        _placement_sweep_batch_kernel,
+        n_steps=n_t + n_f,
+        repay_init=repay_init,
+    )
+    out_shape = [jax.ShapeDtypeStruct((B, Rp, 1), jnp.int32)] * 4
+    feas, placed, n_splits, devices_used = pl.pallas_call(
+        kernel,
+        grid=(B, Rp // bR),
+        in_specs=[
+            pl.BlockSpec((1, bR, n_t), lambda b, r: (b, r, 0)),
+            pl.BlockSpec((1, n_t), lambda b, r: (b, 0)),
+            pl.BlockSpec((1, n_f), lambda b, r: (b, 0)),
+            pl.BlockSpec((1, n_f), lambda b, r: (b, 0)),
+            pl.BlockSpec((1, 2), lambda b, r: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, r: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, bR, 1), lambda b, r: (b, r, 0))] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        shares,
+        iis.astype(dt),
+        t_slr.astype(dt),
+        t_cfg.astype(dt),
+        eff,
+        jnp.asarray(resume_cost, dtype=dt).reshape(1, 1),
+    )
+    return (
+        feas[..., 0].astype(bool),
+        placed[..., 0],
+        n_splits[..., 0],
+        devices_used[..., 0],
+    )
 
 
 @functools.partial(

@@ -16,6 +16,11 @@ multi-pod dry-run lowers these; the Pallas path is selected with
   sweep: a ``lax.while_loop`` advancing the (B,) carry/split state, the
   oracle for ``placement_step.placement_sweep_pallas`` and the program
   the jax placement backend jits.
+* ``placement_sweep_eff_ref`` / ``placement_sweep_batch_ref`` — the
+  fleet-parallel generalisation: the same sweep with *traced* effective
+  task/device counts (so padded instances compose under jit), vmapped
+  over a leading instance axis — one XLA program sweeps every
+  instance's TFS block at once.
 """
 
 from __future__ import annotations
@@ -35,6 +40,8 @@ __all__ = [
     "rglru_decode_step",
     "placement_step_ref",
     "placement_sweep_ref",
+    "placement_sweep_eff_ref",
+    "placement_sweep_batch_ref",
 ]
 
 
@@ -388,3 +395,111 @@ def placement_sweep_ref(
 
     j, k, c, tsd, dead, n_splits, devices_used = lax.while_loop(cond, body, state)
     return (k >= n_t) & ~dead, k, n_splits, devices_used
+
+
+def placement_sweep_eff_ref(
+    shares: jax.Array,  # (R, n_t) — n_t is the *padded* task width
+    iis: jax.Array,  # (n_t,)
+    t_slr: jax.Array,  # (n_f,) — n_f is the *padded* device width
+    t_cfg: jax.Array,  # (n_f,)
+    n_t_eff: jax.Array,  # scalar int — live task count (<= n_t)
+    n_f_eff: jax.Array,  # scalar int — live device count (<= n_f)
+    resume_cost: jax.Array = 0.0,
+    *,
+    repay_init: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """:func:`placement_sweep_ref` with *traced* effective counts.
+
+    Padded task columns / device slots beyond ``n_t_eff`` / ``n_f_eff``
+    are never read: the task cursor stops at ``n_t_eff`` and device
+    overflow triggers at ``n_f_eff``, so the float64 add/sub chain for a
+    live row is *exactly* the unpadded sweep's — bit-identical verdicts
+    regardless of how much padding an :class:`InstanceBatch` carries.
+    ``n_t_eff == 0`` rows come out all-feasible and ``n_f_eff == 0``
+    (with live tasks) all-infeasible, matching the degenerate-block
+    contract in ``placement_backends.base.prepare_block``.
+    """
+    R, n_t = shares.shape
+    n_f = t_slr.shape[0]
+    dt = shares.dtype
+    state = (
+        jnp.zeros(R, dtype=jnp.int32),  # j — device cursor
+        jnp.zeros(R, dtype=jnp.int32),  # k — task cursor
+        jnp.full(R, t_slr[0], dtype=dt),  # c — remaining capacity
+        jnp.zeros(R, dtype=dt),  # tsd — carried share of task k
+        jnp.zeros(R, dtype=bool),  # dead
+        jnp.zeros(R, dtype=jnp.int32),  # n_splits
+        jnp.zeros(R, dtype=jnp.int32),  # devices_used
+    )
+
+    def cond(state):
+        j, k, c, tsd, dead, n_splits, devices_used = state
+        return jnp.any(~dead & (k < n_t_eff))
+
+    def body(state):
+        j, k, c, tsd, dead, n_splits, devices_used = state
+        live = ~dead & (k < n_t_eff)
+        kk = jnp.minimum(k, n_t - 1)  # safe gather index at the pad edge
+        jj = jnp.minimum(j, n_f - 1)
+        ii = iis[kk]
+        tcfg = t_cfg[jj]
+        carried = tsd > _PLACE_EPS
+        extra = jnp.where(carried, ii if repay_init else resume_cost, 0.0)
+        rem = jnp.take_along_axis(shares, kk[:, None], axis=1)[:, 0] - tsd
+        avail = (c - tcfg) - extra
+        can_start = (c > tcfg + ii + _PLACE_EPS) & (avail > _PLACE_EPS) & live
+        split = can_start & (rem - avail > _PLACE_EPS)
+        fits = can_start & ~split
+
+        devices_used = jnp.where(
+            can_start, jnp.maximum(devices_used, jj + 1), devices_used
+        )
+        tsd = jnp.where(split, tsd + avail, tsd)
+        n_splits = n_splits + (split & ~carried)
+
+        c_after = avail - rem
+        closure = fits & (c_after <= tcfg + ii + _PLACE_EPS)
+        c = jnp.where(fits, c_after, c)
+        k = k + fits
+        tsd = jnp.where(fits, 0.0, tsd)
+
+        advance = (~can_start | split | closure) & live
+        j_next = j + advance
+        still_working = k < n_t_eff
+        overflow = advance & (j_next >= n_f_eff) & still_working
+        dead = dead | overflow
+        refill = advance & (j_next < n_f_eff)
+        c = jnp.where(refill, t_slr[jnp.minimum(j_next, n_f - 1)], c)
+        return (j_next, k, c, tsd, dead, n_splits, devices_used)
+
+    j, k, c, tsd, dead, n_splits, devices_used = lax.while_loop(cond, body, state)
+    return (k >= n_t_eff) & ~dead, k, n_splits, devices_used
+
+
+def placement_sweep_batch_ref(
+    shares: jax.Array,  # (B, R, n_t) — stacked instance blocks, padded
+    iis: jax.Array,  # (B, n_t)
+    t_slr: jax.Array,  # (B, n_f)
+    t_cfg: jax.Array,  # (B, n_f)
+    n_t_eff: jax.Array,  # (B,) int
+    n_f_eff: jax.Array,  # (B,) int
+    resume_cost: jax.Array = 0.0,
+    *,
+    repay_init: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fleet-parallel Alg-2 sweep: B instances' TFS blocks in one program.
+
+    ``vmap`` of :func:`placement_sweep_eff_ref` over the leading instance
+    axis — per-instance fleets (``t_slr``/``t_cfg`` rows), task tables
+    (``iis``) and effective counts all batch; ``resume_cost`` and
+    ``repay_init`` are global (the walk's :class:`PlacementOptions` apply
+    to the whole batch).  Returns ``(feasible, placed, n_splits,
+    devices_used)`` as (B, R) arrays.  Elementwise float64 arithmetic is
+    unchanged by the batching, so every instance's verdict row is
+    bit-identical to its own single-instance sweep.
+    """
+    return jax.vmap(
+        lambda s, i, sl, cf, nt, nf: placement_sweep_eff_ref(
+            s, i, sl, cf, nt, nf, resume_cost, repay_init=repay_init
+        )
+    )(shares, iis, t_slr, t_cfg, n_t_eff, n_f_eff)

@@ -17,6 +17,11 @@ failures — with three latency tiers per event:
    :class:`~repro.core.replan.PlanState` and stays bit-identical to a
    cold ``schedule()`` of the same task set.
 
+Beyond the event stream, :meth:`SchedulerService.what_if_many` answers
+speculative batched what-ifs — B candidate arrivals scheduled against the
+current task set in one fleet-parallel ``schedule_many`` sweep, with no
+service state touched.
+
 Every event returns a :class:`ReplanTelemetry` row, so a trace replay
 doubles as a latency/provenance log.  Arrivals that turn out infeasible
 are *rolled back* — the previous plan keeps serving and the telemetry
@@ -31,7 +36,7 @@ import dataclasses
 import time
 from typing import Iterable, Sequence
 
-from ..core.scheduler import PADPSFRScheduler, ScheduleResult
+from ..core.scheduler import PADPSFRScheduler, ScheduleInstance, ScheduleResult
 from ..core.task import FleetSpec, Task
 from .events import DeviceFailure, Event, TaskArrival, TaskExit
 
@@ -175,6 +180,37 @@ class SchedulerService:
             else:
                 raise TypeError(f"unknown event {ev!r}")
         return out
+
+    # -- batched what-ifs -----------------------------------------------
+    def what_if_many(
+        self,
+        arrivals: Sequence[Task],
+        *,
+        shard: int | str | None = None,
+    ) -> list[ScheduleResult]:
+        """Answer "what would admitting each of these cost?" in one sweep.
+
+        Purely speculative: each candidate arrival is scheduled against
+        the *current* tasks + that one candidate — B independent
+        instances batched through
+        :meth:`~repro.core.scheduler.PADPSFRScheduler.schedule_many` —
+        and nothing about the service (tasks, plan, cache, telemetry)
+        changes.  Returns one :class:`~repro.core.scheduler.ScheduleResult`
+        per candidate, in order; an inadmissible candidate simply comes
+        back ``feasible=False``.  ``shard`` is forwarded to the batched
+        walk (instance axis over jax devices; ignored off-jax engines).
+
+        This is the service-side fleet-parallel entry point: a placement
+        controller probing "which of these 64 queued jobs fits
+        cheapest?" pays one batched walk instead of 64 solo walks.
+        """
+        instances = [
+            ScheduleInstance(tasks=self._tasks + (a,), fleet=self.fleet)
+            for a in arrivals
+        ]
+        return self._sched.schedule_many(
+            instances, shard=shard, **self.placement_kw
+        )
 
     # -- internals ------------------------------------------------------
     def _cache_key(self, tasks: Sequence[Task]) -> tuple:

@@ -1,0 +1,423 @@
+"""Fleet-parallel batch scheduling: ``schedule_many`` parity and semantics.
+
+The batched lockstep walk (``PADPSFRScheduler.schedule_many``) must be an
+exact drop-in for a Python loop of solo ``schedule()`` calls, per engine:
+
+* edge semantics — ``schedule_many([])`` is ``[]``, a singleton batch
+  equals the solo call field-for-field, and an infeasible instance in a
+  mixed batch yields its own ``feasible=False`` result without touching
+  its batchmates;
+* >= 50 randomized heterogeneous instances (ragged task counts, variant
+  counts and fleets mixed in one batch) bit-identical to the solo loop on
+  every engine, including exact total-power ties;
+* ``InstanceBatch.pack`` shape/padding contract (uniform fast path and
+  ragged fallback) and the raw untrimmed ``dispatch_blocks_raw`` surface;
+* ``shard=`` layout: graceful single-device degrade, clamping, and — on
+  multi-device hosts (CI forces 4 via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``) — shard_map
+  parity with the unsharded walk.
+
+The randomized-instance harness is shared with
+``tests/test_placement_batched.py``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FleetSpec,
+    PADPSFRScheduler,
+    ScheduleInstance,
+    Task,
+    TaskVariant,
+)
+from repro.core.placement_backends import InstanceBatch, PlacementOptions, get_backend
+
+from test_placement_batched import (
+    _assert_results_identical,
+    _random_fleet,
+    _random_tasks,
+)
+
+try:
+    import jax  # noqa: F401
+
+    HAS_JAX = True
+except ImportError:  # pragma: no cover - exercised by the no-jax CI leg
+    HAS_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+
+ENGINES = [
+    "scalar",
+    "numpy",
+    pytest.param("jax", marks=needs_jax),
+    pytest.param("pallas", marks=needs_jax),
+]
+# Engines with a true batched surface (scalar loops solo schedules by
+# definition, so batching it against itself proves nothing).
+BATCHED_ENGINES = [
+    "numpy",
+    pytest.param("jax", marks=needs_jax),
+    pytest.param("pallas", marks=needs_jax),
+]
+
+
+def _solo_loop(insts, base_fleet, engine="numpy", **kw):
+    """The reference semantics: one solo ``schedule()`` per instance."""
+    out = []
+    for inst in insts:
+        fleet = inst.fleet if inst.fleet is not None else base_fleet
+        out.append(PADPSFRScheduler(fleet, engine=engine).schedule(inst.tasks, **kw))
+    return out
+
+
+def _random_instances(rng, n, *, max_tasks=4, max_variants=3):
+    return [
+        ScheduleInstance(
+            tasks=tuple(_random_tasks(rng, max_tasks, max_variants)),
+            fleet=_random_fleet(rng, max_devices=4),
+        )
+        for _ in range(n)
+    ]
+
+
+def _infeasible_tasks():
+    """Every variant's share alone exceeds any single-device capacity."""
+    return (
+        Task(
+            name="hog",
+            period=10.0,
+            data=1000.0,
+            init_interval=1.0,
+            variants=(TaskVariant(cu=1, throughput=1.0, power=5.0),),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# edge semantics, per engine
+# ---------------------------------------------------------------------------
+
+
+class TestEdgeSemantics:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_empty_batch_returns_empty_list(self, engine):
+        sched = PADPSFRScheduler(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0), engine=engine)
+        assert sched.schedule_many([]) == []
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_singleton_batch_equals_solo_schedule(self, engine):
+        rng = np.random.default_rng(11)
+        n = 3 if engine == "pallas" else 8
+        for _ in range(n):
+            tasks = _random_tasks(rng, max_tasks=4)
+            fleet = _random_fleet(rng, max_devices=4)
+            sched = PADPSFRScheduler(fleet, engine=engine)
+            solo = sched.schedule(tasks, count_all_rejects=True)
+            many = sched.schedule_many(
+                [ScheduleInstance(tasks=tuple(tasks))], count_all_rejects=True
+            )
+            assert len(many) == 1
+            _assert_results_identical(many[0], solo)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_infeasible_instance_in_mixed_batch(self, engine):
+        fleet = FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0)
+
+        def v(th, pw):
+            return TaskVariant(cu=1, throughput=th, power=pw)
+
+        ok = Task("a", period=10.0, data=20.0, init_interval=1.0,
+                  variants=(v(2.0, 5.0), v(4.0, 8.0)))
+        insts = [
+            ScheduleInstance(tasks=(ok,)),
+            ScheduleInstance(tasks=_infeasible_tasks()),
+            ScheduleInstance(tasks=(ok,)),
+        ]
+        sched = PADPSFRScheduler(fleet, engine=engine)
+        res = sched.schedule_many(insts)
+        assert [r.feasible for r in res] == [True, False, True]
+        bad = res[1]
+        assert bad.chosen_rank == -1
+        assert bad.combo is None and bad.plan is None
+        assert bad.total_power == float("inf")
+        # The feasible batchmates are untouched by the infeasible one.
+        solo = sched.schedule(insts[0].tasks)
+        _assert_results_identical(res[0], solo)
+        _assert_results_identical(res[2], solo)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_all_infeasible_batch(self, engine):
+        fleet = FleetSpec(n_f=1, t_slr=30.0, t_cfg=1.0)
+        sched = PADPSFRScheduler(fleet, engine=engine)
+        res = sched.schedule_many(
+            [ScheduleInstance(tasks=_infeasible_tasks()) for _ in range(3)]
+        )
+        assert len(res) == 3 and not any(r.feasible for r in res)
+
+    def test_bare_task_sequences_inherit_scheduler_fleet(self):
+        fleet = FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0)
+
+        def v(th, pw):
+            return TaskVariant(cu=1, throughput=th, power=pw)
+
+        a = Task("a", period=10.0, data=20.0, init_interval=1.0,
+                 variants=(v(2.0, 5.0), v(4.0, 8.0)))
+        sched = PADPSFRScheduler(fleet)
+        res = sched.schedule_many([[a]])
+        _assert_results_identical(res[0], sched.schedule([a]))
+
+
+# ---------------------------------------------------------------------------
+# randomized heterogeneous parity: >= 50 instances per batched engine
+# ---------------------------------------------------------------------------
+
+
+class TestRandomizedParity:
+    @pytest.mark.parametrize("engine", ["numpy", pytest.param("jax", marks=needs_jax)])
+    def test_heterogeneous_batches_match_solo_loop(self, engine):
+        """Ragged batches (mixed n_t, nv, fleets) vs the solo loop."""
+        rng = np.random.default_rng(2026)
+        checked = 0
+        while checked < 56:
+            insts = _random_instances(rng, int(rng.integers(2, 9)))
+            sched = PADPSFRScheduler(
+                FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0), engine=engine
+            )
+            many = sched.schedule_many(insts, count_all_rejects=True)
+            ref = _solo_loop(
+                insts, sched.fleet, engine=engine, count_all_rejects=True
+            )
+            for got, want in zip(many, ref):
+                _assert_results_identical(got, want)
+            checked += len(insts)
+        assert checked >= 50
+
+    @needs_jax
+    def test_pallas_interpret_batches_match_solo_loop(self):
+        """Interpret-mode pallas stays bit-identical (smaller sample: slow)."""
+        rng = np.random.default_rng(77)
+        insts = _random_instances(rng, 6, max_tasks=3, max_variants=2)
+        sched = PADPSFRScheduler(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0), engine="pallas")
+        many = sched.schedule_many(insts, count_all_rejects=True)
+        ref = _solo_loop(insts, sched.fleet, engine="numpy", count_all_rejects=True)
+        for got, want in zip(many, ref):
+            _assert_results_identical(got, want)
+
+    @pytest.mark.parametrize("engine", BATCHED_ENGINES)
+    def test_exact_power_ties_resolve_identically(self, engine):
+        """Combos with exactly equal total power: rank choice must match the
+        solo walk bit-for-bit (ties are where ordering bugs hide)."""
+
+        def v(cu, th, pw):
+            return TaskVariant(cu=cu, throughput=th, power=pw)
+
+        # Both tasks offer two variants at the SAME power but different
+        # shares, so the power-sorted TFS holds runs of exactly-tied rows.
+        tied = (
+            Task("x", period=10.0, data=20.0, init_interval=1.0,
+                 variants=(v(1, 2.0, 5.0), v(2, 4.0, 5.0))),
+            Task("y", period=10.0, data=40.0, init_interval=1.0,
+                 variants=(v(1, 4.0, 4.0), v(2, 8.0, 4.0))),
+        )
+        fleet = FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0)
+        sched = PADPSFRScheduler(fleet, engine=engine)
+        insts = [ScheduleInstance(tasks=tied), ScheduleInstance(tasks=tied[::-1])]
+        many = sched.schedule_many(insts, count_all_rejects=True)
+        for got, inst in zip(many, insts):
+            _assert_results_identical(
+                got, sched.schedule(inst.tasks, count_all_rejects=True)
+            )
+
+    @pytest.mark.parametrize("engine", BATCHED_ENGINES)
+    def test_block_size_invariance_in_batch(self, engine):
+        """The batched walk coalesces rounds internally; results must not
+        depend on the configured block size either way."""
+        rng = np.random.default_rng(5)
+        insts = _random_instances(rng, 4, max_tasks=3)
+        base = None
+        for bs in (1, 7, 64, None):
+            sched = PADPSFRScheduler(
+                FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0),
+                engine=engine,
+                block_size=bs,
+            )
+            res = sched.schedule_many(insts, count_all_rejects=True)
+            if base is None:
+                base = res
+            else:
+                for got, want in zip(res, base):
+                    _assert_results_identical(got, want)
+
+
+# ---------------------------------------------------------------------------
+# InstanceBatch packing and the raw dispatch surface
+# ---------------------------------------------------------------------------
+
+
+class TestInstanceBatch:
+    def test_pack_empty(self):
+        batch = InstanceBatch.pack([])
+        assert len(batch) == 0
+        assert batch.shares.shape == (0, 0, 0)
+
+    def test_pack_uniform_fast_path_shapes(self):
+        rng = np.random.default_rng(0)
+        blocks = [
+            (rng.uniform(size=(5, 3)), np.ones(3), np.full(2, 30.0), np.zeros(2))
+            for _ in range(4)
+        ]
+        batch = InstanceBatch.pack(blocks)
+        assert batch.shares.shape == (4, 5, 3)
+        assert batch.iis.shape == (4, 3)
+        assert batch.t_slr.shape == (4, 2) and batch.t_cfg.shape == (4, 2)
+        assert (batch.n_t_eff == 3).all()
+        assert (batch.n_f_eff == 2).all()
+        assert (batch.n_rows == 5).all()
+        for i in range(4):
+            s, iis, slr, cfg = batch.instance_view(i)
+            np.testing.assert_array_equal(s, blocks[i][0])
+            np.testing.assert_array_equal(slr, blocks[i][2])
+
+    def test_pack_ragged_pads_to_maxima(self):
+        rng = np.random.default_rng(1)
+        blocks = [
+            (rng.uniform(size=(2, 1)), np.ones(1), np.full(3, 30.0), np.zeros(3)),
+            (rng.uniform(size=(7, 4)), np.ones(4), np.full(1, 50.0), np.ones(1)),
+        ]
+        batch = InstanceBatch.pack(blocks)
+        assert batch.shares.shape == (2, 7, 4)
+        assert list(batch.n_rows) == [2, 7]
+        assert list(batch.n_t_eff) == [1, 4]
+        assert list(batch.n_f_eff) == [3, 1]
+        # Padded regions are zero; live views round-trip exactly.
+        assert batch.shares[0, 2:, :].sum() == 0.0
+        assert batch.shares[0, :, 1:].sum() == 0.0
+        for i in range(2):
+            s, iis, slr, cfg = batch.instance_view(i)
+            np.testing.assert_array_equal(s, blocks[i][0])
+            np.testing.assert_array_equal(iis, blocks[i][1])
+            np.testing.assert_array_equal(slr, blocks[i][2])
+            np.testing.assert_array_equal(cfg, blocks[i][3])
+
+    def test_pack_rejects_mismatched_ii_length(self):
+        with pytest.raises(ValueError):
+            InstanceBatch.pack(
+                [(np.ones((2, 3)), np.ones(2), np.full(2, 30.0), np.zeros(2))]
+            )
+
+    @pytest.mark.parametrize(
+        "engine", [pytest.param("jax", marks=needs_jax), pytest.param("pallas", marks=needs_jax)]
+    )
+    def test_dispatch_blocks_raw_matches_trimmed_surface(self, engine):
+        """Raw untrimmed (B', Rp) verdicts agree with ``dispatch_blocks`` on
+        every live row, and degenerate batches return ``None``."""
+        rng = np.random.default_rng(9)
+        backend = get_backend(engine)
+        blocks = [
+            (
+                rng.uniform(5.0, 25.0, size=(int(rng.integers(1, 6)), nt)),
+                rng.uniform(0.5, 3.0, nt),
+                np.full(nf, 30.0),
+                np.full(nf, 1.0),
+            )
+            for nt, nf in [(2, 2), (3, 1), (1, 3)]
+        ]
+        batch = InstanceBatch.pack(blocks)
+        opts = PlacementOptions()
+        raw = backend.dispatch_blocks_raw(batch, opts)
+        assert raw is not None
+        feas, placed, n_splits, devices_used = raw()
+        trimmed = backend.dispatch_blocks(batch, opts)()
+        assert len(trimmed) == len(batch)
+        for i, bp in enumerate(trimmed):
+            r = int(batch.n_rows[i])
+            np.testing.assert_array_equal(feas[i, :r].astype(bool), bp.feasible)
+            np.testing.assert_array_equal(placed[i, :r], bp.placed_tasks)
+            np.testing.assert_array_equal(n_splits[i, :r], bp.n_splits)
+            np.testing.assert_array_equal(devices_used[i, :r], bp.devices_used)
+        assert backend.dispatch_blocks_raw(InstanceBatch.pack([]), opts) is None
+
+
+# ---------------------------------------------------------------------------
+# shard= device layout
+# ---------------------------------------------------------------------------
+
+
+@needs_jax
+class TestSharding:
+    def test_resolve_shard_clamps(self):
+        from repro.core.placement_backends.jax_backend import resolve_shard
+
+        n_dev = len(jax.devices())
+        assert resolve_shard(None, 8) == 1
+        assert resolve_shard("auto", 0) == 1
+        # Largest power of two <= min(request, devices, batch).
+        assert resolve_shard(64, 2) <= 2
+        want = resolve_shard("auto", 64)
+        assert want & (want - 1) == 0  # power of two
+        assert want <= n_dev
+        with pytest.raises(ValueError):
+            resolve_shard(0, 8)
+
+    def test_shard_auto_single_or_multi_device_parity(self):
+        """shard='auto' must be a pure layout knob: identical results on
+        one device (plain-vmap degrade) and on many."""
+        rng = np.random.default_rng(21)
+        insts = _random_instances(rng, 5, max_tasks=3)
+        sched = PADPSFRScheduler(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0), engine="jax")
+        plain = sched.schedule_many(insts, count_all_rejects=True)
+        sharded = sched.schedule_many(insts, shard="auto", count_all_rejects=True)
+        for got, want in zip(sharded, plain):
+            _assert_results_identical(got, want)
+
+    @pytest.mark.skipif(
+        not HAS_JAX or len(__import__("jax").devices()) < 2,
+        reason="needs >= 2 jax devices (CI forces 4 via XLA_FLAGS)",
+    )
+    def test_shard_map_multi_device_matches_solo_loop(self):
+        from repro.core.placement_backends.jax_backend import resolve_shard
+
+        assert resolve_shard("auto", 8) >= 2  # the mesh is really in play
+        rng = np.random.default_rng(33)
+        insts = _random_instances(rng, 8, max_tasks=3)
+        sched = PADPSFRScheduler(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0), engine="jax")
+        for shard in ("auto", 2):
+            res = sched.schedule_many(insts, shard=shard, count_all_rejects=True)
+            ref = _solo_loop(insts, sched.fleet, engine="numpy", count_all_rejects=True)
+            for got, want in zip(res, ref):
+                _assert_results_identical(got, want)
+
+
+# ---------------------------------------------------------------------------
+# service-side entry point
+# ---------------------------------------------------------------------------
+
+
+class TestWhatIfMany:
+    def test_what_if_many_matches_solo_what_ifs(self):
+        from repro.service import SchedulerService
+
+        def v(th, pw):
+            return TaskVariant(cu=1, throughput=th, power=pw)
+
+        svc = SchedulerService(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0))
+        svc.submit(Task("base", period=10.0, data=20.0, init_interval=1.0,
+                        variants=(v(2.0, 5.0), v(4.0, 8.0))))
+        arrivals = [
+            Task("c1", period=10.0, data=40.0, init_interval=1.0,
+                 variants=(v(4.0, 4.0), v(8.0, 6.0))),
+            Task("hog", period=10.0, data=1000.0, init_interval=1.0,
+                 variants=(v(1.0, 5.0),)),
+        ]
+        res = svc.what_if_many(arrivals)
+        assert len(res) == 2
+        assert res[0].feasible and not res[1].feasible
+        # Speculative: the service itself is untouched.
+        assert [t.name for t in svc.tasks] == ["base"]
+        for got, a in zip(res, arrivals):
+            want = PADPSFRScheduler(svc.fleet, engine=svc.engine).schedule(
+                tuple(svc.tasks) + (a,)
+            )
+            _assert_results_identical(got, want)
