@@ -97,6 +97,34 @@ def trend(datas: list[dict], labels: list[str]) -> dict:
             lb for lb, d in zip(labels, datas) if not d.get("fleet_parallel")
         ],
     }
+    # And for k-fault tolerance: the resilience section only exists in
+    # artifacts recorded after the resilience mode landed — older files
+    # get None cells and a render-time note, never an exception.
+    res_premium: dict[str, list[float | None]] = {}
+    res_power: dict[str, list[float | None]] = {}
+    for d in datas:
+        for key in ((d.get("resilience") or {}).get("points") or {}):
+            res_premium.setdefault(key, [])
+            res_power.setdefault(key, [])
+    for d in datas:
+        pts = (d.get("resilience") or {}).get("points") or {}
+        for key in res_premium:
+            p = pts.get(key)
+            res_premium[key].append(
+                float(p["premium_pct"])
+                if p and p.get("premium_pct") is not None
+                else None
+            )
+            res_power[key].append(
+                float(p["power"]) if p and p.get("power") is not None else None
+            )
+    resilience = {
+        "premium_pct": res_premium,
+        "power": res_power,
+        "missing_files": [
+            lb for lb, d in zip(labels, datas) if not d.get("resilience")
+        ],
+    }
     return {
         "files": labels,
         "rows": rows,
@@ -104,6 +132,7 @@ def trend(datas: list[dict], labels: list[str]) -> dict:
         "numpy_jax_crossover_rows": crossovers,
         "replan": replan,
         "fleet_parallel": fleet_parallel,
+        "resilience": resilience,
     }
 
 
@@ -193,6 +222,33 @@ def render(t: dict) -> str:
         out.append(
             "fleet-parallel batching: no artifact carries fleet_parallel "
             "rows yet (all predate schedule_many) — skipped"
+        )
+    res = t.get("resilience") or {}
+    if any(
+        v is not None
+        for series in res.get("premium_pct", {}).values()
+        for v in series
+    ):
+        out.append("")
+        out.append("k-fault tolerance (power premium over k=0, %):")
+        for key, series in sorted(res["premium_pct"].items()):
+            cells = " ".join(
+                f"{_fmt(v, '%'):>14}" if v is not None else f"{'-':>14}"
+                for v in series
+            )
+            out.append(f"{'resilience ' + key:<24} {cells}")
+        if res.get("missing_files"):
+            out.append(
+                "note: no resilience section in "
+                + ", ".join(res["missing_files"])
+                + " (artifact predates the resilience benchmark; "
+                "re-run benchmarks.scheduler_scale to record it)"
+            )
+    elif res.get("missing_files"):
+        out.append("")
+        out.append(
+            "k-fault tolerance: no artifact carries resilience rows yet "
+            "(all predate the resilience benchmark) — skipped"
         )
     return "\n".join(out)
 

@@ -210,7 +210,9 @@ def config_overhead_lower_bound(
     return per_device + extra_events * cfg_min
 
 
-def search_feasible(tasks: Sequence[Task], fleet: FleetSpec) -> FeasibilityResult:
+def search_feasible(
+    tasks: Sequence[Task], fleet: FleetSpec, *, resilience: int = 0
+) -> FeasibilityResult:
     """Algorithm 1, vectorised. Materialises |TSS| f64 arrays (twice).
 
     Safe up to ~10^8 combinations on a 32 GB host; beyond that use
@@ -220,6 +222,14 @@ def search_feasible(tasks: Sequence[Task], fleet: FleetSpec) -> FeasibilityResul
     charge of :func:`config_overhead_lower_bound` (eq. 7 generalises to
     ``sum_shr <= sum_j t_slr_j - overhead_lb``); homogeneous fleets keep
     the paper's flat charge so the published Example-1/3 counts hold.
+
+    ``resilience=k`` tightens eq. 7 to the *worst-case survivor fleet*
+    (``fleet.survivors(k)``): a k-resilient verdict requires placement on
+    the surviving ``n_f - k`` devices, so their smaller budget is the
+    sound necessary condition — shares stay computed against the full
+    fleet's reference ``t_slr`` (eq. 5 is a task property, not a fleet
+    head-count property).  Raises ``ValueError`` when ``k >= n_f`` (the
+    scheduler answers that case with an infeasible result up front).
     """
     tasks = tuple(tasks)
     validate_tasks(tasks)
@@ -230,15 +240,18 @@ def search_feasible(tasks: Sequence[Task], fleet: FleetSpec) -> FeasibilityResul
             f"|TSS|={n_combos:,} too large to materialise; "
             "use iter_feasible_pruned()"
         )
+    # n_t == 0 is vacuously resilient (nothing to place), so the empty
+    # task set skips the survivor tightening even when k >= n_f.
+    bfleet = fleet.survivors(resilience) if resilience and n_t else fleet
     share_vecs = [t.shares(fleet.t_slr) for t in tasks]
     power_vecs = [t.powers() for t in tasks]
     sum_shr = outer_sum(share_vecs)
     total_power = outer_sum(power_vecs)
-    budget = fleet.workable_budget(n_t)
+    budget = bfleet.workable_budget(n_t)
     fit = sum_shr <= budget + 1e-9  # eq. 7 (tolerant <=)
-    if fleet.is_heterogeneous:
-        overhead = config_overhead_lower_bound(fleet, n_t, sum_shr)
-        fit &= sum_shr <= fleet.capacity - overhead + 1e-9
+    if bfleet.is_heterogeneous:
+        overhead = config_overhead_lower_bound(bfleet, n_t, sum_shr)
+        fit &= sum_shr <= bfleet.capacity - overhead + 1e-9
     return FeasibilityResult(
         tasks=tasks,
         fleet=fleet,
@@ -295,7 +308,7 @@ def _scalar_overhead_lb(fleet: FleetSpec, n_t: int, extra_cfgs: int = 1):
 
 
 def iter_feasible_pruned(
-    tasks: Sequence[Task], fleet: FleetSpec
+    tasks: Sequence[Task], fleet: FleetSpec, *, resilience: int = 0
 ) -> Iterator[TaskSetCombo]:
     """Yield TFS combos in ascending total-power order WITHOUT building TSS.
 
@@ -313,22 +326,27 @@ def iter_feasible_pruned(
     (lexicographic == TSS flat C order), so the emission order matches
     :meth:`FeasibilityResult.tfs_indices_by_power` combo for combo.
 
+    ``resilience=k`` prunes against the worst-case survivor fleet's
+    budget instead (see :func:`search_feasible`) so the streamed TFS
+    matches the exhaustive engine's resilience-mode ``fit_mask``.
+
     This is the reference engine for fleet-scale scheduling; the block
     walk uses the vectorised :func:`iter_feasible_pruned_blocks`.
     """
     tasks = tuple(tasks)
     validate_tasks(tasks)
     n_t = len(tasks)
-    budget = fleet.workable_budget(n_t)
+    bfleet = fleet.survivors(resilience) if resilience and n_t else fleet
+    budget = bfleet.workable_budget(n_t)
 
     shares = [t.shares(fleet.t_slr) for t in tasks]
     powers = [t.powers() for t in tasks]
     _, suf_pow_lo = _suffix_min_bounds(powers) if n_t else (None, np.zeros(1))
     _, suf_shr_lo = _suffix_min_bounds(shares) if n_t else (None, np.zeros(1))
 
-    hetero = fleet.is_heterogeneous
-    capacity = fleet.capacity
-    overhead_lb = _scalar_overhead_lb(fleet, n_t) if hetero else None
+    hetero = bfleet.is_heterogeneous
+    capacity = bfleet.capacity
+    overhead_lb = _scalar_overhead_lb(bfleet, n_t) if hetero else None
 
     # Node: (priority, chosen tuple, depth, prefix_pow, prefix_shr).  The
     # chosen tuple is the tiebreak: a prefix sorts before its extensions
@@ -616,6 +634,7 @@ class BlockEnumerator:
         *,
         min_expand: int = 16384,
         incumbent_power: float | None = None,
+        resilience: int = 0,
     ) -> None:
         tasks = tuple(tasks)
         validate_tasks(tasks)
@@ -626,11 +645,21 @@ class BlockEnumerator:
         self.incumbent_power = (
             float(incumbent_power) if incumbent_power is not None else np.inf
         )
-        self.budget = fleet.workable_budget(n_t)
+        self.resilience = int(resilience)
+        # eq. 7 prunes against the worst-case survivor fleet when a
+        # resilience guarantee is requested (see search_feasible): its
+        # budget is a necessary condition for the survivor sweep, hence
+        # for the combined primary-AND-backup verdict.  Shares keep the
+        # *original* fleet's reference t_slr.
+        bfleet = (
+            fleet.survivors(self.resilience) if self.resilience and n_t else fleet
+        )
+        self.budget = bfleet.workable_budget(n_t)
         self.share_vecs = tuple(t.shares(fleet.t_slr) for t in tasks)
         self.power_vecs = tuple(t.powers() for t in tasks)
-        self._hetero = fleet.is_heterogeneous
-        self._capacity = fleet.capacity
+        self._bfleet = bfleet
+        self._hetero = bfleet.is_heterogeneous
+        self._capacity = bfleet.capacity
         self.rows_emitted = 0
 
         # Completed rows buffer as (pp, ps, chosen) chunks until emittable;
@@ -722,7 +751,7 @@ class BlockEnumerator:
     def _passes(self, w: np.ndarray) -> np.ndarray:
         ok = w <= self.budget + 1e-9
         if self._hetero and ok.any():
-            overhead = config_overhead_lower_bound(self.fleet, self.n_t, w)
+            overhead = config_overhead_lower_bound(self._bfleet, self.n_t, w)
             ok &= ~(w > self._capacity - overhead + 1e-9)
         return ok
 
@@ -861,6 +890,7 @@ def iter_feasible_pruned_blocks(
     block_sizes: int | Iterable[int] | None = None,
     *,
     min_expand: int = 16384,
+    resilience: int = 0,
 ) -> Iterator[ComboBlock]:
     """Yield the TFS as power-ordered :class:`ComboBlock` array batches.
 
@@ -895,7 +925,9 @@ def iter_feasible_pruned_blocks(
     materialised.
     """
     sizes = _size_stream(block_sizes)
-    enum = BlockEnumerator(tasks, fleet, min_expand=min_expand)
+    enum = BlockEnumerator(
+        tasks, fleet, min_expand=min_expand, resilience=resilience
+    )
     want = next(sizes)
     while True:
         blk = enum.next_block(want)

@@ -107,6 +107,11 @@ class PlacementPlan:
     splits: list[DataSplit]
     unplaced: list[int]  # task indices that did not fit
     executed_share: list[float]  # per task, total share actually placed
+    # Resilience mode (``place_shares(..., resilience=k)``): the backup
+    # placement on the worst-case survivor fleet that proves the combo
+    # still meets deadlines after any k device failures.  ``feasible``
+    # is then the combined primary-AND-backup verdict.
+    backup: "PlacementPlan | None" = None
 
     @property
     def n_splits(self) -> int:
@@ -131,6 +136,7 @@ def place_shares(
     t_capture: float = 0.0,
     t_store: float = 0.0,
     repay_init: bool = True,
+    resilience: int = 0,
 ) -> PlacementPlan:
     """Simulate the DP-wrap style placement of per-task shares on the fleet.
 
@@ -139,6 +145,13 @@ def place_shares(
     charges its own ``t_cfg_j`` (heterogeneous fleets mix FPGA/GPU/CPU
     profiles; the homogeneous case reduces to the paper's Alg 3 exactly);
     splitting carries the remainder of the current task to device ``j+1``.
+
+    ``resilience=k`` additionally requires a *backup* placement: the same
+    shares must place on ``fleet.survivors(k)`` — the worst-case fleet
+    left by any k device failures — and ``feasible`` becomes the combined
+    primary-AND-backup verdict (the backup plan is attached as
+    ``plan.backup``).  ``k >= n_f`` can never be survived, so the plan is
+    infeasible outright (unless there are no tasks to place).
 
     This is the *scalar reference oracle* — the vectorised block engine in
     :mod:`repro.core.placement_batched` must agree with it bit-for-bit.
@@ -219,13 +232,27 @@ def place_shares(
     unplaced = list(range(k, n_t)) if not feasible else []
     if not feasible and tsd > _EPS and k < n_t and k not in unplaced:
         unplaced.insert(0, k)
-    return PlacementPlan(
+    plan = PlacementPlan(
         feasible=feasible,
         scripts=scripts,
         splits=plan_splits,
         unplaced=unplaced,
         executed_share=executed,
     )
+    if resilience and n_t:
+        if resilience >= fleet.n_f:
+            plan.feasible = False
+        elif plan.feasible:
+            plan.backup = place_shares(
+                shares,
+                init_intervals,
+                fleet.survivors(resilience),
+                t_capture=t_capture,
+                t_store=t_store,
+                repay_init=repay_init,
+            )
+            plan.feasible = plan.backup.feasible
+    return plan
 
 
 def place_combo(

@@ -102,6 +102,24 @@ batch is degenerate for this backend (caller falls back to
 prefers this surface so its round bookkeeping can run as a handful of
 vectorized reductions instead of B per-instance result objects.
 
+Resilience: the second, constrained pass
+----------------------------------------
+
+``opts.resilience = k`` (k > 0) turns every placement call into *two*
+sweeps: the primary sweep on the full fleet, and a worst-case-survivor
+sweep on :func:`survivor_tables` — the fleet minus the k devices whose
+loss hurts most (``repro.core.task.worst_case_survivor_indices``; exact
+on homogeneous fleets, a documented deterministic adversary on
+heterogeneous ones).  ``feasible`` is the AND of both verdicts;
+``placed_tasks`` / ``n_splits`` / ``devices_used`` keep describing the
+*primary* sweep (the plan that actually runs pre-failure — the backup
+placement is materialised only for the single winning row, by
+``place_shares(..., resilience=k)``).  The survivor set is a function of
+``(t_slr, t_cfg, k)`` alone, never of the candidate row, so resilient
+verdicts inherit the reject monotonicity the replanner relies on.
+``k >= n_f`` cannot be survived: every row with live tasks is infeasible
+(a ``prepare_block`` early path).
+
 Asynchronous dispatch (optional)
 --------------------------------
 
@@ -152,6 +170,8 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from ..task import worst_case_survivor_indices
+
 __all__ = [
     "BatchPlacement",
     "InstanceBatch",
@@ -165,6 +185,8 @@ __all__ = [
     "prepare_block",
     "place_instance_blocks",
     "dispatch_instance_blocks",
+    "survivor_tables",
+    "survivor_batch_tables",
 ]
 
 
@@ -206,10 +228,57 @@ class PlacementOptions:
     t_capture: float = 0.0
     t_store: float = 0.0
     repay_init: bool = True
+    # k-fault tolerance: > 0 adds the worst-case-survivor sweep (see the
+    # module docstring's resilience contract).
+    resilience: int = 0
 
     @property
     def resume_cost(self) -> float:
         return self.t_capture + self.t_store
+
+
+def survivor_tables(
+    t_slr: np.ndarray, t_cfg: np.ndarray, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-device tables of the worst-case surviving fleet (k failures).
+
+    The array-level twin of ``FleetSpec.survivors``: survivors keep their
+    original relative order, so the survivor sweep is exactly a solo sweep
+    on a smaller fleet.  Callers guard ``k < n_f`` (``prepare_block``'s
+    early path answers ``k >= n_f``).
+    """
+    keep = worst_case_survivor_indices(t_slr, t_cfg, k)
+    return t_slr[keep], t_cfg[keep]
+
+
+def survivor_batch_tables(
+    t_slr: np.ndarray,
+    t_cfg: np.ndarray,
+    n_f_eff: np.ndarray,
+    k: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-instance survivor tables for the fleet-parallel batched sweep.
+
+    For each instance the k worst-case failures are dropped from its live
+    device prefix and the survivors left-packed; instances with
+    ``n_f_eff <= k`` get ``n_f_eff_s == 0`` — the batched sweep's
+    empty-fleet semantics (all rows with live tasks infeasible, zero-task
+    rows feasible), matching the scalar oracle's ``resilience >= n_f``
+    verdicts.
+    """
+    B = t_slr.shape[0]
+    t_slr_s = np.zeros_like(t_slr)
+    t_cfg_s = np.zeros_like(t_cfg)
+    n_f_eff = np.asarray(n_f_eff)
+    n_f_eff_s = np.maximum(n_f_eff - k, 0).astype(n_f_eff.dtype)
+    for i in range(B):
+        nf = int(n_f_eff[i])
+        if nf <= k:
+            continue
+        keep = worst_case_survivor_indices(t_slr[i, :nf], t_cfg[i, :nf], k)
+        t_slr_s[i, : nf - k] = t_slr[i, keep]
+        t_cfg_s[i, : nf - k] = t_cfg[i, keep]
+    return t_slr_s, t_cfg_s, n_f_eff_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -426,7 +495,9 @@ def prepare_block(
     * ``n_t == 0`` — nothing to place, every row is feasible;
     * ``n_f == 0`` with ``n_t > 0`` — an empty fleet places nothing, every
       row is infeasible (regression: this used to IndexError in the numpy
-      engine's ``t_cfg_arr[jj]`` gather).
+      engine's ``t_cfg_arr[jj]`` gather);
+    * ``opts.resilience >= n_f`` with ``n_t > 0`` — losing every device
+      cannot be survived, every row is infeasible.
     """
     shares = np.ascontiguousarray(shares, dtype=np.float64)
     if shares.ndim != 2:
@@ -452,7 +523,7 @@ def prepare_block(
             n_splits=np.zeros(B, dtype=np.int64),
             devices_used=np.zeros(B, dtype=np.int64),
         )
-    elif n_f == 0:
+    elif n_f == 0 or opts.resilience >= n_f:
         early = BatchPlacement(
             feasible=np.zeros(B, dtype=bool),
             placed_tasks=np.zeros(B, dtype=np.int64),

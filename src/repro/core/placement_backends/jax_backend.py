@@ -50,6 +50,8 @@ from .base import (
     PlacementOptions,
     prepare_block,
     register_backend,
+    survivor_batch_tables,
+    survivor_tables,
 )
 
 __all__ = ["JaxPlacementBackend", "resolve_shard"]
@@ -78,6 +80,21 @@ def _jitted_sweep():
     from repro.kernels.ref import placement_sweep_ref
 
     return jax.jit(placement_sweep_ref, static_argnames=("repay_init",))
+
+
+@functools.cache
+def _jitted_resilient_sweep():
+    """Jit'd resilience-mode sweep: primary AND worst-case-survivor pass.
+
+    Both sweeps live in one jit program, so the second, constrained pass
+    of ``opts.resilience`` costs one extra while_loop inside the same
+    dispatch — not a second host round-trip.
+    """
+    import jax
+
+    from repro.kernels.ref import placement_sweep_resilient_ref
+
+    return jax.jit(placement_sweep_resilient_ref, static_argnames=("repay_init",))
 
 
 def resolve_shard(shard: int | str | None, Bp: int) -> int:
@@ -140,6 +157,67 @@ def _jitted_batch_sweep(n_shards: int):
     return jax.jit(sweep, static_argnames=("repay_init",))
 
 
+@functools.cache
+def _jitted_batch_resilient_sweep(n_shards: int):
+    """Jit'd fleet-parallel resilience sweep, optionally shard_map'd.
+
+    The resilience-mode twin of :func:`_jitted_batch_sweep`: three extra
+    instance-axis operands carry the per-instance worst-case-survivor
+    tables (``base.survivor_batch_tables``), partitioned alongside the
+    primary tables on meshes > 1.
+    """
+    import jax
+
+    from repro.kernels.ref import placement_sweep_batch_resilient_ref
+
+    if n_shards <= 1:
+        return jax.jit(
+            placement_sweep_batch_resilient_ref, static_argnames=("repay_init",)
+        )
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("i",))
+
+    def sweep(
+        shares,
+        iis,
+        t_slr,
+        t_cfg,
+        n_t_eff,
+        n_f_eff,
+        t_slr_s,
+        t_cfg_s,
+        n_f_eff_s,
+        resume_cost,
+        *,
+        repay_init,
+    ):
+        return shard_map(
+            functools.partial(
+                placement_sweep_batch_resilient_ref, repay_init=repay_init
+            ),
+            mesh=mesh,
+            in_specs=(P("i"),) * 9 + (P(),),
+            out_specs=(P("i"), P("i"), P("i"), P("i")),
+            check_rep=False,
+        )(
+            shares,
+            iis,
+            t_slr,
+            t_cfg,
+            n_t_eff,
+            n_f_eff,
+            t_slr_s,
+            t_cfg_s,
+            n_f_eff_s,
+            resume_cost,
+        )
+
+    return jax.jit(sweep, static_argnames=("repay_init",))
+
+
 @register_backend("jax")
 class JaxPlacementBackend:
     """``lax.while_loop`` sweep, float64 via scoped ``enable_x64``."""
@@ -180,16 +258,30 @@ class JaxPlacementBackend:
         Bp = _pad_rows(B)
         if Bp != B:
             shares = np.pad(shares, ((0, Bp - B), (0, 0)))
-        sweep = _jitted_sweep()
         with enable_x64():
-            outs = sweep(
-                shares,
-                iis,
-                t_slr_arr,
-                t_cfg_arr,
-                np.float64(opts.resume_cost),
-                repay_init=opts.repay_init,
-            )
+            if opts.resilience:
+                t_slr_s, t_cfg_s = survivor_tables(
+                    t_slr_arr, t_cfg_arr, opts.resilience
+                )
+                outs = _jitted_resilient_sweep()(
+                    shares,
+                    iis,
+                    t_slr_arr,
+                    t_cfg_arr,
+                    t_slr_s,
+                    t_cfg_s,
+                    np.float64(opts.resume_cost),
+                    repay_init=opts.repay_init,
+                )
+            else:
+                outs = _jitted_sweep()(
+                    shares,
+                    iis,
+                    t_slr_arr,
+                    t_cfg_arr,
+                    np.float64(opts.resume_cost),
+                    repay_init=opts.repay_init,
+                )
 
         def resolve() -> BatchPlacement:
             out = [np.asarray(a)[:B] for a in outs]
@@ -248,6 +340,13 @@ class JaxPlacementBackend:
         Rp = _pad_rows(batch.shares.shape[1])
         shares = batch.shares
         pad_b, pad_r = Bp - B, Rp - shares.shape[1]
+        if opts.resilience:
+            # Survivor tables are computed per live instance before padding
+            # (padded instances keep n_f_eff_s == 0, matching their
+            # n_t_eff == 0 no-op status).
+            t_slr_s, t_cfg_s, n_f_eff_s = survivor_batch_tables(
+                batch.t_slr, batch.t_cfg, batch.n_f_eff, opts.resilience
+            )
         if pad_b or pad_r:
             # Padded instances carry n_t_eff == 0 (all-feasible no-ops);
             # padded rows are garbage-swept and trimmed by the resolver.
@@ -258,18 +357,37 @@ class JaxPlacementBackend:
         n_t_eff = np.pad(batch.n_t_eff, (0, pad_b)) if pad_b else batch.n_t_eff
         n_f_eff = np.pad(batch.n_f_eff, (0, pad_b)) if pad_b else batch.n_f_eff
 
-        sweep = _jitted_batch_sweep(resolve_shard(shard, Bp))
+        n_shards = resolve_shard(shard, Bp)
         with enable_x64():
-            outs = sweep(
-                shares,
-                iis,
-                t_slr,
-                t_cfg,
-                n_t_eff,
-                n_f_eff,
-                np.float64(opts.resume_cost),
-                repay_init=opts.repay_init,
-            )
+            if opts.resilience:
+                if pad_b:
+                    t_slr_s = np.pad(t_slr_s, ((0, pad_b), (0, 0)))
+                    t_cfg_s = np.pad(t_cfg_s, ((0, pad_b), (0, 0)))
+                    n_f_eff_s = np.pad(n_f_eff_s, (0, pad_b))
+                outs = _jitted_batch_resilient_sweep(n_shards)(
+                    shares,
+                    iis,
+                    t_slr,
+                    t_cfg,
+                    n_t_eff,
+                    n_f_eff,
+                    t_slr_s,
+                    t_cfg_s,
+                    n_f_eff_s,
+                    np.float64(opts.resume_cost),
+                    repay_init=opts.repay_init,
+                )
+            else:
+                outs = _jitted_batch_sweep(n_shards)(
+                    shares,
+                    iis,
+                    t_slr,
+                    t_cfg,
+                    n_t_eff,
+                    n_f_eff,
+                    np.float64(opts.resume_cost),
+                    repay_init=opts.repay_init,
+                )
 
         return lambda: tuple(np.asarray(a) for a in outs)
 

@@ -44,9 +44,77 @@ from .base import (
     place_instance_blocks,
     prepare_block,
     register_backend,
+    survivor_tables,
 )
 
 __all__ = ["NumpyPlacementBackend"]
+
+
+def _sweep(
+    shares: np.ndarray,
+    iis: np.ndarray,
+    t_slr_arr: np.ndarray,
+    t_cfg_arr: np.ndarray,
+    resume_cost: float,
+    repay_init: bool,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """One vectorized Alg-2 sweep; returns (feasible, k, n_splits, devices)."""
+    B, n_t = shares.shape
+    n_f = t_slr_arr.shape[0]
+
+    # Per-row simulation state (mirrors the scalar walk's locals).
+    j = np.zeros(B, dtype=np.int64)  # device cursor
+    k = np.zeros(B, dtype=np.int64)  # task cursor (paper's sti)
+    c = np.full(B, t_slr_arr[0], dtype=np.float64)
+    tsd = np.zeros(B, dtype=np.float64)  # carried share of task k
+    dead = np.zeros(B, dtype=bool)
+    n_splits = np.zeros(B, dtype=np.int64)
+    devices_used = np.zeros(B, dtype=np.int64)
+
+    while True:
+        act = np.flatnonzero(~dead & (k < n_t))
+        if act.size == 0:
+            break
+        jj = j[act]
+        kk = k[act]
+        cc = c[act]
+        ii = iis[kk]
+        tcfg = t_cfg_arr[jj]
+        carried = tsd[act] > _EPS
+        extra = np.where(carried, ii if repay_init else resume_cost, 0.0)
+        rem = shares[act, kk] - tsd[act]
+        avail = (cc - tcfg) - extra
+        can_start = (cc > tcfg + ii + _EPS) & (avail > _EPS)
+        split = can_start & (rem - avail > _EPS)
+        fits = can_start & ~split
+
+        # Any placement (split or full) occupies the current device.
+        devices_used[act] = np.where(
+            can_start, np.maximum(devices_used[act], jj + 1), devices_used[act]
+        )
+
+        # Split: run `avail` here, carry the remainder to the next device.
+        tsd[act] = np.where(split, tsd[act] + avail, tsd[act])
+        n_splits[act] += (split & ~carried).astype(np.int64)
+
+        # Fits: consume cfg + extra + remaining share, advance the task.
+        c_after = avail - rem
+        closure = fits & (c_after <= tcfg + ii + _EPS)
+        c[act] = np.where(fits, c_after, c[act])
+        k[act] = kk + fits.astype(np.int64)
+        tsd[act] = np.where(fits, 0.0, tsd[act])
+
+        # Device advance: no-start, split carry, or closure after a fit.
+        advance = ~can_start | split | closure
+        j_next = jj + advance.astype(np.int64)
+        j[act] = j_next
+        still_working = k[act] < n_t
+        overflow = advance & (j_next >= n_f) & still_working
+        dead[act] |= overflow
+        refill = advance & (j_next < n_f)
+        c[act] = np.where(refill, t_slr_arr[np.minimum(j_next, n_f - 1)], c[act])
+
+    return (k >= n_t) & ~dead, k, n_splits, devices_used
 
 
 @register_backend("numpy")
@@ -72,65 +140,21 @@ class NumpyPlacementBackend:
         )
         if early is not None:
             return early
-        B, n_t = shares.shape
-        n_f = t_slr_arr.shape[0]
-        resume_cost = opts.resume_cost
-        repay_init = opts.repay_init
-
-        # Per-row simulation state (mirrors the scalar walk's locals).
-        j = np.zeros(B, dtype=np.int64)  # device cursor
-        k = np.zeros(B, dtype=np.int64)  # task cursor (paper's sti)
-        c = np.full(B, t_slr_arr[0], dtype=np.float64)
-        tsd = np.zeros(B, dtype=np.float64)  # carried share of task k
-        dead = np.zeros(B, dtype=bool)
-        n_splits = np.zeros(B, dtype=np.int64)
-        devices_used = np.zeros(B, dtype=np.int64)
-
-        while True:
-            act = np.flatnonzero(~dead & (k < n_t))
-            if act.size == 0:
-                break
-            jj = j[act]
-            kk = k[act]
-            cc = c[act]
-            ii = iis[kk]
-            tcfg = t_cfg_arr[jj]
-            carried = tsd[act] > _EPS
-            extra = np.where(carried, ii if repay_init else resume_cost, 0.0)
-            rem = shares[act, kk] - tsd[act]
-            avail = (cc - tcfg) - extra
-            can_start = (cc > tcfg + ii + _EPS) & (avail > _EPS)
-            split = can_start & (rem - avail > _EPS)
-            fits = can_start & ~split
-
-            # Any placement (split or full) occupies the current device.
-            devices_used[act] = np.where(
-                can_start, np.maximum(devices_used[act], jj + 1), devices_used[act]
+        feasible, k, n_splits, devices_used = _sweep(
+            shares, iis, t_slr_arr, t_cfg_arr, opts.resume_cost, opts.repay_init
+        )
+        if opts.resilience:
+            # Second, constrained pass: the same rows must also place on
+            # the worst-case survivor fleet (see base.py's resilience
+            # contract); the primary sweep keeps describing the plan.
+            t_slr_s, t_cfg_s = survivor_tables(
+                t_slr_arr, t_cfg_arr, opts.resilience
             )
-
-            # Split: run `avail` here, carry the remainder to the next device.
-            tsd[act] = np.where(split, tsd[act] + avail, tsd[act])
-            n_splits[act] += (split & ~carried).astype(np.int64)
-
-            # Fits: consume cfg + extra + remaining share, advance the task.
-            c_after = avail - rem
-            closure = fits & (c_after <= tcfg + ii + _EPS)
-            c[act] = np.where(fits, c_after, c[act])
-            k[act] = kk + fits.astype(np.int64)
-            tsd[act] = np.where(fits, 0.0, tsd[act])
-
-            # Device advance: no-start, split carry, or closure after a fit.
-            advance = ~can_start | split | closure
-            j_next = jj + advance.astype(np.int64)
-            j[act] = j_next
-            still_working = k[act] < n_t
-            overflow = advance & (j_next >= n_f) & still_working
-            dead[act] |= overflow
-            refill = advance & (j_next < n_f)
-            c[act] = np.where(refill, t_slr_arr[np.minimum(j_next, n_f - 1)], c[act])
-
+            feasible = feasible & _sweep(
+                shares, iis, t_slr_s, t_cfg_s, opts.resume_cost, opts.repay_init
+            )[0]
         return BatchPlacement(
-            feasible=(k >= n_t) & ~dead,
+            feasible=feasible,
             placed_tasks=k,
             n_splits=n_splits,
             devices_used=devices_used,

@@ -32,6 +32,8 @@ from .base import (
     place_instance_blocks,
     prepare_block,
     register_backend,
+    survivor_batch_tables,
+    survivor_tables,
 )
 
 __all__ = ["PallasPlacementBackend"]
@@ -80,6 +82,12 @@ class PallasPlacementBackend:
 
         from repro.kernels.ops import on_tpu, placement_sweep
 
+        # Survivor tables are selected at float64 (the lexsort that picks
+        # the worst-case adversary must match the other backends) before
+        # any TPU float32 cast.
+        surv = None
+        if opts.resilience:
+            surv = survivor_tables(t_slr_arr, t_cfg_arr, opts.resilience)
         # TPUs have no float64: lower the kernel at float32 there (verdicts
         # are float32-accurate, not bit-pinned); everywhere else the kernel
         # interprets at float64 under scoped x64 and stays bit-identical.
@@ -89,6 +97,8 @@ class PallasPlacementBackend:
             iis = iis.astype(np.float32)
             t_slr_arr = t_slr_arr.astype(np.float32)
             t_cfg_arr = t_cfg_arr.astype(np.float32)
+            if surv is not None:
+                surv = tuple(a.astype(np.float32) for a in surv)
         else:
             precision_ctx = enable_x64()
         with precision_ctx:
@@ -101,11 +111,28 @@ class PallasPlacementBackend:
                 repay_init=opts.repay_init,
                 block_rows=self.block_rows,
             )
+            outs_s = None
+            if surv is not None:
+                # Second, constrained pass: same rows on the worst-case
+                # survivor fleet, enqueued back-to-back so both kernels
+                # overlap the walk's next-block enumeration.
+                outs_s = placement_sweep(
+                    shares,
+                    iis,
+                    surv[0],
+                    surv[1],
+                    resume_cost=opts.resume_cost,
+                    repay_init=opts.repay_init,
+                    block_rows=self.block_rows,
+                )
 
         def resolve() -> BatchPlacement:
             out = [np.asarray(a) for a in outs]
+            feasible = out[0].astype(bool)
+            if outs_s is not None:
+                feasible = feasible & np.asarray(outs_s[0]).astype(bool)
             return BatchPlacement(
-                feasible=out[0].astype(bool),
+                feasible=feasible,
                 placed_tasks=out[1].astype(np.int64),
                 n_splits=out[2].astype(np.int64),
                 devices_used=out[3].astype(np.int64),
@@ -157,12 +184,25 @@ class PallasPlacementBackend:
 
         shares, iis = batch.shares, batch.iis
         t_slr, t_cfg = batch.t_slr, batch.t_cfg
+        surv = None
+        if opts.resilience:
+            # Per-instance worst-case survivor tables, selected at float64
+            # before any TPU cast (see dispatch_block).
+            surv = survivor_batch_tables(
+                t_slr, t_cfg, batch.n_f_eff, opts.resilience
+            )
         if on_tpu():
             precision_ctx = contextlib.nullcontext()
             shares = shares.astype(np.float32)
             iis = iis.astype(np.float32)
             t_slr = t_slr.astype(np.float32)
             t_cfg = t_cfg.astype(np.float32)
+            if surv is not None:
+                surv = (
+                    surv[0].astype(np.float32),
+                    surv[1].astype(np.float32),
+                    surv[2],
+                )
         else:
             precision_ctx = enable_x64()
         with precision_ctx:
@@ -177,8 +217,27 @@ class PallasPlacementBackend:
                 repay_init=opts.repay_init,
                 block_rows=self.block_rows,
             )
+            outs_s = None
+            if surv is not None:
+                outs_s = placement_sweep_batch(
+                    shares,
+                    iis,
+                    surv[0],
+                    surv[1],
+                    batch.n_t_eff,
+                    surv[2],
+                    resume_cost=opts.resume_cost,
+                    repay_init=opts.repay_init,
+                    block_rows=self.block_rows,
+                )
 
-        return lambda: tuple(np.asarray(a) for a in outs)
+        def resolve_raw():
+            feas, placed, n_splits, devices_used = (np.asarray(a) for a in outs)
+            if outs_s is not None:
+                feas = feas.astype(bool) & np.asarray(outs_s[0]).astype(bool)
+            return feas, placed, n_splits, devices_used
+
+        return resolve_raw
 
     def dispatch_blocks(
         self,

@@ -73,6 +73,7 @@ class ScalarPlacementBackend:
                 t_capture=opts.t_capture,
                 t_store=opts.t_store,
                 repay_init=opts.repay_init,
+                resilience=opts.resilience,
             )
             feasible[r] = plan.feasible
             placed[r] = n_t - len(plan.unplaced) if not plan.feasible else n_t

@@ -32,7 +32,10 @@ facts make the old walk's work reusable bit-for-bit:
    task's variants.  Because :class:`~repro.core.feasibility.ComboBlock`
    carries each row's left-to-right folded share sum (``sum_shr``), the
    filter re-applies eq. 7 with the identical float64 operations a cold
-   enumeration of ``T'`` would fold — same bits, same verdicts.
+   enumeration of ``T'`` would fold — same bits, same verdicts.  With
+   ``resilience=k`` the same argument holds against the worst-case
+   survivor fleet's budget: the survivor set is a function of the fleet
+   alone (never the task set), so it is unchanged across arrivals.
 2. **Reject monotonicity.**  The placement simulator
    (:func:`repro.core.placement.place_shares`) walks tasks strictly in
    order, so a row that failed placement for ``T`` fails for every
@@ -75,6 +78,7 @@ from .scheduler import (
     ScheduleResult,
     WalkStats,
     _block_size_schedule,
+    _resilience_infeasible_result,
     _walk_tfs_blocks,
 )
 from .task import FleetSpec, Task, TaskSetCombo, combo_count
@@ -166,13 +170,18 @@ class _Recorder:
         return pow_, sumshr, chosen, verdict
 
 
-def _eq7_leaf_mask(fleet: FleetSpec, n_t: int, w: np.ndarray) -> np.ndarray:
+def _eq7_leaf_mask(
+    fleet: FleetSpec, n_t: int, w: np.ndarray, resilience: int = 0
+) -> np.ndarray:
     """The enumerator's leaf-level eq-7 test, bit-identical (same float64
-    comparisons as :meth:`BlockEnumerator._passes` on a completed row)."""
-    ok = w <= fleet.workable_budget(n_t) + 1e-9
-    if fleet.is_heterogeneous and ok.any():
-        overhead = config_overhead_lower_bound(fleet, n_t, w)
-        ok &= ~(w > fleet.capacity - overhead + 1e-9)
+    comparisons as :meth:`BlockEnumerator._passes` on a completed row).
+    ``resilience`` switches to the worst-case survivor fleet's budget,
+    matching the enumerator's resilience-mode pruning."""
+    bfleet = fleet.survivors(resilience) if resilience and n_t else fleet
+    ok = w <= bfleet.workable_budget(n_t) + 1e-9
+    if bfleet.is_heterogeneous and ok.any():
+        overhead = config_overhead_lower_bound(bfleet, n_t, w)
+        ok &= ~(w > bfleet.capacity - overhead + 1e-9)
     return ok
 
 
@@ -217,7 +226,15 @@ def schedule_recorded(
     service layer's steady-state mode.
     """
     tasks = tuple(tasks)
-    enum = BlockEnumerator(tasks, fleet)
+    k_res = int(placement_kw.get("resilience", 0))
+    if k_res >= fleet.n_f and tasks:
+        # A fleet that cannot survive k failures admits nothing; answered
+        # here (not just in the facade) because replans re-enter after
+        # fleet shrinkage.  Thin state: the next replan walks fresh.
+        res = _resilience_infeasible_result(tasks)
+        res.plan_state = _thin_state(tasks, fleet, backend, placement_kw, res)
+        return res
+    enum = BlockEnumerator(tasks, fleet, resilience=k_res)
     complete_below = np.inf
     if incumbent_power is not None:
         enum.prune_above(incumbent_power)
@@ -374,7 +391,8 @@ def _replan_general(
             idx = [prev[t.name] for t in tasks]
             combo = _combo_from_idx(idx, share_vecs, power_vecs)
             w = np.asarray([float(sum(combo.shares))])
-            if _eq7_leaf_mask(fleet, len(tasks), w)[0] and _row_placeable(
+            k_res = int(placement_kw.get("resilience", 0))
+            if _eq7_leaf_mask(fleet, len(tasks), w, k_res)[0] and _row_placeable(
                 np.asarray(combo.shares),
                 tasks,
                 fleet,
@@ -464,7 +482,7 @@ def _replan_arrival(
     for vv in np.argsort(pow_j, kind="stable"):
         vv = int(vv)
         w = np.asarray([prev_sumshr + shr_j[vv]])
-        if not _eq7_leaf_mask(fleet, n2, w)[0]:
+        if not _eq7_leaf_mask(fleet, n2, w, opts.resilience)[0]:
             continue
         row = np.asarray(list(prev.shares) + [float(shr_j[vv])])
         if _row_placeable(row, tasks2, fleet, backend, opts):
@@ -520,7 +538,7 @@ def _replan_arrival(
     for v in range(nv_j):
         cp = all_pow[disp] + pow_j[v]
         cs = all_sumshr[disp] + shr_j[v]
-        keep = (cp <= P_inc) & _eq7_leaf_mask(fleet, n2, cs)
+        keep = (cp <= P_inc) & _eq7_leaf_mask(fleet, n2, cs, opts.resilience)
         sel = disp[keep]
         cand_parent.append(sel)
         cand_v.append(np.full(sel.size, v, dtype=np.int64))
@@ -573,7 +591,7 @@ def _replan_arrival(
             cp = all_pow[rej] + pow_j[v]
             cs = all_sumshr[rej] + shr_j[v]
             n_rej_cand += int(
-                ((cp <= P_inc) & _eq7_leaf_mask(fleet, n2, cs)).sum()
+                ((cp <= P_inc) & _eq7_leaf_mask(fleet, n2, cs, opts.resilience)).sum()
             )
         res = ScheduleResult(
             feasible=False,
@@ -620,7 +638,7 @@ def _replan_arrival(
     for v in range(nv_j):
         cp = all_pow[rej] + pow_j[v]
         cs = all_sumshr[rej] + shr_j[v]
-        ok = (cp <= win_pow) & _eq7_leaf_mask(fleet, n2, cs)
+        ok = (cp <= win_pow) & _eq7_leaf_mask(fleet, n2, cs, opts.resilience)
         sel = rej[ok]
         cps = cp[ok]
         rank += int((cps < win_pow).sum())

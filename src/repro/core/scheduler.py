@@ -362,6 +362,43 @@ def _walk_tfs_blocks(
     return winner[0], winner[1], winner[2], rejects
 
 
+def _validate_resilience(placement_kw: dict) -> int:
+    """Extract and validate the ``resilience`` placement option.
+
+    Raised here — at the scheduler facade — so a bad ``resilience`` fails
+    loudly at ``schedule()`` time instead of deep inside an enumerator or
+    backend sweep.  ``k >= n_f`` is *not* an error (fleets shrink under
+    failures); the caller answers it with an infeasible result.
+    """
+    k = placement_kw.get("resilience", 0)
+    if isinstance(k, bool) or not isinstance(k, (int, np.integer)) or k < 0:
+        raise ValueError(
+            f"resilience must be a non-negative integer, got {k!r}"
+        )
+    return int(k)
+
+
+def _resilience_infeasible_result(tasks: Sequence[Task]) -> ScheduleResult:
+    """The ``k >= n_f`` answer: no combo can survive losing every device.
+
+    The resilient TFS is empty by definition, so ``n_tfs == 0`` and every
+    TSS row is unworkable — returned as a result rather than raised so a
+    service whose fleet shrinks below ``k`` degrades instead of crashing.
+    """
+    n_tss = combo_count(tasks)
+    return ScheduleResult(
+        feasible=False,
+        combo=None,
+        plan=None,
+        chosen_rank=-1,
+        n_tss=n_tss,
+        n_tfs=0,
+        n_tnfs=n_tss,
+        n_placement_rejects=0,
+        total_power=float("inf"),
+    )
+
+
 def _block_size_schedule(block_size: int | None) -> Iterator[int]:
     """The walk's block sizes: a fixed size, or the geometric ramp."""
     if block_size is None:
@@ -472,7 +509,10 @@ def _select_streaming_blocks(
     sizes = _block_size_schedule(block_size)
 
     def blocks():
-        for blk in iter_feasible_pruned_blocks(tasks, fleet, sizes):
+        for blk in iter_feasible_pruned_blocks(
+            tasks, fleet, sizes,
+            resilience=placement_kw.get("resilience", 0),
+        ):
             yield blk.shares, blk
 
     return _walk_tfs_blocks(
@@ -688,8 +728,10 @@ class PADPSFRScheduler:
         self.block_size = block_size
         self._backend = get_backend(self.engine)
 
-    def feasibility(self, tasks: Sequence[Task]) -> FeasibilityResult:
-        return search_feasible(tasks, self.fleet)
+    def feasibility(
+        self, tasks: Sequence[Task], *, resilience: int = 0
+    ) -> FeasibilityResult:
+        return search_feasible(tasks, self.fleet, resilience=resilience)
 
     def _use_exhaustive(self, tasks: Sequence[Task]) -> bool:
         if self.exhaustive is not None:
@@ -710,6 +752,16 @@ class PADPSFRScheduler:
         combos (eq. 7), walk them in ascending total power through the
         placement backend, and return the first placeable combo with its
         full per-device plan.
+
+        ``resilience=k`` (a placement option, threaded to every backend
+        via :class:`PlacementOptions`) requires the chosen combo to stay
+        placeable after *any* k device failures: eq. 7 tightens to the
+        worst-case survivor fleet's budget and every candidate row must
+        pass a second sweep on ``fleet.survivors(k)`` (see the resilience
+        contract in :mod:`repro.core.placement_backends.base`).  The
+        winning plan carries its survivor placement as ``plan.backup``.
+        ``k >= n_f`` returns an infeasible result rather than raising, so
+        a service whose fleet shrinks below ``k`` degrades gracefully.
 
         With ``record_state=True`` the walk additionally snapshots every
         enumerated row, its placement verdict, and the live
@@ -741,6 +793,9 @@ class PADPSFRScheduler:
             (True, (0, 1), 11.0)
         """
         tasks = tuple(tasks)
+        resilience = _validate_resilience(placement_kw)
+        if resilience >= self.fleet.n_f and tasks:
+            return _resilience_infeasible_result(tasks)
         if record_state:
             from . import replan as _replan
 
@@ -755,7 +810,11 @@ class PADPSFRScheduler:
                 **placement_kw,
             )
         use_exhaustive = self._use_exhaustive(tasks)
-        feas = search_feasible(tasks, self.fleet) if use_exhaustive else None
+        feas = (
+            search_feasible(tasks, self.fleet, resilience=resilience)
+            if use_exhaustive
+            else None
+        )
         if self.engine == "scalar":
             # The paper's walk as written: one scalar simulation per row
             # with early exit at the winner, and winner/rank/reject
@@ -764,7 +823,7 @@ class PADPSFRScheduler:
             stream: Iterator[TaskSetCombo] = (
                 feas.iter_tfs_by_power()
                 if feas is not None
-                else iter_feasible_pruned(tasks, self.fleet)
+                else iter_feasible_pruned(tasks, self.fleet, resilience=resilience)
             )
             combo, plan, rank, rejects = select_lowest_power(
                 stream,
@@ -815,7 +874,11 @@ class PADPSFRScheduler:
         return ScheduleInstance(tasks=tuple(inst))
 
     def _instance_walk(
-        self, index: int, inst: ScheduleInstance, n_batch: int = 1
+        self,
+        index: int,
+        inst: ScheduleInstance,
+        n_batch: int = 1,
+        resilience: int = 0,
     ) -> _InstanceWalk:
         """Build one instance's block stream for the lockstep many-walk.
 
@@ -839,14 +902,16 @@ class PADPSFRScheduler:
         if n_batch > 1:
             sizes = _coalesced_sizes(sizes, max(1, _MANY_ROUND_ROWS // n_batch))
         if self._use_exhaustive(tasks):
-            feas = search_feasible(tasks, fleet)
+            feas = search_feasible(tasks, fleet, resilience=resilience)
             stream = _sorted_tfs_blocks(feas, sizes)
             materialize = lambda idx, r: feas.combo_at(int(idx[r]))  # noqa: E731
         else:
             feas = None
 
             def blocks():
-                for blk in iter_feasible_pruned_blocks(tasks, fleet, sizes):
+                for blk in iter_feasible_pruned_blocks(
+                    tasks, fleet, sizes, resilience=resilience
+                ):
                     yield blk.shares, blk
 
             stream = blocks()
@@ -916,15 +981,26 @@ class PADPSFRScheduler:
         insts = [self._coerce_instance(x) for x in instances]
         if not insts:
             return []
+        resilience = _validate_resilience(placement_kw)
         if self.engine == "scalar":
             # The row-at-a-time oracle has no block surface to batch; a
             # loop of solo schedules *is* its fleet-parallel semantics
             # (and what the property tests pin the batched engines to).
             return [self._solo_schedule(i, count_all_rejects, placement_kw) for i in insts]
-        walks = [
-            self._instance_walk(i, inst, n_batch=len(insts))
-            for i, inst in enumerate(insts)
-        ]
+        # Instances whose (own) fleet cannot survive k failures are
+        # answered up front, exactly like the solo path — no walk entry.
+        results: list[ScheduleResult | None] = [None] * len(insts)
+        walks = []
+        for i, inst in enumerate(insts):
+            fleet = inst.fleet if inst.fleet is not None else self.fleet
+            if resilience >= fleet.n_f and inst.tasks:
+                results[i] = _resilience_infeasible_result(inst.tasks)
+            else:
+                walks.append(
+                    self._instance_walk(
+                        i, inst, n_batch=len(insts), resilience=resilience
+                    )
+                )
         _walk_many_tfs_blocks(
             walks,
             backend=self._backend,
@@ -933,21 +1009,18 @@ class PADPSFRScheduler:
             walk_stats=walk_stats,
             **placement_kw,
         )
-        results = []
         for w in walks:
             combo, plan, rank = w.winner if w.winner is not None else (None, None, -1)
-            results.append(
-                ScheduleResult(
-                    feasible=combo is not None,
-                    combo=combo,
-                    plan=plan,
-                    chosen_rank=rank,
-                    n_tss=combo_count(w.tasks),
-                    n_tfs=w.feas.n_tfs if w.feas is not None else -1,
-                    n_tnfs=w.feas.n_tnfs if w.feas is not None else -1,
-                    n_placement_rejects=w.rejects,
-                    total_power=combo.total_power if combo else float("inf"),
-                )
+            results[w.index] = ScheduleResult(
+                feasible=combo is not None,
+                combo=combo,
+                plan=plan,
+                chosen_rank=rank,
+                n_tss=combo_count(w.tasks),
+                n_tfs=w.feas.n_tfs if w.feas is not None else -1,
+                n_tnfs=w.feas.n_tnfs if w.feas is not None else -1,
+                n_placement_rejects=w.rejects,
+                total_power=combo.total_power if combo else float("inf"),
             )
         return results
 

@@ -24,7 +24,34 @@ __all__ = [
     "FleetSpec",
     "TaskSetCombo",
     "validate_tasks",
+    "worst_case_survivor_indices",
 ]
+
+
+def worst_case_survivor_indices(
+    t_slr: np.ndarray, t_cfg: np.ndarray, k: int
+) -> np.ndarray:
+    """Ascending indices of the devices left alive by the worst ``k`` failures.
+
+    The adversary removes the ``k`` devices whose loss hurts most: the
+    largest-capacity ones, breaking capacity ties toward the cheaper
+    reconfiguration cost (so the survivors keep the expensive-cfg
+    devices), then toward the lowest index.  Deterministic and a function
+    of the fleet alone — never of the candidate row — so resilience
+    verdicts keep the reject-monotonicity the replanner relies on.  On a
+    homogeneous fleet every k-subset of survivors is equivalent, so the
+    worst case is exact; on heterogeneous fleets it is the documented
+    adversary the guarantee is verified against.
+    """
+    t_slr = np.asarray(t_slr, dtype=np.float64)
+    t_cfg = np.asarray(t_cfg, dtype=np.float64)
+    n_f = t_slr.shape[0]
+    if not 0 <= k < n_f:
+        raise ValueError(f"resilience must satisfy 0 <= k < n_f={n_f}, got {k}")
+    if k == 0:
+        return np.arange(n_f)
+    order = np.lexsort((np.arange(n_f), t_cfg, -t_slr))
+    return np.sort(order[k:])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,6 +253,32 @@ class FleetSpec:
         :func:`repro.core.feasibility.config_overhead_lower_bound`.
         """
         return self.capacity - (n_t + extra_cfgs) * self.t_cfg_min
+
+    def survivors(self, k: int) -> "FleetSpec":
+        """Worst-case surviving fleet after any ``k`` device failures.
+
+        This is the backup fleet the resilience mode verifies against
+        (see :func:`worst_case_survivor_indices` for the adversary).  The
+        reference ``t_slr``/``t_cfg`` scalars are preserved so eq-5
+        shares stay defined against the original fleet; only the device
+        set shrinks.  ``k=0`` returns ``self``; ``k >= n_f`` is a
+        ``ValueError`` — no plan survives losing every device.
+        """
+        k = int(k)
+        if not 0 <= k < self.n_f:
+            raise ValueError(
+                f"resilience must satisfy 0 <= k < n_f={self.n_f}, got {k}"
+            )
+        if k == 0:
+            return self
+        if not self.devices:
+            return dataclasses.replace(self, n_f=self.n_f - k)
+        keep = worst_case_survivor_indices(self.t_slr_arr, self.t_cfg_arr, k)
+        return dataclasses.replace(
+            self,
+            n_f=self.n_f - k,
+            devices=tuple(self.devices[int(j)] for j in keep),
+        )
 
     def with_devices(self, n_f: int) -> "FleetSpec":
         """Resize the fleet.  Heterogeneous fleets repeat their device

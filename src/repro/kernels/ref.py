@@ -21,6 +21,10 @@ multi-pod dry-run lowers these; the Pallas path is selected with
   task/device counts (so padded instances compose under jit), vmapped
   over a leading instance axis — one XLA program sweeps every
   instance's TFS block at once.
+* ``placement_sweep_resilient_ref`` / ``placement_sweep_batch_resilient_ref``
+  — the k-fault-tolerance composition: the primary sweep AND a second
+  sweep on the worst-case survivor fleet, fused into one program so the
+  resilience mode costs one dispatch, not two.
 """
 
 from __future__ import annotations
@@ -42,6 +46,8 @@ __all__ = [
     "placement_sweep_ref",
     "placement_sweep_eff_ref",
     "placement_sweep_batch_ref",
+    "placement_sweep_resilient_ref",
+    "placement_sweep_batch_resilient_ref",
 ]
 
 
@@ -503,3 +509,66 @@ def placement_sweep_batch_ref(
             s, i, sl, cf, nt, nf, resume_cost, repay_init=repay_init
         )
     )(shares, iis, t_slr, t_cfg, n_t_eff, n_f_eff)
+
+
+def placement_sweep_resilient_ref(
+    shares: jax.Array,  # (B, n_t)
+    iis: jax.Array,  # (n_t,)
+    t_slr: jax.Array,  # (n_f,) — the full fleet
+    t_cfg: jax.Array,  # (n_f,)
+    t_slr_s: jax.Array,  # (n_f - k,) — worst-case survivor fleet
+    t_cfg_s: jax.Array,  # (n_f - k,)
+    resume_cost: jax.Array = 0.0,
+    *,
+    repay_init: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Resilience-mode sweep: primary AND worst-case-survivor verdicts.
+
+    The second, constrained pass of ``opts.resilience = k`` fused with
+    the primary sweep into one jit program (one dispatch per block, not
+    two).  ``feasible`` is the AND of the two sweeps; ``placed_tasks`` /
+    ``n_splits`` / ``devices_used`` describe the primary sweep, matching
+    the backend contract in ``placement_backends.base``.  Survivor tables
+    arrive pre-trimmed (``base.survivor_tables``) so each sweep is
+    bit-identical to a solo sweep on its own fleet.
+    """
+    feasible, k, n_splits, devices_used = placement_sweep_ref(
+        shares, iis, t_slr, t_cfg, resume_cost, repay_init=repay_init
+    )
+    feasible_s, _, _, _ = placement_sweep_ref(
+        shares, iis, t_slr_s, t_cfg_s, resume_cost, repay_init=repay_init
+    )
+    return feasible & feasible_s, k, n_splits, devices_used
+
+
+def placement_sweep_batch_resilient_ref(
+    shares: jax.Array,  # (B, R, n_t)
+    iis: jax.Array,  # (B, n_t)
+    t_slr: jax.Array,  # (B, n_f)
+    t_cfg: jax.Array,  # (B, n_f)
+    n_t_eff: jax.Array,  # (B,) int
+    n_f_eff: jax.Array,  # (B,) int
+    t_slr_s: jax.Array,  # (B, n_f) — survivors left-packed, zero-padded
+    t_cfg_s: jax.Array,  # (B, n_f)
+    n_f_eff_s: jax.Array,  # (B,) int — live survivor count (n_f_eff - k)
+    resume_cost: jax.Array = 0.0,
+    *,
+    repay_init: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fleet-parallel resilience sweep (``placement_sweep_batch_ref`` x2).
+
+    Survivor tables come from ``base.survivor_batch_tables``: per-instance
+    survivors left-packed into the same padded width with ``n_f_eff_s``
+    live slots, so the survivor pass reuses the traced-effective-count
+    machinery unchanged (``n_f_eff_s == 0`` instances are all-infeasible
+    for live tasks — a fleet that cannot survive k failures).
+    """
+    feasible, k, n_splits, devices_used = placement_sweep_batch_ref(
+        shares, iis, t_slr, t_cfg, n_t_eff, n_f_eff, resume_cost,
+        repay_init=repay_init,
+    )
+    feasible_s, _, _, _ = placement_sweep_batch_ref(
+        shares, iis, t_slr_s, t_cfg_s, n_t_eff, n_f_eff_s, resume_cost,
+        repay_init=repay_init,
+    )
+    return feasible & feasible_s, k, n_splits, devices_used

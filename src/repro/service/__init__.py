@@ -1,15 +1,30 @@
 # Scheduler-as-a-service: a live plan maintained across task arrivals,
-# exits and device failures, with delta replanning (repro.core.replan)
-# underneath.  See docs/architecture.md for the replan lifecycle.
+# exits, device failures and recoveries, with delta replanning
+# (repro.core.replan) underneath and a failure-injection simulator
+# (repro.service.faultsim) that verifies resilience-mode plans survive.
+# See docs/architecture.md for the replan lifecycle and fault tolerance.
 
-from .events import DeviceFailure, Event, TaskArrival, TaskExit
+from .events import DeviceFailure, DeviceRecovery, Event, TaskArrival, TaskExit
+from .faultsim import (
+    FaultEventRecord,
+    FaultSimResult,
+    make_failure_trace,
+    power_premium,
+    run_fault_injection,
+)
 from .service import ReplanTelemetry, SchedulerService
 
 __all__ = [
     "DeviceFailure",
+    "DeviceRecovery",
     "Event",
     "TaskArrival",
     "TaskExit",
     "ReplanTelemetry",
     "SchedulerService",
+    "FaultEventRecord",
+    "FaultSimResult",
+    "make_failure_trace",
+    "run_fault_injection",
+    "power_premium",
 ]

@@ -15,7 +15,7 @@ from typing import Union
 
 from ..core.task import Task
 
-__all__ = ["TaskArrival", "TaskExit", "DeviceFailure", "Event"]
+__all__ = ["TaskArrival", "TaskExit", "DeviceFailure", "DeviceRecovery", "Event"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,4 +50,17 @@ class DeviceFailure:
         return f"device_failure({self.device})"
 
 
-Event = Union[TaskArrival, TaskExit, DeviceFailure]
+@dataclasses.dataclass(frozen=True)
+class DeviceRecovery:
+    """The most recently failed device comes back (repair / restart).
+
+    Recovery is LIFO: the service keeps a stack of failed-device records
+    and a recovery pops the newest — enough to express any
+    fail-k-then-heal trace the fault-injection simulator replays, without
+    needing stable device identities on homogeneous fleets."""
+
+    def describe(self) -> str:
+        return "device_recovery"
+
+
+Event = Union[TaskArrival, TaskExit, DeviceFailure, DeviceRecovery]

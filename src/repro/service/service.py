@@ -37,8 +37,8 @@ import time
 from typing import Iterable, Sequence
 
 from ..core.scheduler import PADPSFRScheduler, ScheduleInstance, ScheduleResult
-from ..core.task import FleetSpec, Task
-from .events import DeviceFailure, Event, TaskArrival, TaskExit
+from ..core.task import DeviceProfile, FleetSpec, Task
+from .events import DeviceFailure, DeviceRecovery, Event, TaskArrival, TaskExit
 
 __all__ = ["ReplanTelemetry", "SchedulerService"]
 
@@ -67,6 +67,13 @@ class SchedulerService:
     replans skip dispatch for every recorded reject (the ≥10x
     steady-state path measured in ``benchmarks/scheduler_scale.py``).
     Set it to ``False`` to optimise for one-shot latency instead.
+
+    ``SchedulerService(fleet, resilience=k)`` runs every solve in
+    resilience mode (the option rides in ``placement_kw``): admitted
+    plans are guaranteed to stay placeable after any k device failures,
+    and the admission filter tightens to the worst-case survivor fleet's
+    eq-7 budget.  The guarantee is verified empirically by
+    :mod:`repro.service.faultsim`.
     """
 
     def __init__(
@@ -83,10 +90,20 @@ class SchedulerService:
         self.record_exhaustive = record_exhaustive
         self.cache_plans = cache_plans
         self.placement_kw = dict(placement_kw)
+        k = self.placement_kw.get("resilience", 0)
+        if isinstance(k, bool) or not isinstance(k, int) or k < 0:
+            raise ValueError(
+                f"resilience must be a non-negative integer, got {k!r}"
+            )
+        self.resilience = k
         self._sched = PADPSFRScheduler(fleet, engine=engine)
         self._tasks: tuple[Task, ...] = ()
         self._result: ScheduleResult | None = None
         self._cache: dict[tuple, ScheduleResult] = {}
+        # LIFO records of failed devices, for DeviceRecovery: the profile
+        # and original index for heterogeneous fleets, (None, None) for
+        # homogeneous ones (identical devices need no identity).
+        self._failed: list[tuple[int, DeviceProfile] | tuple[None, None]] = []
         self.telemetry: list[ReplanTelemetry] = []
 
     # -- public state ---------------------------------------------------
@@ -109,8 +126,22 @@ class SchedulerService:
                 reason="duplicate task name",
             )
         target = self._tasks + (task,)
+        if self.resilience >= self.fleet.n_f:
+            # The fleet cannot survive k failures at all; no task set is
+            # admissible until devices recover (or exits are free anyway).
+            return self._log(
+                f"arrival({task.name})", False, "admission", t0,
+                reason="resilience exceeds surviving fleet size",
+            )
+        # Admission bound against the fleet every plan must survive on:
+        # the worst-case survivor fleet when resilience is requested.
+        bfleet = (
+            self.fleet.survivors(self.resilience)
+            if self.resilience
+            else self.fleet
+        )
         lo = sum(min(t.shares(self.fleet.t_slr)) for t in target)
-        if lo > self.fleet.workable_budget(len(target)) + 1e-9:
+        if lo > bfleet.workable_budget(len(target)) + 1e-9:
             # Even the cheapest variant of every task overshoots eq. 7:
             # the TFS is provably empty, no walk needed.
             return self._log(
@@ -144,20 +175,38 @@ class SchedulerService:
         return self._log(f"exit({name})", True, path, t0)
 
     def fail_device(self, device: int = -1) -> ReplanTelemetry:
-        """Drop one device from the fleet and replan on what's left."""
+        """Drop one device from the fleet and replan on what's left.
+
+        ``device`` must be ``-1`` (the last device) or a valid index
+        ``0 <= device < n_f``; anything else raises ``ValueError`` — a
+        failure report naming a device the fleet does not have is a
+        caller bug, not a schedulable event.  Failing the *final* device
+        is refused via telemetry (the service must keep one device to
+        stay meaningful), not raised: it is a legal trace event that the
+        fleet simply cannot absorb.
+        """
         t0 = time.perf_counter()
+        if self.fleet.n_f == 0:
+            raise ValueError("cannot fail a device on an empty fleet")
+        if not -1 <= device < self.fleet.n_f:
+            raise ValueError(
+                f"device index {device} out of range for fleet with "
+                f"n_f={self.fleet.n_f} (expected -1 or 0..{self.fleet.n_f - 1})"
+            )
         if self.fleet.n_f <= 1:
             return self._log(
                 f"device_failure({device})", False, "admission", t0,
                 reason="cannot fail the last device",
             )
+        idx = device if device >= 0 else self.fleet.n_f - 1
         if self.fleet.is_heterogeneous:
-            idx = device % self.fleet.n_f
+            self._failed.append((idx, self.fleet.devices[idx]))
             profiles = tuple(
                 d for j, d in enumerate(self.fleet.devices) if j != idx
             )
             self.fleet = FleetSpec.heterogeneous(profiles, name=self.fleet.name)
         else:
+            self._failed.append((None, None))
             self.fleet = dataclasses.replace(self.fleet, n_f=self.fleet.n_f - 1)
         self._sched = PADPSFRScheduler(self.fleet, engine=self.engine)
         if not self._tasks:
@@ -166,6 +215,36 @@ class SchedulerService:
         # never rolled back; the plan may come back infeasible (degraded).
         self._result = res
         return self._log(f"device_failure({device})", True, path, t0)
+
+    def recover_device(self) -> ReplanTelemetry:
+        """Restore the most recently failed device (LIFO) and replan.
+
+        Heterogeneous fleets get the exact profile back at its original
+        index; homogeneous fleets simply grow by one.  With no failure on
+        record the event is refused via telemetry — recovery of a device
+        that never failed is a trace inconsistency, not a crash.
+        """
+        t0 = time.perf_counter()
+        if not self._failed:
+            return self._log(
+                "device_recovery", False, "admission", t0,
+                reason="no failed device to recover",
+            )
+        idx, profile = self._failed.pop()
+        if profile is not None:
+            devices = list(self.fleet.devices)
+            devices.insert(min(idx, len(devices)), profile)
+            self.fleet = FleetSpec.heterogeneous(
+                tuple(devices), name=self.fleet.name
+            )
+        else:
+            self.fleet = dataclasses.replace(self.fleet, n_f=self.fleet.n_f + 1)
+        self._sched = PADPSFRScheduler(self.fleet, engine=self.engine)
+        if not self._tasks:
+            return self._log("device_recovery", True, "noop", t0)
+        res, path = self._solve(self._tasks)
+        self._result = res
+        return self._log("device_recovery", True, path, t0)
 
     def replay(self, events: Iterable[Event]) -> list[ReplanTelemetry]:
         """Apply an event trace in order; returns one telemetry row each."""
@@ -177,6 +256,8 @@ class SchedulerService:
                 out.append(self.remove(ev.name))
             elif isinstance(ev, DeviceFailure):
                 out.append(self.fail_device(ev.device))
+            elif isinstance(ev, DeviceRecovery):
+                out.append(self.recover_device())
             else:
                 raise TypeError(f"unknown event {ev!r}")
         return out

@@ -50,7 +50,9 @@ def test_serve_cli():
     assert "generated" in proc.stdout
 
 
-def _bench_artifact(us_by_name, rows_per_s=None, crossover=None, replan=None):
+def _bench_artifact(
+    us_by_name, rows_per_s=None, crossover=None, replan=None, resilience=None
+):
     doc = {
         "benchmark": "scheduler_scale",
         "rows": [{"name": n, "us": v, "derived": ""} for n, v in us_by_name.items()],
@@ -64,6 +66,8 @@ def _bench_artifact(us_by_name, rows_per_s=None, crossover=None, replan=None):
         }
     if replan is not None:
         doc["replan"] = replan
+    if resilience is not None:
+        doc["resilience"] = resilience
     return doc
 
 
@@ -120,6 +124,40 @@ def test_trend_report_replan_rows_graceful(tmp_path):
     proc = _run(["benchmarks.trend_report", str(old), str(old2)])
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "no artifact carries replan rows" in proc.stdout
+
+
+def test_trend_report_resilience_rows_graceful(tmp_path):
+    """Artifacts predating the resilience benchmark must not crash the
+    trend report — same contract as the replan/fleet_parallel sections."""
+    old = tmp_path / "BENCH_old.json"
+    new = tmp_path / "BENCH_new.json"
+    old.write_text(json.dumps(_bench_artifact({"alg2_batched_tfs4096": 1000.0})))
+    new.write_text(json.dumps(_bench_artifact(
+        {"alg2_batched_tfs4096": 900.0, "resilience_k1_4t4f": 650.0},
+        resilience={
+            "instance": "4t4f",
+            "points": {
+                "k0": {"power": 8.0, "premium_pct": 0.0, "us": 400.0},
+                "k1": {"power": 20.0, "premium_pct": 150.0, "us": 650.0},
+                "k2": {"power": 32.0, "premium_pct": 300.0, "us": 550.0},
+            },
+            "faultsim": {"k1_survives_all_seeds": True},
+        },
+    )))
+
+    # old + new: resilience trend renders, with a note about the older file
+    proc = _run(["benchmarks.trend_report", str(old), str(new)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "k-fault tolerance" in proc.stdout
+    assert "150.0%" in proc.stdout
+    assert "predates the resilience benchmark" in proc.stdout
+
+    # two pre-resilience artifacts: skipped with a message, still exit 0
+    old2 = tmp_path / "BENCH_old2.json"
+    old2.write_text(json.dumps(_bench_artifact({"alg2_batched_tfs4096": 950.0})))
+    proc = _run(["benchmarks.trend_report", str(old), str(old2)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "no artifact carries resilience rows" in proc.stdout
 
 
 @pytest.mark.slow
