@@ -96,7 +96,7 @@ def _synth_tasks(n_t: int, nv: int, seed: int = 0) -> list[Task]:
                 init_interval=float(rng.uniform(1, 5)),
                 variants=tuple(
                     TaskVariant(cu=j + 1, throughput=float(t), power=float(p))
-                    for j, (t, p) in enumerate(zip(ths, pws))
+                    for j, (t, p) in enumerate(zip(ths, pws, strict=True))
                 ),
             )
         )
@@ -252,7 +252,7 @@ def _band_tasks(
                 init_interval=float(rng.uniform(*ii)),
                 variants=tuple(
                     TaskVariant(cu=j + 1, throughput=float(t), power=float(p))
-                    for j, (t, p) in enumerate(zip(ths, pws))
+                    for j, (t, p) in enumerate(zip(ths, pws, strict=True))
                 ),
             )
         )
@@ -711,7 +711,7 @@ def bench_resilience(quick: bool = False) -> tuple[list[Row], dict]:
 def _assert_instancewise_identical(ref, got, what: str) -> None:
     """Per-instance bit-identity between two lists of schedule results."""
     assert len(ref) == len(got), f"{what}: result count mismatch"
-    for i, (a, b) in enumerate(zip(ref, got)):
+    for i, (a, b) in enumerate(zip(ref, got, strict=True)):
         same = (
             a.feasible == b.feasible
             and a.chosen_rank == b.chosen_rank

@@ -77,7 +77,7 @@ def trend(datas: list[dict], labels: list[str]) -> dict:
         for key in ("cold_us", "warm_us", "speedup")
     }
     replan["missing_files"] = [
-        lb for lb, d in zip(labels, datas) if not d.get("replan")
+        lb for lb, d in zip(labels, datas, strict=True) if not d.get("replan")
     ]
     # Same deal for fleet-parallel batching: the section only exists in
     # artifacts recorded after schedule_many landed — older files get None
@@ -94,7 +94,7 @@ def trend(datas: list[dict], labels: list[str]) -> dict:
     fleet_parallel = {
         "speedup": fp_speedup,
         "missing_files": [
-            lb for lb, d in zip(labels, datas) if not d.get("fleet_parallel")
+            lb for lb, d in zip(labels, datas, strict=True) if not d.get("fleet_parallel")
         ],
     }
     # And for k-fault tolerance: the resilience section only exists in
@@ -122,7 +122,7 @@ def trend(datas: list[dict], labels: list[str]) -> dict:
         "premium_pct": res_premium,
         "power": res_power,
         "missing_files": [
-            lb for lb, d in zip(labels, datas) if not d.get("resilience")
+            lb for lb, d in zip(labels, datas, strict=True) if not d.get("resilience")
         ],
     }
     return {

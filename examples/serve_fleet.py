@@ -42,7 +42,7 @@ def main() -> int:
     print(render_gantt(result.plan, tasks, fleet))
 
     # --- 2. execute the plan: one engine per job at its chosen variant ---
-    for (arch, _s, _p, _n), task, j in zip(JOBS, tasks, result.combo.variant_idx):
+    for (arch, _s, _p, _n), task, j in zip(JOBS, tasks, result.combo.variant_idx, strict=True):
         variant = task.variants[j]
         cfg = get_arch(arch).reduced()
         model = Model(cfg, ExecConfig(remat="none"))

@@ -110,7 +110,7 @@ class CheckpointManager:
 
     def all_steps(self) -> list[int]:
         out = []
-        for name in os.listdir(self.directory):
+        for name in sorted(os.listdir(self.directory)):
             if name.startswith("step_") and not name.endswith(".tmp"):
                 try:
                     out.append(int(name[5:]))

@@ -31,7 +31,7 @@ def _task(name, p, ii, td, ths, pws):
         init_interval=ii,
         variants=tuple(
             TaskVariant(cu=j + 1, throughput=th, power=pw, program=f"{name}_{j + 1}cu.xclbin")
-            for j, (th, pw) in enumerate(zip(ths, pws))
+            for j, (th, pw) in enumerate(zip(ths, pws, strict=True))
         ),
     )
 

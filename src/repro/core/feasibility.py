@@ -79,9 +79,9 @@ class FeasibilityResult:
         nvs = [t.nv for t in self.tasks]
         idx = np.unravel_index(flat_index, nvs)
         shares = tuple(
-            float(t.shares(self.fleet.t_slr)[j]) for t, j in zip(self.tasks, idx)
+            float(t.shares(self.fleet.t_slr)[j]) for t, j in zip(self.tasks, idx, strict=True)
         )
-        powers = tuple(float(t.variants[j].power) for t, j in zip(self.tasks, idx))
+        powers = tuple(float(t.variants[j].power) for t, j in zip(self.tasks, idx, strict=True))
         return TaskSetCombo(tuple(int(j) for j in idx), shares, powers)
 
     def _share_columns(self) -> "tuple[list[np.ndarray], list[int]]":
@@ -113,7 +113,7 @@ class FeasibilityResult:
         cols, nvs = self._share_columns()
         idx = np.unravel_index(flat_indices, nvs)
         out = np.empty((flat_indices.size, len(cols)), dtype=np.float64)
-        for i, (col, ji) in enumerate(zip(cols, idx)):
+        for i, (col, ji) in enumerate(zip(cols, idx, strict=True)):
             np.take(col, ji, out=out[:, i])
         return out
 
@@ -409,8 +409,8 @@ class ComboBlock:
 
     def materialize(self, row: int) -> TaskSetCombo:
         idx = self.variant_idx[row]
-        shr = tuple(float(v[j]) for v, j in zip(self._share_vecs, idx))
-        pw = tuple(float(v[j]) for v, j in zip(self._power_vecs, idx))
+        shr = tuple(float(v[j]) for v, j in zip(self._share_vecs, idx, strict=True))
+        pw = tuple(float(v[j]) for v, j in zip(self._power_vecs, idx, strict=True))
         return TaskSetCombo(tuple(int(j) for j in idx), shr, pw)
 
 
@@ -531,7 +531,7 @@ def _sort_emission(
         n_t = ch.shape[1]
         starts = np.flatnonzero(np.concatenate([[True], ~eq]))
         ends = np.append(starts[1:], pp.size)
-        for a, b in zip(starts, ends):
+        for a, b in zip(starts, ends, strict=True):
             if b - a > 1:
                 sub = ch[a:b]
                 o = np.lexsort(tuple(sub[:, k] for k in range(n_t - 1, -1, -1)))

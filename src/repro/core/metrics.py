@@ -44,7 +44,7 @@ def system_workload(sum_shr: float, fleet: FleetSpec) -> float:
 
 def avg_task_weight(exec_times: Sequence[float], periods: Sequence[float]) -> float:
     """Eq. 10."""
-    w = [e / p for e, p in zip(exec_times, periods)]
+    w = [e / p for e, p in zip(exec_times, periods, strict=True)]
     return float(np.mean(w))
 
 

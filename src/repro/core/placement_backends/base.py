@@ -456,6 +456,14 @@ class PlacementBackend(Protocol):
 
     name: str
 
+    #: Whether ``dispatch_block`` / ``dispatch_blocks`` actually overlap
+    #: device work with the caller (jax/pallas enqueue, sync later).  The
+    #: walk only holds extra blocks in flight when this is True — an eager
+    #: backend that merely *spells out* the dispatch surface must say
+    #: ``False`` or the scheduler speculates blocks past the winner for
+    #: nothing.  Pipelining is declared, not inferred from method presence.
+    async_dispatch: bool
+
     def place_block(
         self,
         shares: np.ndarray,

@@ -223,6 +223,7 @@ class JaxPlacementBackend:
     """``lax.while_loop`` sweep, float64 via scoped ``enable_x64``."""
 
     name = "jax"
+    async_dispatch = True
 
     @classmethod
     def available(cls) -> bool:

@@ -25,11 +25,14 @@ Heterogeneity is native: capacities ``t_slr_j`` and reconfiguration costs
 ``t_cfg_j`` are per-device gathers, so mixed FPGA/GPU/CPU fleets
 (:class:`repro.core.power.DeviceClass`) cost nothing extra.
 
-This backend is deliberately eager — it computes in the caller's thread,
-so it does not implement the optional ``dispatch_block`` hook (see the
-handoff contract in ``base.py``); the scheduler walk falls back to
-``place_block`` and runs unpipelined, which is the right call when the
-"device" is the host CPU itself.
+This backend is deliberately eager — it computes in the caller's thread.
+Its ``dispatch_block`` / ``dispatch_blocks`` hooks therefore run the sweep
+synchronously and return an already-resolved result (indistinguishable
+from the eager calls, per the dispatch contract in ``base.py``), and
+``dispatch_blocks_raw`` answers ``None`` so the many-walk uses the trimmed
+surface.  Running unpipelined is the right call when the "device" is the
+host CPU itself; spelling the full surface out anyway keeps the fallback
+behavior explicit — ``tools/repro_lint`` rule B101 enforces it.
 """
 
 from __future__ import annotations
@@ -122,6 +125,7 @@ class NumpyPlacementBackend:
     """Vectorized (B,) state advance in numpy; the portable fallback."""
 
     name = "numpy"
+    async_dispatch = False
 
     @classmethod
     def available(cls) -> bool:
@@ -177,3 +181,36 @@ class NumpyPlacementBackend:
         and ignored — there is no device mesh here.
         """
         return place_instance_blocks(self, batch, opts)
+
+    def dispatch_block(
+        self,
+        shares: np.ndarray,
+        iis: np.ndarray,
+        t_slr: np.ndarray,
+        t_cfg: np.ndarray,
+        opts: PlacementOptions | None = None,
+    ):
+        """Eager dispatch: the vectorized sweep runs now, resolver returns it."""
+        result = self.place_block(shares, iis, t_slr, t_cfg, opts)
+        return lambda: result
+
+    def dispatch_blocks(
+        self,
+        batch: InstanceBatch,
+        opts: PlacementOptions | None = None,
+        *,
+        shard=None,
+    ):
+        """Eager batched dispatch over :meth:`place_blocks`."""
+        result = self.place_blocks(batch, opts, shard=shard)
+        return lambda: result
+
+    def dispatch_blocks_raw(
+        self,
+        batch: InstanceBatch,
+        opts: PlacementOptions | None = None,
+        *,
+        shard=None,
+    ):
+        """No zero-copy surface here: ``None`` steers callers to the trimmed path."""
+        return None

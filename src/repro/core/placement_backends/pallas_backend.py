@@ -44,6 +44,7 @@ class PallasPlacementBackend:
     """Fused single-kernel sweep (interpret mode off-TPU)."""
 
     name = "pallas"
+    async_dispatch = True
 
     def __init__(self, block_rows: int = 1024) -> None:
         self.block_rows = block_rows

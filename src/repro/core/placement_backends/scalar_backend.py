@@ -4,14 +4,16 @@ Routes every row of the block through the exact Alg-2/Alg-3 placement
 simulation (:func:`repro.core.placement.place_shares`), which is the
 ground truth all vectorized backends must agree with bit-for-bit.  It is
 O(B) Python round-trips and exists for verification and tiny fleets, not
-for throughput.  Eager by nature, it omits the optional
-``dispatch_block`` hook (``base.py``): pipelining a synchronous oracle
-would only reorder the Python work it is meant to pin down.
+for throughput.
 
-It likewise omits the fleet-parallel ``place_blocks`` surface: the walk's
-:func:`repro.core.placement_backends.base.place_instance_blocks` fallback
-loops ``schedule_many`` batches through this oracle one instance at a
-time, which *is* the definition of correct here.
+Eager by nature, its ``dispatch_block`` / ``dispatch_blocks`` hooks run
+the sweep synchronously and hand back an already-resolved result —
+pipelining a synchronous oracle would only reorder the Python work it is
+meant to pin down — and ``dispatch_blocks_raw`` always answers ``None``
+(no zero-copy surface; callers fall back per the base.py contract).  The
+full five-method surface is still spelled out, and checked by
+``tools/repro_lint`` rule B101, so every backend's fallback behavior is
+explicit rather than an accident of ``getattr`` probing.
 """
 
 from __future__ import annotations
@@ -22,7 +24,9 @@ from ..placement import place_shares
 from ..task import DeviceProfile, FleetSpec
 from .base import (
     BatchPlacement,
+    InstanceBatch,
     PlacementOptions,
+    place_instance_blocks,
     prepare_block,
     register_backend,
 )
@@ -35,6 +39,7 @@ class ScalarPlacementBackend:
     """Row-by-row scalar oracle behind the block-backend contract."""
 
     name = "scalar"
+    async_dispatch = False
 
     @classmethod
     def available(cls) -> bool:
@@ -57,7 +62,7 @@ class ScalarPlacementBackend:
         fleet = FleetSpec.heterogeneous(
             tuple(
                 DeviceProfile(t_slr=float(s), t_cfg=float(c))
-                for s, c in zip(t_slr_arr, t_cfg_arr)
+                for s, c in zip(t_slr_arr, t_cfg_arr, strict=True)
             )
         )
         feasible = np.zeros(B, dtype=bool)
@@ -90,3 +95,58 @@ class ScalarPlacementBackend:
             n_splits=n_splits,
             devices_used=devices_used,
         )
+
+    def dispatch_block(
+        self,
+        shares: np.ndarray,
+        iis: np.ndarray,
+        t_slr: np.ndarray,
+        t_cfg: np.ndarray,
+        opts: PlacementOptions | None = None,
+    ):
+        """Eager dispatch: the oracle sweep runs now, the resolver returns it.
+
+        Indistinguishable from ``place_block`` by the dispatch contract;
+        there is no asynchrony to exploit in a scalar Python loop.
+        """
+        result = self.place_block(shares, iis, t_slr, t_cfg, opts)
+        return lambda: result
+
+    def place_blocks(
+        self,
+        batch: InstanceBatch,
+        opts: PlacementOptions | None = None,
+        *,
+        shard=None,
+    ) -> list[BatchPlacement]:
+        """Loop-over-instances — for the oracle this *is* the definition.
+
+        ``shard`` is accepted per the batching contract and ignored (no
+        device mesh; verdicts may never depend on it).
+        """
+        return place_instance_blocks(self, batch, opts)
+
+    def dispatch_blocks(
+        self,
+        batch: InstanceBatch,
+        opts: PlacementOptions | None = None,
+        *,
+        shard=None,
+    ):
+        """Eager batched dispatch over :meth:`place_blocks`."""
+        result = self.place_blocks(batch, opts, shard=shard)
+        return lambda: result
+
+    def dispatch_blocks_raw(
+        self,
+        batch: InstanceBatch,
+        opts: PlacementOptions | None = None,
+        *,
+        shard=None,
+    ):
+        """No zero-copy verdict surface for the scalar oracle: always ``None``.
+
+        ``None`` marks the batch degenerate for this backend, steering the
+        many-walk onto :meth:`dispatch_blocks` (base.py's raw contract).
+        """
+        return None

@@ -192,8 +192,8 @@ def _combo_from_idx(
 ) -> TaskSetCombo:
     return TaskSetCombo(
         tuple(int(j) for j in idx),
-        tuple(float(v[j]) for v, j in zip(share_vecs, idx)),
-        tuple(float(v[j]) for v, j in zip(power_vecs, idx)),
+        tuple(float(v[j]) for v, j in zip(share_vecs, idx, strict=True)),
+        tuple(float(v[j]) for v, j in zip(power_vecs, idx, strict=True)),
     )
 
 
@@ -383,7 +383,7 @@ def _replan_general(
     if state.result.feasible:
         prev = {
             t.name: j
-            for t, j in zip(state.tasks, state.result.combo.variant_idx)
+            for t, j in zip(state.tasks, state.result.combo.variant_idx, strict=True)
         }
         if all(t.name in prev and prev[t.name] < t.nv for t in tasks):
             share_vecs = [t.shares(fleet.t_slr) for t in tasks]

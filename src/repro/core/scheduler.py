@@ -291,7 +291,11 @@ def _walk_tfs_blocks(
     # Eager backends compute at dispatch time, so holding a second block
     # in flight would only enumerate/place one ramp-larger block past the
     # winner for nothing; depth > 1 pays off only with async dispatch.
-    depth = PIPELINE_DEPTH if dispatch is not None else 1
+    # Backends declare that via `async_dispatch` (base.py) — every engine
+    # spells out the full dispatch surface, so method presence alone no
+    # longer distinguishes pipelined from eager.
+    pipelined = dispatch is not None and getattr(backend, "async_dispatch", True)
+    depth = PIPELINE_DEPTH if pipelined else 1
     now = time.perf_counter
 
     rejects = 0
@@ -580,11 +584,14 @@ def _walk_many_tfs_blocks(
     opts = PlacementOptions(**placement_kw)
     stats = walk_stats if walk_stats is not None else WalkStats()
     raw_hook = getattr(backend, "dispatch_blocks_raw", None)
-    has_async = (
+    has_dispatch = (
         raw_hook is not None
         or getattr(backend, "dispatch_blocks", None) is not None
         or getattr(backend, "dispatch_block", None) is not None
     )
+    # Same declared-pipelining rule as the solo walk: eager engines that
+    # spell out the dispatch surface (async_dispatch = False) get depth 1.
+    has_async = has_dispatch and getattr(backend, "async_dispatch", True)
     depth = PIPELINE_DEPTH if has_async else 1
     now = time.perf_counter
 
@@ -642,7 +649,7 @@ def _walk_many_tfs_blocks(
                     lambda k=k, n=n_rows: live2d[k, :n],
                 )
         else:
-            for (w, ref, base, n_rows), bp in zip(entries, results):
+            for (w, ref, base, n_rows), bp in zip(entries, results, strict=True):
                 r = bp.first_feasible()
                 apply_verdict(
                     w, ref, base, n_rows, r >= 0, r,

@@ -323,7 +323,7 @@ class TaskSetCombo:
 
     def describe(self, tasks: Sequence[Task]) -> str:
         parts = []
-        for t, j, s in zip(tasks, self.variant_idx, self.shares):
+        for t, j, s in zip(tasks, self.variant_idx, self.shares, strict=True):
             parts.append(f"{t.variants[j].cu}CU-{t.name}(shr={s:g})")
         return ", ".join(parts)
 

@@ -181,7 +181,7 @@ def ssd_chunked_ref(
         return new, carry  # emit state *entering* the chunk
 
     init = (
-        jnp.zeros((Bb, nh, ds, hp), jnp.float32)
+        jnp.zeros((Bb, nh, ds, hp), jnp.float32)  # repro-lint: ignore[P203]  # ssd-scan reference accumulates at f32 by design (ML kernel, not the placement precision chain)
         if initial_state is None
         else initial_state.astype(jnp.float32)
     )

@@ -182,7 +182,7 @@ def dryrun_cell(
 
     def _shard_bytes(tree_abs, tree_sh) -> float:
         tot = 0.0
-        for sds, sh in zip(jax.tree.leaves(tree_abs), jax.tree.leaves(tree_sh)):
+        for sds, sh in zip(jax.tree.leaves(tree_abs), jax.tree.leaves(tree_sh), strict=True):
             shard = sh.shard_shape(sds.shape)
             tot += float(_np.prod(shard)) * sds.dtype.itemsize
         return tot

@@ -225,11 +225,14 @@ def power_premium(
         power = float(res.total_power) if res.feasible else None
         if k == 0:
             base = power
-        premium = (
-            (power - base) / base * 100.0
-            if power is not None and base
-            else (0.0 if power is not None and base == 0.0 else None)
-        )
+        if power is None or base is None:
+            premium = None
+        elif base > 0.0:
+            premium = (power - base) / base * 100.0
+        else:
+            # zero-power k=0 baseline: any k-resilient plan is pure premium,
+            # but there is no ratio to report — pin it at 0.0
+            premium = 0.0
         out[int(k)] = {
             "feasible": bool(res.feasible),
             "power": power,

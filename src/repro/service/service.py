@@ -33,6 +33,7 @@ telemetry and a degraded (``None``) plan until exits free capacity.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Iterable, Sequence
 
@@ -307,7 +308,10 @@ class SchedulerService:
             # thin state (complete_below == -inf) marks the warm path;
             # the general path re-records and returns a full state.
             st = res.plan_state
-            path = "warm" if st is not None and st.complete_below == -float("inf") else "general"
+            # the warm path marks its thin state with a -inf sentinel
+            # (assigned, never computed — see replan's thin-state contract)
+            thin = st is not None and math.isinf(st.complete_below) and st.complete_below < 0
+            path = "warm" if thin else "general"
         else:
             res = self._sched.schedule(
                 target,

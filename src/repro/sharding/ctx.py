@@ -50,7 +50,7 @@ def mesh_axis_size(name: str) -> int | None:
     if ctx is None:
         return None
     mesh, _rules = ctx
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
     return sizes.get(name)
 
 

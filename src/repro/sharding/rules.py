@@ -145,8 +145,8 @@ def resolve_spec(
     """Logical axes + shape -> PartitionSpec, dropping non-dividing axes."""
     used: set[str] = set()
     parts: list[Any] = []
-    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    for dim, logical in zip(shape, axes):
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
+    for dim, logical in zip(shape, axes, strict=True):
         cand = [
             a
             for a in rules.lookup(logical)

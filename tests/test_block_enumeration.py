@@ -173,7 +173,7 @@ def _tie_tasks(rng, max_tasks=5, powers=(1.0, 2.0, 3.0)):
                 init_interval=float(rng.uniform(0.0, 5.0)),
                 variants=tuple(
                     TaskVariant(cu=j + 1, throughput=float(t), power=float(p))
-                    for j, (t, p) in enumerate(zip(ths, pws))
+                    for j, (t, p) in enumerate(zip(ths, pws, strict=True))
                 ),
             )
         )
@@ -207,7 +207,7 @@ class TestPowerTieDeterminism:
             tasks = _tie_tasks(rng)
             fleet = _random_fleet(rng)
             combos = list(iter_feasible_pruned(tasks, fleet))
-            for a, b in zip(combos, combos[1:]):
+            for a, b in zip(combos, combos[1:], strict=False):
                 if a.total_power == b.total_power:
                     assert a.variant_idx < b.variant_idx
                     checked += 1
@@ -404,9 +404,9 @@ class TestOuterSumRegression:
         assert out[-1] == 6 * 10.0 + 0.5
         idx = [3, 1, 4, 1, 5, 9, 1]
         flat = 0
-        for i, v in zip(idx, vecs):
+        for i, v in zip(idx, vecs, strict=True):
             flat = flat * v.shape[0] + i
-        assert out[flat] == sum(v[i] for i, v in zip(idx, vecs))
+        assert out[flat] == sum(v[i] for i, v in zip(idx, vecs, strict=True))
 
     def test_peak_memory_capped_at_output_size(self):
         """The old fold held the previous level alive while materialising

@@ -30,7 +30,7 @@ def test_save_load_roundtrip(tmp_path):
     save_pytree(str(tmp_path / "ck"), t, meta={"step": 7})
     loaded, meta = load_pytree(str(tmp_path / "ck"), t)
     assert meta["step"] == 7
-    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(loaded)):
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(loaded), strict=True):
         np.testing.assert_array_equal(np.asarray(a, dtype=np.float32),
                                       np.asarray(b, dtype=np.float32))
 
@@ -164,3 +164,16 @@ def test_straggler_detection_and_reset():
     assert det.stragglers() == [1]
     det.reset(1)
     assert det.stragglers() == []
+
+
+def test_latest_step_scan_is_order_independent(tmp_path):
+    """The torn-pointer fallback scans the directory; creation order must
+    not leak into the answer (regression: the listdir is sorted, pinned
+    by repro-lint D402)."""
+    mgr = CheckpointManager(str(tmp_path))
+    for step in (7, 2, 31, 16):  # deliberately non-monotone creation order
+        save_pytree(mgr.step_dir(step), {"w": np.arange(3) + step})
+    # No LATEST pointer was ever written: force the scan path.
+    assert not os.path.exists(os.path.join(str(tmp_path), "LATEST"))
+    assert mgr.all_steps() == [2, 7, 16, 31]
+    assert mgr.latest_step() == 31

@@ -94,7 +94,7 @@ def test_pruned_iterator_matches_exhaustive(tasks, fleet):
     assert pruned == exhaustive
     # ascending by power
     powers = [c.total_power for c in pruned]
-    assert all(a <= b + 1e-9 for a, b in zip(powers, powers[1:]))
+    assert all(a <= b + 1e-9 for a, b in zip(powers, powers[1:], strict=False))
 
 
 @settings(max_examples=30, deadline=None)

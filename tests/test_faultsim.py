@@ -287,3 +287,25 @@ def test_replay_handles_recovery_events():
     # Live plan equals a cold resilient solve of the same instance.
     cold = PADPSFRScheduler(fleet).schedule(tasks, resilience=1)
     assert svc.plan is not None and svc.plan.total_power == cold.total_power
+
+
+def test_power_premium_zero_power_baseline():
+    """A zero-power k=0 winner must report premium 0.0 at every feasible
+    level — not None, and never a ZeroDivisionError (regression: the
+    ratio branch is guarded on base > 0, pinned by repro-lint P201)."""
+    fleet = FleetSpec(n_f=4, t_slr=30.0, t_cfg=1.0)
+    tasks = [
+        Task(
+            name=f"Z{i}",
+            period=10.0,
+            data=20.0,
+            init_interval=1.0,
+            variants=(TaskVariant(cu=1, throughput=2.4, power=0.0),),
+        )
+        for i in range(2)
+    ]
+    pp = power_premium(fleet, tasks, ks=(0, 1))
+    assert pp[0]["feasible"] and pp[0]["power"] == 0.0
+    assert pp[0]["premium_pct"] == 0.0
+    assert pp[1]["feasible"] and pp[1]["power"] == 0.0
+    assert pp[1]["premium_pct"] == 0.0

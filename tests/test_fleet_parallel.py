@@ -189,7 +189,7 @@ class TestRandomizedParity:
             ref = _solo_loop(
                 insts, sched.fleet, engine=engine, count_all_rejects=True
             )
-            for got, want in zip(many, ref):
+            for got, want in zip(many, ref, strict=True):
                 _assert_results_identical(got, want)
             checked += len(insts)
         assert checked >= 50
@@ -202,7 +202,7 @@ class TestRandomizedParity:
         sched = PADPSFRScheduler(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0), engine="pallas")
         many = sched.schedule_many(insts, count_all_rejects=True)
         ref = _solo_loop(insts, sched.fleet, engine="numpy", count_all_rejects=True)
-        for got, want in zip(many, ref):
+        for got, want in zip(many, ref, strict=True):
             _assert_results_identical(got, want)
 
     @pytest.mark.parametrize("engine", BATCHED_ENGINES)
@@ -225,7 +225,7 @@ class TestRandomizedParity:
         sched = PADPSFRScheduler(fleet, engine=engine)
         insts = [ScheduleInstance(tasks=tied), ScheduleInstance(tasks=tied[::-1])]
         many = sched.schedule_many(insts, count_all_rejects=True)
-        for got, inst in zip(many, insts):
+        for got, inst in zip(many, insts, strict=True):
             _assert_results_identical(
                 got, sched.schedule(inst.tasks, count_all_rejects=True)
             )
@@ -247,7 +247,7 @@ class TestRandomizedParity:
             if base is None:
                 base = res
             else:
-                for got, want in zip(res, base):
+                for got, want in zip(res, base, strict=True):
                     _assert_results_identical(got, want)
 
 
@@ -369,7 +369,7 @@ class TestSharding:
         sched = PADPSFRScheduler(FleetSpec(n_f=2, t_slr=30.0, t_cfg=1.0), engine="jax")
         plain = sched.schedule_many(insts, count_all_rejects=True)
         sharded = sched.schedule_many(insts, shard="auto", count_all_rejects=True)
-        for got, want in zip(sharded, plain):
+        for got, want in zip(sharded, plain, strict=True):
             _assert_results_identical(got, want)
 
     @pytest.mark.skipif(
@@ -386,7 +386,7 @@ class TestSharding:
         for shard in ("auto", 2):
             res = sched.schedule_many(insts, shard=shard, count_all_rejects=True)
             ref = _solo_loop(insts, sched.fleet, engine="numpy", count_all_rejects=True)
-            for got, want in zip(res, ref):
+            for got, want in zip(res, ref, strict=True):
                 _assert_results_identical(got, want)
 
 
@@ -416,7 +416,7 @@ class TestWhatIfMany:
         assert res[0].feasible and not res[1].feasible
         # Speculative: the service itself is untouched.
         assert [t.name for t in svc.tasks] == ["base"]
-        for got, a in zip(res, arrivals):
+        for got, a in zip(res, arrivals, strict=True):
             want = PADPSFRScheduler(svc.fleet, engine=svc.engine).schedule(
                 tuple(svc.tasks) + (a,)
             )

@@ -232,7 +232,7 @@ def test_placement_sweep_pallas_matches_ref(block_rows, repay_init):
         )
     assert int(np.asarray(want[0]).sum()) > 0  # the block exercises both verdicts
     assert int((~np.asarray(want[0])).sum()) > 0
-    for g, w, name in zip(got, want, ("feasible", "placed", "n_splits", "devices")):
+    for g, w, name in zip(got, want, ("feasible", "placed", "n_splits", "devices"), strict=True):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
 
 

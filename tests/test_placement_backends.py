@@ -487,3 +487,39 @@ def test_scalar_backend_block_verdicts_match_numpy():
             shares, iis, fleet.t_slr_arr, fleet.t_cfg_arr
         )
         _assert_blocks_identical(bs, bn, "scalar-vs-numpy")
+
+
+def test_every_backend_exposes_the_full_dispatch_surface():
+    """Runtime twin of repro-lint rule B101: every registered backend
+    spells out the five surface methods and declares its pipelining via
+    ``async_dispatch`` (the walk chooses depth from the flag, not from
+    method presence — see ``_streaming_block_walk``)."""
+    surface = (
+        "place_block",
+        "dispatch_block",
+        "place_blocks",
+        "dispatch_blocks",
+        "dispatch_blocks_raw",
+    )
+    for name in available_backends():
+        backend = get_backend(name)
+        for meth in surface:
+            assert callable(getattr(backend, meth, None)), (name, meth)
+        assert isinstance(backend.async_dispatch, bool), name
+
+
+def test_eager_backend_dispatch_matches_place():
+    """The eager dispatch hooks added for contract completeness must be
+    behaviorally invisible: resolver output equals the eager call."""
+    rng = np.random.default_rng(20260808)
+    fleet = example1_fleet()
+    shares = rng.uniform(1.0, 30.0, size=(32, 4))
+    iis = rng.uniform(0.0, 1.0, size=4)
+    for name in ("scalar", "numpy"):
+        backend = get_backend(name)
+        assert backend.async_dispatch is False
+        eager = backend.place_block(shares, iis, fleet.t_slr_arr, fleet.t_cfg_arr)
+        resolved = backend.dispatch_block(
+            shares, iis, fleet.t_slr_arr, fleet.t_cfg_arr
+        )()
+        _assert_blocks_identical(eager, resolved, f"{name} dispatch parity")

@@ -45,7 +45,7 @@ def _assert_results_identical(rb, rs):
     # Same per-device splits: the winner's plan comes from the same oracle,
     # but assert anyway — this is the contract the issue pins.
     assert len(rb.plan.splits) == len(rs.plan.splits)
-    for a, b in zip(rb.plan.splits, rs.plan.splits):
+    for a, b in zip(rb.plan.splits, rs.plan.splits, strict=True):
         assert a.task == b.task
         assert a.devices == b.devices
         assert a.share_parts == b.share_parts
@@ -138,7 +138,7 @@ def _random_tasks(rng, max_tasks=5, max_variants=3):
                 init_interval=float(rng.uniform(0.0, 8.0)),
                 variants=tuple(
                     TaskVariant(cu=j + 1, throughput=float(th), power=float(pw))
-                    for j, (th, pw) in enumerate(zip(ths, pws))
+                    for j, (th, pw) in enumerate(zip(ths, pws, strict=True))
                 ),
             )
         )

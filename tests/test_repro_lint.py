@@ -1,0 +1,634 @@
+"""Tests for ``tools/repro_lint`` — the repo-native invariant analyzer.
+
+Every rule id gets a positive fixture (a minimal snippet that must fire)
+and a negative one (the idiomatic-clean twin that must stay silent), so a
+rule regression shows up as a named fixture failure rather than as noise
+in CI.  The suite also pins the suppression round-trip, the ``--json``
+schema, the CLI exit codes, and — the meta-invariant — that the analyzer
+is clean on its own source.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools.repro_lint import all_rules, lint_source, run_paths  # noqa: E402
+from tools.repro_lint.engine import to_json  # noqa: E402
+from tools.repro_lint.rules import backend_contract  # noqa: E402
+
+CORE = "src/repro/core/snippet.py"  # path inside the precision/sched scope
+PLAIN = "snippet.py"  # path outside every path-scoped rule
+
+
+def rules_of(source, path=PLAIN, select=None):
+    return [f.rule for f in lint_source(textwrap.dedent(source), path, select)]
+
+
+def assert_fires(rule, source, path=PLAIN):
+    got = rules_of(source, path, select=[rule])
+    assert got, f"{rule} did not fire on:\n{textwrap.dedent(source)}"
+
+
+def assert_clean(rule, source, path=PLAIN):
+    got = rules_of(source, path, select=[rule])
+    assert not got, f"{rule} false positive ({got}) on:\n{textwrap.dedent(source)}"
+
+
+class TestCatalog:
+    def test_all_rule_ids_present(self):
+        catalog = all_rules()
+        expected = {
+            "E001", "S001",
+            "B101", "B102", "B103",
+            "P201", "P202", "P203",
+            "T301", "T302", "T303",
+            "D401", "D402", "D403", "D404",
+        }
+        assert expected == set(catalog)
+        assert all(isinstance(v, str) and v for v in catalog.values())
+
+
+class TestE001:
+    def test_syntax_error_is_a_finding_not_a_crash(self):
+        findings = lint_source("def f(:\n", "bad.py")
+        assert [f.rule for f in findings] == ["E001"]
+        assert findings[0].line == 1
+
+
+class TestP201:
+    def test_float_literal_equality(self):
+        assert_fires("P201", "ok = x == 1.0\n")
+
+    def test_division_result_equality(self):
+        assert_fires("P201", "ok = (a / b) != c\n")
+
+    def test_float_call_equality(self):
+        assert_fires("P201", "ok = float(x) == y\n")
+
+    def test_integer_equality_clean(self):
+        assert_clean("P201", "ok = x == 1\n")
+
+    def test_float_ordering_clean(self):
+        # Ordering comparisons are the eq-7 idiom; only ==/!= are suspect.
+        assert_clean("P201", "ok = x >= 1.0\n")
+
+    def test_identity_clean(self):
+        assert_clean("P201", "ok = x is None\n")
+
+
+class TestP202:
+    def test_f32_cast_reaches_comparison(self):
+        assert_fires(
+            "P202",
+            """
+            def f(x, thr):
+                y = x.astype(np.float32)
+                return y > thr
+            """,
+            path=CORE,
+        )
+
+    def test_f32_cast_reaches_selection(self):
+        assert_fires(
+            "P202",
+            """
+            def f(p):
+                q = jnp.float32(p)
+                return np.argsort(q)
+            """,
+            path=CORE,
+        )
+
+    def test_select_then_cast_clean(self):
+        # The required order: survivor selection at float64, cast after.
+        assert_clean(
+            "P202",
+            """
+            def f(p):
+                idx = np.argsort(p)
+                q = p.astype(np.float32)
+                return idx, q
+            """,
+            path=CORE,
+        )
+
+    def test_identity_test_on_cast_value_clean(self):
+        assert_clean(
+            "P202",
+            """
+            def f(x):
+                y = x.astype(np.float32)
+                return y is not None
+            """,
+            path=CORE,
+        )
+
+    def test_out_of_scope_module_clean(self):
+        # ML model code routes at f32 by design; the rule is scoped.
+        assert_clean(
+            "P202",
+            """
+            def route(logits):
+                w = logits.astype(jnp.float32)
+                return jnp.argsort(w)
+            """,
+            path="src/repro/models/layers.py",
+        )
+
+    def test_pragma_opts_module_in(self):
+        assert_fires(
+            "P202",
+            """
+            # repro-lint: precision-critical
+            def f(x, thr):
+                y = x.astype(np.float32)
+                return y > thr
+            """,
+            path=PLAIN,
+        )
+
+
+class TestP203:
+    def test_asarray_without_dtype(self):
+        assert_fires("P203", "y = jnp.asarray(x)\n", path=CORE)
+
+    def test_asarray_with_dtype_clean(self):
+        assert_clean("P203", "y = jnp.asarray(x, dtype=jnp.float64)\n", path=CORE)
+
+    def test_explicit_f32_allocation(self):
+        assert_fires("P203", "y = np.zeros(n, dtype=np.float32)\n", path=CORE)
+
+    def test_f64_allocation_clean(self):
+        assert_clean("P203", "y = np.zeros(n, dtype=np.float64)\n", path=CORE)
+
+    def test_out_of_scope_clean(self):
+        assert_clean("P203", "y = jnp.asarray(x)\n", path="src/repro/models/x.py")
+
+
+class TestT301:
+    def test_if_on_traced_value(self):
+        assert_fires(
+            "T301",
+            """
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+            """,
+        )
+
+    def test_shape_check_clean(self):
+        assert_clean(
+            "T301",
+            """
+            @jax.jit
+            def f(x):
+                if x.shape[0] > 0:
+                    return x
+                return -x
+            """,
+        )
+
+    def test_static_argnames_clean(self):
+        assert_clean(
+            "T301",
+            """
+            @partial(jax.jit, static_argnames=("n",))
+            def f(x, n):
+                if n > 2:
+                    return x * n
+                return x
+            """,
+        )
+
+    def test_bool_call(self):
+        assert_fires(
+            "T301",
+            """
+            @jax.jit
+            def f(x):
+                return bool(x > 0)
+            """,
+        )
+
+    def test_function_passed_to_while_loop(self):
+        assert_fires(
+            "T301",
+            """
+            def cond(s):
+                if s > 0:
+                    return True
+                return False
+
+            out = lax.while_loop(cond, body, x0)
+            """,
+        )
+
+    def test_undecorated_function_clean(self):
+        assert_clean(
+            "T301",
+            """
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+            """,
+        )
+
+
+class TestT302:
+    def test_item_call(self):
+        assert_fires(
+            "T302",
+            """
+            @jax.jit
+            def f(x):
+                return x.sum().item()
+            """,
+        )
+
+    def test_float_call(self):
+        assert_fires(
+            "T302",
+            """
+            @jax.jit
+            def f(x):
+                return float(x[0])
+            """,
+        )
+
+    def test_np_asarray(self):
+        assert_fires(
+            "T302",
+            """
+            @jax.jit
+            def f(x):
+                return np.asarray(x)
+            """,
+        )
+
+    def test_len_clean(self):
+        assert_clean(
+            "T302",
+            """
+            @jax.jit
+            def f(x):
+                return x * len(x.shape)
+            """,
+        )
+
+
+class TestT303:
+    def test_mutable_global_read(self):
+        assert_fires(
+            "T303",
+            """
+            CACHE = {}
+
+            @jax.jit
+            def f(x):
+                return x + CACHE["bias"]
+            """,
+        )
+
+    def test_global_statement(self):
+        assert_fires(
+            "T303",
+            """
+            @jax.jit
+            def f(x):
+                global COUNT
+                COUNT = COUNT + 1
+                return x
+            """,
+        )
+
+    def test_immutable_module_constant_clean(self):
+        assert_clean(
+            "T303",
+            """
+            SCALE = 2.5
+
+            @jax.jit
+            def f(x):
+                return x * SCALE
+            """,
+        )
+
+
+class TestD401:
+    def test_for_over_set_literal(self):
+        assert_fires("D401", "for x in {1, 2, 3}:\n    print(x)\n")
+
+    def test_for_over_set_bound_name(self):
+        assert_fires(
+            "D401",
+            """
+            names = set(items)
+            for n in names:
+                emit(n)
+            """,
+        )
+
+    def test_list_materialisation(self):
+        assert_fires("D401", "xs = list({1, 2})\n")
+
+    def test_star_unpack(self):
+        assert_fires("D401", "f(*{1, 2})\n")
+
+    def test_sorted_set_clean(self):
+        assert_clean("D401", "for x in sorted({1, 2, 3}):\n    print(x)\n")
+
+    def test_order_free_consumer_clean(self):
+        assert_clean("D401", "n = len({1, 2}); m = max({1, 2})\n")
+
+
+class TestD402:
+    def test_unsorted_listdir(self):
+        assert_fires("D402", "names = os.listdir(path)\n")
+
+    def test_sorted_listdir_clean(self):
+        assert_clean("D402", "names = sorted(os.listdir(path))\n")
+
+    def test_path_iterdir(self):
+        assert_fires("D402", "for p in base.iterdir():\n    load(p)\n")
+
+    def test_glob_glob(self):
+        assert_fires("D402", "hits = glob.glob(pattern)\n")
+
+    def test_ast_walk_clean(self):
+        # `walk` alone must not match: ast.walk is not filesystem enumeration.
+        assert_clean("D402", "for node in ast.walk(tree):\n    visit(node)\n")
+
+
+class TestD403:
+    def test_legacy_np_random(self):
+        assert_fires("D403", "x = np.random.rand(3)\n")
+
+    def test_default_rng_clean(self):
+        assert_clean(
+            "D403", "rng = np.random.default_rng(0)\nx = rng.standard_normal(3)\n"
+        )
+
+    def test_stdlib_random_module_call(self):
+        assert_fires("D403", "x = random.random()\n")
+
+    def test_random_instance_clean(self):
+        assert_clean("D403", "rng = random.Random(0)\nx = rng.random()\n")
+
+    def test_from_import_sampler(self):
+        assert_fires("D403", "from random import shuffle\nshuffle(xs)\n")
+
+
+class TestD404:
+    def test_wall_clock_in_core(self):
+        assert_fires("D404", "t = time.time()\n", path=CORE)
+
+    def test_wall_clock_in_service(self):
+        assert_fires(
+            "D404", "now = datetime.now()\n", path="src/repro/service/x.py"
+        )
+
+    def test_perf_counter_clean(self):
+        assert_clean("D404", "t = time.perf_counter()\n", path=CORE)
+
+    def test_out_of_scope_clean(self):
+        assert_clean("D404", "t = time.time()\n", path="benchmarks/x.py")
+
+
+# --- B1xx: backend-contract conformance (needs files next to a base.py) ----
+
+MINI_BASE = textwrap.dedent(
+    """
+    class PlacementBackend:
+        def place_block(self, shares, iis, t_slr, t_cfg, opts=None):
+            ...
+
+    def dispatch_instance_blocks(backend, batch, opts=None, *, shard=None):
+        ...
+    """
+)
+
+GOOD_BACKEND = textwrap.dedent(
+    """
+    @register_backend("good")
+    class GoodBackend:
+        name = "good"
+
+        def place_block(self, shares, iis, t_slr, t_cfg, opts=None): ...
+        def dispatch_block(self, shares, iis, t_slr, t_cfg, opts=None): ...
+        def place_blocks(self, batch, opts=None, *, shard=None): ...
+        def dispatch_blocks(self, batch, opts=None, *, shard=None): ...
+        def dispatch_blocks_raw(self, batch, opts=None, *, shard=None): ...
+    """
+)
+
+
+def lint_backend_dir(tmp_path, module_source, base_source=MINI_BASE):
+    backend_contract._reset_cache()
+    d = tmp_path / "placement_backends"
+    d.mkdir()
+    (d / "base.py").write_text(base_source)
+    (d / "candidate.py").write_text(textwrap.dedent(module_source))
+    result = run_paths([str(d / "candidate.py")], root=str(tmp_path))
+    return [f for f in result.findings if f.rule.startswith("B")]
+
+
+class TestBackendContract:
+    def test_conforming_backend_clean(self, tmp_path):
+        assert lint_backend_dir(tmp_path, GOOD_BACKEND) == []
+
+    def test_missing_method_b101(self, tmp_path):
+        source = GOOD_BACKEND.replace(
+            "    def dispatch_blocks_raw(self, batch, opts=None, *, shard=None): ...\n",
+            "",
+        )
+        findings = lint_backend_dir(tmp_path, source)
+        assert [f.rule for f in findings] == ["B101"]
+        assert "dispatch_blocks_raw" in findings[0].message
+
+    def test_signature_mismatch_b102(self, tmp_path):
+        # `shard` demoted from keyword-only to positional: structural drift.
+        source = GOOD_BACKEND.replace(
+            "def place_blocks(self, batch, opts=None, *, shard=None)",
+            "def place_blocks(self, batch, opts=None, shard=None)",
+        )
+        findings = lint_backend_dir(tmp_path, source)
+        assert [f.rule for f in findings] == ["B102"]
+        assert "place_blocks" in findings[0].message
+
+    def test_registry_name_mismatch_b103(self, tmp_path):
+        source = GOOD_BACKEND.replace('name = "good"', 'name = "g00d"')
+        findings = lint_backend_dir(tmp_path, source)
+        assert [f.rule for f in findings] == ["B103"]
+
+    def test_unregistered_backend_b103(self, tmp_path):
+        source = textwrap.dedent(
+            """
+            class ShadowBackend:
+                name = "shadow"
+
+                def place_block(self, shares, iis, t_slr, t_cfg, opts=None): ...
+            """
+        )
+        findings = lint_backend_dir(tmp_path, source)
+        assert "B103" in [f.rule for f in findings]
+
+    def test_specs_derive_from_base_not_fallback(self, tmp_path):
+        # Widen base.py's protocol; the same backend must now be out of date.
+        widened = MINI_BASE.replace(
+            "t_slr, t_cfg, opts=None", "t_slr, t_cfg, budgets, opts=None"
+        )
+        findings = lint_backend_dir(tmp_path, GOOD_BACKEND, base_source=widened)
+        assert {f.rule for f in findings} == {"B102"}
+        assert any("budgets" in f.message for f in findings)
+
+    def test_outside_backend_dir_not_checked(self, tmp_path):
+        backend_contract._reset_cache()
+        (tmp_path / "candidate.py").write_text(textwrap.dedent(GOOD_BACKEND))
+        result = run_paths([str(tmp_path / "candidate.py")], root=str(tmp_path))
+        assert [f for f in result.findings if f.rule.startswith("B")] == []
+
+
+class TestSuppression:
+    def test_suppression_round_trip(self, tmp_path):
+        src = "x = np.random.rand(3)  # repro-lint: ignore[D403]  # fixture demo\n"
+        p = tmp_path / "mod.py"
+        p.write_text(src)
+        result = run_paths([str(p)], root=str(tmp_path))
+        assert result.ok
+        assert len(result.suppressed) == 1
+        finding, reason = result.suppressed[0]
+        assert finding.rule == "D403"
+        assert reason == "fixture demo"
+
+    def test_suppression_only_covers_listed_rules(self):
+        src = "t = time.time()  # repro-lint: ignore[D403]  # wrong rule id\n"
+        assert rules_of(src, path=CORE) == ["D404"]
+
+    def test_multiple_ids_one_comment(self):
+        src = (
+            "for x in {1, 2}:  # repro-lint: ignore[D401,D402]  # demo\n"
+            "    pass\n"
+        )
+        assert rules_of(src) == []
+
+    def test_reasonless_suppression_is_s001(self):
+        src = "x = np.random.rand(3)  # repro-lint: ignore[D403]\n"
+        got = rules_of(src)
+        # A reasonless ignore is not a suppression at all: the original
+        # finding stays AND the comment itself is flagged.
+        assert "S001" in got
+        assert "D403" in got
+
+    def test_s001_is_unsuppressable(self):
+        src = "x = 1  # repro-lint: ignore[S001]\n"
+        assert "S001" in rules_of(src)
+
+    def test_multiline_statement_suppressed_at_first_line(self):
+        src = (
+            "ok = (x ==  # repro-lint: ignore[P201]  # bit-exact by contract\n"
+            "      1.0)\n"
+        )
+        assert rules_of(src) == []
+
+
+class TestJsonSchema:
+    def test_schema_version_1(self, tmp_path):
+        p = tmp_path / "mod.py"
+        p.write_text(
+            "x = np.random.rand(2)\n"
+            "y = 3  # repro-lint: ignore[D401]  # no-op demo suppression\n"
+        )
+        payload = json.loads(to_json(run_paths([str(p)], root=str(tmp_path))))
+        assert set(payload) == {
+            "version", "rules", "files", "findings", "suppressed", "counts"
+        }
+        assert payload["version"] == 1
+        assert payload["rules"] == all_rules()
+        assert payload["files"] == ["mod.py"]
+        (finding,) = payload["findings"]
+        assert set(finding) == {"rule", "path", "line", "col", "message"}
+        assert finding["rule"] == "D403"
+        assert payload["counts"] == {"findings": 1, "suppressed": 0, "files": 1}
+
+    def test_suppressed_entries_carry_reason(self, tmp_path):
+        p = tmp_path / "mod.py"
+        p.write_text("x = random.random()  # repro-lint: ignore[D403]  # why\n")
+        payload = json.loads(to_json(run_paths([str(p)], root=str(tmp_path))))
+        assert payload["findings"] == []
+        (sup,) = payload["suppressed"]
+        assert sup["rule"] == "D403" and sup["reason"] == "why"
+
+
+def run_cli(*argv, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", *argv],
+        cwd=cwd,
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO)},
+    )
+
+
+class TestCli:
+    def test_injected_violation_fails_with_rule_id(self, tmp_path):
+        p = tmp_path / "dirty.py"
+        p.write_text("import numpy as np\nx = np.random.rand(4)\n")
+        proc = run_cli(str(p), "--root", str(tmp_path))
+        assert proc.returncode == 1
+        assert "D403" in proc.stdout
+        assert "dirty.py:2" in proc.stdout
+
+    def test_clean_file_exits_zero(self, tmp_path):
+        p = tmp_path / "clean.py"
+        p.write_text("rng = np.random.default_rng(7)\n")
+        proc = run_cli(str(p), "--root", str(tmp_path))
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_json_flag_emits_parseable_report(self, tmp_path):
+        p = tmp_path / "dirty.py"
+        p.write_text("t = time.time()\n")
+        proc = run_cli(
+            str(p), "--root", str(tmp_path), "--json", cwd=REPO
+        )
+        payload = json.loads(proc.stdout)
+        assert payload["version"] == 1
+
+    def test_no_paths_is_usage_error(self):
+        assert run_cli().returncode == 2
+
+    def test_list_rules(self):
+        proc = run_cli("--list-rules")
+        assert proc.returncode == 0
+        for rid in ("B101", "P202", "T301", "D404", "S001"):
+            assert rid in proc.stdout
+
+
+class TestSelfClean:
+    def test_analyzer_is_clean_on_itself(self):
+        result = run_paths(["tools/repro_lint"], root=str(REPO))
+        assert result.ok, [f.render() for f in result.findings]
+
+    def test_backend_modules_conform(self):
+        # The real placement backends are the contract's raison d'etre.
+        result = run_paths(
+            ["src/repro/core/placement_backends"], root=str(REPO)
+        )
+        bad = [f for f in result.findings if f.rule.startswith("B")]
+        assert bad == [], [f.render() for f in bad]
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -126,10 +126,10 @@ def test_sweep_matches_fig5_trend():
     # (n_f·t_slr) rises with n_f; the empirical max over the DISCRETE set
     # of accepted combos tracks it within ~1.5 percentage points.
     wl = [p.workload_threshold for p in pts]
-    for a, b in zip(wl, wl[1:]):
+    for a, b in zip(wl, wl[1:], strict=False):
         assert b >= a - 1.5
     assert wl[-1] > wl[0]
     aw = [p.avg_weight_threshold for p in pts]
-    for a, b in zip(aw, aw[1:]):
+    for a, b in zip(aw, aw[1:], strict=False):
         assert b >= a - 0.02
     assert aw[-1] > aw[0]

@@ -223,3 +223,30 @@ def test_telemetry_trace_is_complete():
     assert all(t.latency_s >= 0 for t in svc.telemetry)
     assert svc.telemetry[-1].n_tasks == 1
     assert svc.telemetry[-1].feasible
+
+
+def test_solve_path_telemetry_classifies_warm_and_general():
+    """The warm/general telemetry label keys off replan's thin-state
+    sentinel (``complete_below == -inf``).  Regression for the sentinel
+    check in ``SchedulerService._solve``: the first arrival cold-solves
+    (general), the second replans warm from the recorded state, and the
+    third — replanning from the warm path's *thin* state — falls back to
+    the general fresh walk.  The live plan stays bit-identical to cold
+    throughout."""
+    fleet = FleetSpec(n_f=3, t_slr=30.0, t_cfg=1.0)
+
+    def mk(name, power):
+        return Task(
+            name=name,
+            period=10.0,
+            data=20.0,
+            init_interval=1.0,
+            variants=(TaskVariant(cu=1, throughput=6.0, power=power),),
+        )
+
+    svc = SchedulerService(fleet, engine="numpy")
+    rows = [svc.submit(mk("a", 2.0)), svc.submit(mk("b", 3.0)),
+            svc.submit(mk("c", 1.0))]
+    assert all(r.admitted for r in rows)
+    assert [r.path for r in rows] == ["general", "warm", "general"]
+    _assert_matches_cold(svc)

@@ -40,7 +40,7 @@ def test_train_resume_is_bitwise_deterministic(tmp_path):
     state_b = loop_b2.run(jax.random.PRNGKey(1))
     assert int(loop_b2.history[0]["step"]) == 10  # actually resumed
 
-    for a, b in zip(jax.tree.leaves(state_a.params), jax.tree.leaves(state_b.params)):
+    for a, b in zip(jax.tree.leaves(state_a.params), jax.tree.leaves(state_b.params), strict=True):
         np.testing.assert_allclose(
             np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6
         )
@@ -55,7 +55,7 @@ def test_microbatch_matches_full_batch():
     la = loop_full.history[0]["loss"]
     lb = loop_mb.history[0]["loss"]
     assert la == pytest.approx(lb, rel=1e-4)
-    for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params)):
+    for a, b in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
 
 

@@ -1,0 +1,1 @@
+"""Repo-native developer tooling (`python -m tools.<tool>` from the repo root)."""

@@ -11,6 +11,10 @@ Two stdlib-only checks, wired into CI's docs leg and tier-1
    ``docs/architecture.md`` is executed (each in a fresh namespace) under
    the repo's ``src`` layout, so the documented API can never drift from
    the real one.
+3. **Snippet lint** — the same blocks go through ``tools.repro_lint``
+   (:func:`tools.repro_lint.lint_source`), so documentation can't model
+   the anti-patterns the analyzer bans in ``src`` (bare-set iteration,
+   float ``==``, unseeded global RNG, …).
 
 Usage::
 
@@ -102,6 +106,23 @@ def check_snippets(path: str) -> list[str]:
     return problems
 
 
+def lint_snippets(path: str) -> list[str]:
+    """Run repro-lint over every python fence; doc code obeys repo rules."""
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
+    from tools.repro_lint import lint_source
+
+    rel = os.path.relpath(path, _ROOT)
+    problems = []
+    for start, src in python_snippets(path):
+        for f in lint_source(src, path=f"{rel}:{start}"):
+            # snippet line numbers are fence-relative; report doc-absolute
+            problems.append(
+                f"{rel}:{start + f.line - 1}: snippet lint: {f.rule} {f.message}"
+            )
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("files", nargs="*", help="markdown files (default: docs set)")
@@ -116,6 +137,7 @@ def main(argv: list[str] | None = None) -> int:
     arch = os.path.join(_ROOT, "docs", "architecture.md")
     if not args.no_snippets and os.path.exists(arch):
         problems.extend(check_snippets(arch))
+        problems.extend(lint_snippets(arch))
 
     n_snip = 0 if args.no_snippets else len(python_snippets(arch)) \
         if os.path.exists(arch) else 0

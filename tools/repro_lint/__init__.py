@@ -1,0 +1,54 @@
+"""repro-lint: AST-based invariant analyzer for this repository.
+
+The scheduler's core guarantees — four placement backends bit-identical to
+the scalar oracle, exact power-tie determinism, survivor tables selected at
+float64 before any f32 cast — are runtime-tested but easy to violate in a
+way no existing test exercises.  This package rejects whole defect classes
+statically, at CI time, before any test runs:
+
+* **B1xx — backend contract** (:mod:`tools.repro_lint.rules.backend_contract`):
+  every registered placement backend defines the full
+  ``place_block`` / ``dispatch_block`` / ``place_blocks`` /
+  ``dispatch_blocks`` / ``dispatch_blocks_raw`` surface with signatures
+  structurally matching ``placement_backends/base.py``, and registry
+  registrations are consistent.
+* **P2xx — precision flow** (:mod:`tools.repro_lint.rules.precision`):
+  float ``==``/``!=``, float32 casts flowing into threshold comparisons or
+  survivor-table selection, implicit dtype narrowing in precision-critical
+  modules.
+* **T3xx — jax tracer hygiene** (:mod:`tools.repro_lint.rules.tracer`):
+  Python control flow / host synchronisation on traced values inside
+  ``jit`` / ``shard_map`` / pallas bodies, jit closures over mutable state.
+* **D4xx — determinism** (:mod:`tools.repro_lint.rules.determinism`):
+  iteration over bare sets, unsorted filesystem enumeration, global-state
+  RNG, wall-clock reads in scheduling paths.
+
+Run it as ``python -m tools.repro_lint <paths> [--json]``; suppress a
+finding with a justified per-line comment::
+
+    x = risky()  # repro-lint: ignore[P201]  # exact tie-break by contract
+
+A suppression without a reason is itself a finding (``S001``).  See
+``docs/architecture.md`` §"Static guarantees" for the full catalog.
+"""
+
+from __future__ import annotations
+
+from .engine import (  # noqa: F401
+    Finding,
+    LintResult,
+    all_rules,
+    lint_source,
+    run_paths,
+)
+
+__version__ = "1.0"
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "all_rules",
+    "lint_source",
+    "run_paths",
+    "__version__",
+]

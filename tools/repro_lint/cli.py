@@ -1,0 +1,72 @@
+"""Command line for repro-lint.
+
+Usage (from the repo root)::
+
+    python -m tools.repro_lint src benchmarks tools          # human output
+    python -m tools.repro_lint src --json                    # machine output
+    python -m tools.repro_lint src --select P2 D4            # rule-id prefixes
+    python -m tools.repro_lint --list-rules                  # print catalog
+
+Exit status: 0 when no findings survive suppression, 1 when findings
+remain, 2 on usage errors.  Suppressed findings are listed (with their
+reasons) under ``--verbose`` and always included in ``--json`` output.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .engine import all_rules, run_paths, to_json
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="AST-based invariant analyzer for this repository.",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the machine-readable JSON report")
+    ap.add_argument("--select", nargs="+", metavar="PREFIX", default=None,
+                    help="only report rules whose id starts with a prefix "
+                         "(e.g. P2, D401)")
+    ap.add_argument("--root", default=None,
+                    help="directory paths are relative to (default: cwd)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also list suppressed findings with their reasons")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule_id, summary in sorted(all_rules().items()):
+            print(f"{rule_id}  {summary}")
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("error: no paths given (or use --list-rules)", file=sys.stderr)
+        return 2
+
+    result = run_paths(args.paths, root=args.root, select=args.select)
+
+    if args.as_json:
+        print(to_json(result))
+        return 0 if result.ok else 1
+
+    for f in result.findings:
+        print(f.render())
+    if args.verbose and result.suppressed:
+        print()
+        for f, reason in result.suppressed:
+            print(f"{f.path}:{f.line}: suppressed {f.rule} — {reason}")
+    n, s = len(result.findings), len(result.suppressed)
+    print(
+        f"repro-lint: {len(result.files)} files, {n} finding{'s' * (n != 1)}"
+        + (f" ({s} suppressed)" if s else "")
+    )
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

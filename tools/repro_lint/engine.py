@@ -1,0 +1,294 @@
+"""repro-lint engine: file walking, suppressions, rule dispatch, reporting.
+
+The engine is rule-agnostic: each rule family lives in
+``tools.repro_lint.rules.<family>`` and exposes
+
+* ``RULES: dict[str, str]`` — rule id -> one-line summary (the catalog), and
+* ``check(ctx: ModuleContext) -> Iterable[Finding]``.
+
+The engine parses each file once into a :class:`ModuleContext`, runs every
+family, then applies per-line suppressions of the form::
+
+    <code>  # repro-lint: ignore[P201]  # why this is intentionally exact
+
+Multiple ids may be listed (``ignore[P201,D401]``).  The trailing reason is
+mandatory: a reasonless suppression becomes an ``S001`` finding (which is
+itself unsuppressable — fix it by writing the reason down).  Suppressions
+match a finding by (line, rule id); for multi-line statements the relevant
+line is the statement's *first* line (``node.lineno``).
+
+A module may opt into the precision-critical rule scope (normally keyed off
+the file path) with a ``# repro-lint: precision-critical`` pragma anywhere
+in the file — see :mod:`tools.repro_lint.rules.precision`.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Iterable, Iterator
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "ModuleContext",
+    "Suppression",
+    "all_rules",
+    "collect_files",
+    "lint_source",
+    "run_paths",
+    "to_json",
+]
+
+# Engine-level rules (rule families document theirs in rules/*.py).
+ENGINE_RULES = {
+    "E001": "file does not parse (syntax error)",
+    "S001": "repro-lint suppression without a written reason",
+}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*ignore\[([A-Za-z0-9_,\s]+)\](.*)$"
+)
+_PRECISION_PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*precision-critical\b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """A parsed ``# repro-lint: ignore[...]`` comment."""
+
+    path: str
+    line: int
+    rules: tuple[str, ...]
+    reason: str
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """Everything a rule checker needs about one parsed module."""
+
+    path: str  # normalized, '/'-separated display path
+    abspath: str
+    source: str
+    tree: ast.Module
+    lines: list[str]
+    precision_critical: bool = False  # module-level pragma (see precision rules)
+
+    @classmethod
+    def from_source(cls, source: str, path: str, abspath: str | None = None):
+        tree = ast.parse(source, filename=path)
+        return cls(
+            path=path.replace(os.sep, "/"),
+            abspath=abspath or path,
+            source=source,
+            tree=tree,
+            lines=source.splitlines(),
+            precision_critical=bool(_PRECISION_PRAGMA_RE.search(source)),
+        )
+
+
+@dataclasses.dataclass
+class LintResult:
+    """Aggregate outcome of one lint run."""
+
+    findings: list[Finding]
+    suppressed: list[tuple[Finding, str]]  # (finding, reason)
+    files: list[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def _rule_modules():
+    # Imported lazily so `import tools.repro_lint` stays cheap and the rules
+    # package can import the engine's types without a cycle.
+    from .rules import backend_contract, determinism, precision, tracer
+
+    return (backend_contract, precision, tracer, determinism)
+
+
+def all_rules() -> dict[str, str]:
+    """The full rule catalog: id -> one-line summary (stable, documented)."""
+    catalog = dict(ENGINE_RULES)
+    for mod in _rule_modules():
+        catalog.update(mod.RULES)
+    return catalog
+
+
+def parse_suppressions(ctx: ModuleContext) -> tuple[list[Suppression], list[Finding]]:
+    """Extract suppression comments; reasonless ones become S001 findings."""
+    sups: list[Suppression] = []
+    findings: list[Finding] = []
+    for lineno, line in enumerate(ctx.lines, 1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        reason = m.group(2).strip().lstrip("#").strip()
+        if not reason:
+            findings.append(
+                Finding(
+                    rule="S001",
+                    path=ctx.path,
+                    line=lineno,
+                    col=m.start() + 1,
+                    message=(
+                        "suppression needs a written reason: "
+                        "`# repro-lint: ignore[RULE]  # why`"
+                    ),
+                )
+            )
+            continue
+        sups.append(Suppression(path=ctx.path, line=lineno, rules=rules, reason=reason))
+    return sups, findings
+
+
+def lint_module(ctx: ModuleContext) -> tuple[list[Finding], list[tuple[Finding, str]]]:
+    """Run every rule family over one module and apply suppressions."""
+    raw: list[Finding] = []
+    for mod in _rule_modules():
+        raw.extend(mod.check(ctx))
+    sups, findings = parse_suppressions(ctx)
+    by_line: dict[int, list[Suppression]] = {}
+    for s in sups:
+        by_line.setdefault(s.line, []).append(s)
+    suppressed: list[tuple[Finding, str]] = []
+    for f in raw:
+        hit = next(
+            (s for s in by_line.get(f.line, ()) if f.rule in s.rules),
+            None,
+        )
+        if hit is not None:
+            suppressed.append((f, hit.reason))
+        else:
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, suppressed
+
+
+def lint_source(
+    source: str, path: str = "<snippet>", select: Iterable[str] | None = None
+) -> list[Finding]:
+    """Lint a source string (used by ``tools/check_docs.py`` on doc snippets).
+
+    Returns post-suppression findings only; a syntax error yields a single
+    ``E001`` finding rather than raising.
+    """
+    try:
+        ctx = ModuleContext.from_source(source, path)
+    except SyntaxError as e:
+        return [
+            Finding(
+                rule="E001",
+                path=path,
+                line=e.lineno or 1,
+                col=e.offset or 1,
+                message=f"syntax error: {e.msg}",
+            )
+        ]
+    findings, _ = lint_module(ctx)
+    return _select(findings, select)
+
+
+def _select(findings: list[Finding], select: Iterable[str] | None) -> list[Finding]:
+    if select is None:
+        return findings
+    wanted = tuple(select)
+    return [f for f in findings if any(f.rule.startswith(w) for w in wanted)]
+
+
+def collect_files(paths: Iterable[str], root: str | None = None) -> Iterator[str]:
+    """Yield ``.py`` files under ``paths`` (files pass through), sorted.
+
+    Hidden directories and ``__pycache__`` are skipped; traversal order is
+    sorted so runs are byte-stable across filesystems.
+    """
+    root = root or os.getcwd()
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full):
+            yield full
+            continue
+        for dirpath, dirnames, filenames in sorted(os.walk(full)):
+            dirnames[:] = sorted(
+                d for d in dirnames if not d.startswith(".") and d != "__pycache__"
+            )
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    yield os.path.join(dirpath, name)
+
+
+def run_paths(
+    paths: Iterable[str],
+    root: str | None = None,
+    select: Iterable[str] | None = None,
+) -> LintResult:
+    """Lint every ``.py`` file under ``paths``; paths reported relative to ``root``."""
+    root = os.path.abspath(root or os.getcwd())
+    findings: list[Finding] = []
+    suppressed: list[tuple[Finding, str]] = []
+    files: list[str] = []
+    for abspath in collect_files(paths, root):
+        rel = os.path.relpath(abspath, root).replace(os.sep, "/")
+        files.append(rel)
+        try:
+            with open(abspath, encoding="utf-8") as fh:
+                source = fh.read()
+        except OSError as e:
+            findings.append(
+                Finding("E001", rel, 1, 1, f"cannot read file: {e}")
+            )
+            continue
+        try:
+            ctx = ModuleContext.from_source(source, rel, abspath)
+        except SyntaxError as e:
+            findings.append(
+                Finding(
+                    "E001", rel, e.lineno or 1, e.offset or 1,
+                    f"syntax error: {e.msg}",
+                )
+            )
+            continue
+        f, s = lint_module(ctx)
+        findings.extend(f)
+        suppressed.extend(s)
+    return LintResult(
+        findings=_select(findings, select), suppressed=suppressed, files=files
+    )
+
+
+def to_json(result: LintResult) -> str:
+    """Machine-readable report (schema pinned by ``tests/test_repro_lint.py``)."""
+    payload = {
+        "version": 1,
+        "rules": all_rules(),
+        "files": result.files,
+        "findings": [dataclasses.asdict(f) for f in result.findings],
+        "suppressed": [
+            {**dataclasses.asdict(f), "reason": reason}
+            for f, reason in result.suppressed
+        ],
+        "counts": {
+            "findings": len(result.findings),
+            "suppressed": len(result.suppressed),
+            "files": len(result.files),
+        },
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)

@@ -1,0 +1,43 @@
+"""Rule families for repro-lint.
+
+Each submodule exposes ``RULES`` (id -> summary) and ``check(ctx)``.  This
+package also hosts the small AST helpers shared by the families.
+"""
+
+from __future__ import annotations
+
+import ast
+
+__all__ = ["dotted_name", "call_name", "const_str", "is_float32_dtype"]
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    """Dotted name of a call's callee (``np.random.rand`` -> that string)."""
+    return dotted_name(node.func)
+
+
+def const_str(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def is_float32_dtype(node: ast.AST) -> bool:
+    """Does this expression denote a float32 dtype (np/jnp attr or string)?"""
+    name = dotted_name(node)
+    if name is not None and name.split(".")[-1] == "float32":
+        return True
+    s = const_str(node)
+    return s in ("float32", "f32", "<f4", "float32_t")

@@ -1,0 +1,208 @@
+"""B1xx — placement-backend contract conformance.
+
+Applies to modules that live next to a ``base.py`` inside a directory named
+``placement_backends``.  The canonical method signatures are derived from
+that sibling ``base.py`` itself, so the check cannot drift from the real
+protocol:
+
+* ``place_block`` comes from the :class:`PlacementBackend` Protocol body;
+* ``dispatch_block`` shares ``place_block``'s signature (the async twin —
+  see base.py's "Asynchronous dispatch" contract);
+* ``place_blocks`` / ``dispatch_blocks`` / ``dispatch_blocks_raw`` come
+  from ``dispatch_instance_blocks``'s parameter list with the leading
+  ``backend`` swapped for ``self`` (the batched surface the walk feeds).
+
+Rules:
+
+* **B101** — a registered backend class is missing one of the five surface
+  methods.  Runtime fallbacks make a missing method *silently* eager, so a
+  new backend that forgets e.g. ``dispatch_blocks_raw`` loses the batched
+  fast path (or worse, the ``resilience=`` plumbing a fallback happens to
+  provide) without any test failing per-engine.
+* **B102** — a surface method exists but its parameters don't structurally
+  match base.py: names, order, kinds (keyword-only ``shard``), and default
+  presence must agree.  Annotations are deliberately *not* compared.
+* **B103** — registry inconsistency: the ``@register_backend("x")`` string
+  must equal the class-level ``name`` attribute, and a class that looks
+  like a backend (defines ``place_block``) must actually be registered.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterator
+
+from ..engine import Finding, ModuleContext
+from . import const_str, dotted_name
+
+RULES = {
+    "B101": "registered placement backend is missing a required surface method",
+    "B102": "backend surface method signature does not match base.py",
+    "B103": "backend registry registration is inconsistent",
+}
+
+SURFACE_METHODS = (
+    "place_block",
+    "dispatch_block",
+    "place_blocks",
+    "dispatch_blocks",
+    "dispatch_blocks_raw",
+)
+
+# Structural signature: (positional arg names, names-with-default,
+# keyword-only names, keyword-only-with-default).  Used when base.py cannot
+# be parsed (and pinned by fixtures so derivation bugs surface in tests).
+_FALLBACK_SPECS = {
+    "place_block": (("self", "shares", "iis", "t_slr", "t_cfg", "opts"),
+                    ("opts",), (), ()),
+    "place_blocks": (("self", "batch", "opts"), ("opts",), ("shard",), ("shard",)),
+}
+
+
+def _sig_of(fn: ast.FunctionDef) -> tuple:
+    args = fn.args
+    pos = tuple(a.arg for a in args.posonlyargs + args.args)
+    n_def = len(args.defaults)
+    pos_defaulted = pos[len(pos) - n_def:] if n_def else ()
+    kw = tuple(a.arg for a in args.kwonlyargs)
+    kw_defaulted = tuple(
+        a.arg for a, d in zip(args.kwonlyargs, args.kw_defaults, strict=True) if d is not None
+    )
+    return (pos, tuple(pos_defaulted), kw, kw_defaulted)
+
+
+def _render_spec(spec: tuple) -> str:
+    pos, pos_def, kw, kw_def = spec
+    parts = [p if p not in pos_def else f"{p}=..." for p in pos]
+    if kw:
+        parts.append("*")
+        parts.extend(k if k not in kw_def else f"{k}=..." for k in kw)
+    return "(" + ", ".join(parts) + ")"
+
+
+def _derive_specs(base_path: str) -> dict[str, tuple]:
+    """Canonical per-method specs from the sibling base.py (cached)."""
+    try:
+        with open(base_path, encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=base_path)
+    except (OSError, SyntaxError):
+        tree = None
+    specs = dict(_FALLBACK_SPECS)
+    if tree is not None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and node.name == "PlacementBackend":
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef) and item.name == "place_block":
+                        specs["place_block"] = _sig_of(item)
+            if isinstance(node, ast.FunctionDef) and (
+                node.name == "dispatch_instance_blocks"
+            ):
+                pos, pos_def, kw, kw_def = _sig_of(node)
+                # swap the free function's leading `backend` for `self`
+                specs["place_blocks"] = (("self",) + pos[1:], pos_def, kw, kw_def)
+    specs["dispatch_block"] = specs["place_block"]
+    specs["dispatch_blocks"] = specs["place_blocks"]
+    specs["dispatch_blocks_raw"] = specs["place_blocks"]
+    return specs
+
+
+_SPEC_CACHE: dict[str, dict[str, tuple]] = {}
+
+
+def _registered_name(cls: ast.ClassDef) -> tuple[str | None, ast.AST | None]:
+    """The ``@register_backend("x")`` string, if any, and the decorator node."""
+    for dec in cls.decorator_list:
+        if isinstance(dec, ast.Call):
+            callee = dotted_name(dec.func)
+            if callee and callee.split(".")[-1] == "register_backend" and dec.args:
+                return const_str(dec.args[0]), dec
+    return None, None
+
+
+def _name_attr(cls: ast.ClassDef) -> str | None:
+    for item in cls.body:
+        if isinstance(item, ast.Assign):
+            for tgt in item.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "name":
+                    return const_str(item.value)
+        elif isinstance(item, ast.AnnAssign):
+            if (
+                isinstance(item.target, ast.Name)
+                and item.target.id == "name"
+                and item.value is not None
+            ):
+                return const_str(item.value)
+    return None
+
+
+def _methods(cls: ast.ClassDef) -> dict[str, ast.FunctionDef]:
+    return {
+        item.name: item
+        for item in cls.body
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    dirname, fname = os.path.split(ctx.abspath)
+    if os.path.basename(dirname) != "placement_backends":
+        return
+    if fname in ("base.py", "__init__.py"):
+        return
+    base_path = os.path.join(dirname, "base.py")
+    if not os.path.exists(base_path):
+        return
+    if base_path not in _SPEC_CACHE:
+        _SPEC_CACHE[base_path] = _derive_specs(base_path)
+    specs = _SPEC_CACHE[base_path]
+
+    for node in ctx.tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        reg_name, reg_node = _registered_name(node)
+        methods = _methods(node)
+        if reg_node is None:
+            if "place_block" in methods:
+                yield Finding(
+                    "B103", ctx.path, node.lineno, node.col_offset + 1,
+                    f"class {node.name!r} defines place_block but is never "
+                    f"registered with @register_backend(...)",
+                )
+            continue
+        name_attr = _name_attr(node)
+        if reg_name is None:
+            yield Finding(
+                "B103", ctx.path, reg_node.lineno, reg_node.col_offset + 1,
+                f"@register_backend on {node.name!r} must be called with a "
+                f"string literal engine name",
+            )
+        elif name_attr != reg_name:
+            yield Finding(
+                "B103", ctx.path, node.lineno, node.col_offset + 1,
+                f"class {node.name!r} registered as {reg_name!r} but its "
+                f"`name` attribute is {name_attr!r} — registry lookups and "
+                f"error messages must agree",
+            )
+        for meth in SURFACE_METHODS:
+            fn = methods.get(meth)
+            if fn is None:
+                yield Finding(
+                    "B101", ctx.path, node.lineno, node.col_offset + 1,
+                    f"backend {node.name!r} is missing {meth}{_render_spec(specs[meth])} "
+                    f"— the full surface is required so fallback paths (and "
+                    f"resilience= plumbing) are explicit, not accidental",
+                )
+                continue
+            got = _sig_of(fn)
+            if got != specs[meth]:
+                yield Finding(
+                    "B102", ctx.path, fn.lineno, fn.col_offset + 1,
+                    f"{node.name}.{meth} signature {_render_spec(got)} does not "
+                    f"structurally match base.py's {_render_spec(specs[meth])}",
+                )
+
+
+def _reset_cache() -> None:
+    """Test hook: drop memoized base.py specs."""
+    _SPEC_CACHE.clear()

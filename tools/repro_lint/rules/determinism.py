@@ -1,0 +1,237 @@
+"""D4xx — determinism.
+
+All enumeration and placement engines must emit identical results across
+runs, hosts, and hash seeds — determinism is a tested invariant of this
+repo (power ties break on exact ``(total_power, flat_index)`` tuples).
+These rules reject the usual ways ordering nondeterminism sneaks in:
+
+* **D401** — iterating a bare ``set`` (literal, ``set()``/``frozenset()``
+  call, set comprehension, set algebra, or a local name bound to one).
+  Set iteration order depends on ``PYTHONHASHSEED`` for str keys; wrap in
+  ``sorted(...)`` when the order can reach any output.
+* **D402** — filesystem enumeration (``os.listdir`` / ``os.scandir`` /
+  ``os.walk`` / ``glob.glob`` / ``iglob`` / ``Path.iterdir`` / ``.glob`` /
+  ``.rglob``) not wrapped in ``sorted(...)`` at the call site: directory
+  order is filesystem-dependent.
+* **D403** — global-state RNG: ``np.random.<sampler>`` (the legacy global
+  generator) or stdlib ``random.<sampler>`` module calls.  Use an explicit
+  seeded generator (``np.random.default_rng(seed)`` /
+  ``random.Random(seed)``) so call order elsewhere can't change draws.
+* **D404** — wall-clock reads (``time.time`` / ``datetime.now`` / …) in
+  scheduling paths (``repro/core`` or ``repro/service`` modules): plans
+  must be functions of their inputs.  ``time.perf_counter`` /
+  ``time.monotonic`` telemetry is exempt (not wall-clock, never ordering).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from ..engine import Finding, ModuleContext
+from . import call_name
+
+RULES = {
+    "D401": "iteration over a bare set (hash-seed-dependent order)",
+    "D402": "unsorted filesystem enumeration (directory-order-dependent)",
+    "D403": "global-state RNG call (np.random.* / random.*)",
+    "D404": "wall-clock read in a scheduling path",
+}
+
+_SCHED_PATH_RE = re.compile(r"(/|^)(core|service)(/|$)")
+
+# Dotted names that are definitely filesystem enumeration, plus method
+# names that are Path-API enumeration on any receiver.  `walk`/`listdir`/
+# `scandir` require the `os.` qualifier so e.g. `ast.walk` stays clean.
+_FS_ENUM_QUALIFIED = {
+    "os.listdir", "os.scandir", "os.walk", "glob.glob", "glob.iglob",
+    "os.path.walk",
+}
+_FS_ENUM_METHODS = {"iterdir", "rglob", "glob"}
+
+# Order-insensitive consumers: passing a set here is fine.
+_ORDER_FREE_CALLS = {
+    "sorted", "len", "min", "max", "sum", "any", "all", "set", "frozenset",
+    "bool", "isinstance",
+}
+
+_NP_RANDOM_ALLOWED = {
+    "default_rng", "Generator", "SeedSequence", "RandomState", "PCG64",
+    "Philox", "MT19937", "SFC64", "BitGenerator",
+}
+_PY_RANDOM_SAMPLERS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle", "sample",
+    "uniform", "gauss", "normalvariate", "expovariate", "betavariate",
+    "triangular", "getrandbits", "seed", "vonmisesvariate", "paretovariate",
+    "lognormvariate", "weibullvariate", "randbytes",
+}
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.localtime", "time.gmtime",
+    "time.ctime", "datetime.now", "datetime.utcnow", "datetime.today",
+    "date.today", "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+
+
+def _is_set_expr(node: ast.AST, local_sets: set[str]) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return call_name(node) in ("set", "frozenset")
+    if isinstance(node, ast.Name):
+        return node.id in local_sets
+    if isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.BitAnd, ast.BitOr, ast.BitXor, ast.Sub)
+    ):
+        # set algebra: tainted if either side is a set expression
+        return _is_set_expr(node.left, local_sets) or _is_set_expr(
+            node.right, local_sets
+        )
+    return False
+
+
+def _local_set_names(tree: ast.AST) -> set[str]:
+    """Names bound (anywhere) to an obvious set expression, minus reuses."""
+    bound: set[str] = set()
+    rebound_other: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            is_set = _is_set_expr(node.value, set())
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    (bound if is_set else rebound_other).add(tgt.id)
+    return bound - rebound_other
+
+
+def _check_d401(ctx: ModuleContext) -> Iterator[Finding]:
+    local_sets = _local_set_names(ctx.tree)
+
+    def flag(node: ast.AST, how: str) -> Finding:
+        return Finding(
+            "D401", ctx.path, node.lineno, node.col_offset + 1,
+            f"iteration over a bare set ({how}) — order depends on the hash "
+            f"seed; wrap in sorted(...)",
+        )
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            if _is_set_expr(node.iter, local_sets):
+                yield flag(node, "for loop")
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                               ast.DictComp)):
+            for gen in node.generators:
+                if _is_set_expr(gen.iter, local_sets):
+                    yield flag(node, "comprehension")
+        elif isinstance(node, ast.Call):
+            fname = call_name(node)
+            leaf = fname.split(".")[-1] if fname else None
+            if fname in _ORDER_FREE_CALLS:
+                continue
+            if leaf in ("list", "tuple", "enumerate", "iter", "reversed",
+                        "join") or fname in ("map", "filter"):
+                for arg in node.args:
+                    if _is_set_expr(arg, local_sets):
+                        yield flag(node, f"{leaf}() materialisation")
+                        break
+        elif isinstance(node, ast.Starred):
+            if _is_set_expr(node.value, local_sets):
+                yield flag(node, "star-unpack")
+
+
+def _check_d402(ctx: ModuleContext) -> Iterator[Finding]:
+    sorted_args: set[int] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and call_name(node) == "sorted":
+            for arg in node.args:
+                for sub in ast.walk(arg):
+                    sorted_args.add(id(sub))
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = call_name(node)
+        leaf = fname.split(".")[-1] if fname else (
+            node.func.attr if isinstance(node.func, ast.Attribute) else None
+        )
+        hit = (fname in _FS_ENUM_QUALIFIED) or (
+            leaf in _FS_ENUM_METHODS
+            and isinstance(node.func, ast.Attribute)
+            and fname != "glob.glob"  # already covered; avoid double report
+        ) or (leaf in ("glob", "iglob") and fname in ("glob.glob", "glob.iglob"))
+        if hit and id(node) not in sorted_args:
+            yield Finding(
+                "D402", ctx.path, node.lineno, node.col_offset + 1,
+                f"{leaf}() order is filesystem-dependent — wrap the call in "
+                f"sorted(...) (or suppress where order provably cannot "
+                f"reach an output)",
+            )
+
+
+def _rng_import_names(tree: ast.Module) -> set[str]:
+    """Names imported *from* random/numpy.random that are global-state samplers."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module in (
+            "random", "numpy.random"
+        ):
+            for alias in node.names:
+                if alias.name not in _NP_RANDOM_ALLOWED:
+                    out.add(alias.asname or alias.name)
+    return out
+
+
+def _check_d403(ctx: ModuleContext) -> Iterator[Finding]:
+    from_imports = _rng_import_names(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = call_name(node)
+        if fname is None:
+            continue
+        parts = fname.split(".")
+        # np.random.X(...) / numpy.random.X(...)
+        if len(parts) >= 3 and parts[-3] in ("np", "numpy") and parts[-2] == "random":
+            if parts[-1] not in _NP_RANDOM_ALLOWED:
+                yield Finding(
+                    "D403", ctx.path, node.lineno, node.col_offset + 1,
+                    f"global-state RNG {fname}() — use a seeded "
+                    f"np.random.default_rng(seed) generator",
+                )
+        # random.X(...) — stdlib module calls (jax.random is key-based: fine)
+        elif len(parts) == 2 and parts[0] == "random" and (
+            parts[1] in _PY_RANDOM_SAMPLERS
+        ):
+            yield Finding(
+                "D403", ctx.path, node.lineno, node.col_offset + 1,
+                f"global-state RNG {fname}() — use a random.Random(seed) "
+                f"instance",
+            )
+        elif len(parts) == 1 and parts[0] in from_imports:
+            yield Finding(
+                "D403", ctx.path, node.lineno, node.col_offset + 1,
+                f"global-state RNG {fname}() (imported from a random module) "
+                f"— use an explicit seeded generator",
+            )
+
+
+def _check_d404(ctx: ModuleContext) -> Iterator[Finding]:
+    if not _SCHED_PATH_RE.search(ctx.path):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = call_name(node)
+        if fname in _WALL_CLOCK:
+            yield Finding(
+                "D404", ctx.path, node.lineno, node.col_offset + 1,
+                f"wall-clock read {fname}() in a scheduling path — plans "
+                f"must be functions of their inputs (perf_counter/monotonic "
+                f"telemetry is exempt)",
+            )
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    yield from _check_d401(ctx)
+    yield from _check_d402(ctx)
+    yield from _check_d403(ctx)
+    yield from _check_d404(ctx)

@@ -1,0 +1,255 @@
+"""P2xx — float-precision flow.
+
+The paper's scheduling guarantee is an *exactness* claim: every backend
+replays the same float64 operations in the same order, power ties break on
+bit-equal totals, and ``resilience=`` survivor tables are selected at
+float64 before any f32 cast (the pallas TPU lowering).  These rules reject
+the precision mistakes that silently flip verdicts near eq-7 boundaries:
+
+* **P201** — ``==`` / ``!=`` where an operand is float-valued (a float
+  literal, float arithmetic, or a ``float()``/``np.float32()``-style call).
+  Exact float equality is only sound when both sides are bit-identical by
+  construction (the power-tie contract); such intentional sites must carry
+  a suppression explaining why exactness holds.
+* **P202** — a value derived from a float32 cast (``.astype(np.float32)``,
+  ``jnp.float32(x)``, ``lax.convert_element_type(x, f32)``) flows into an
+  ordering comparison or into survivor-table selection
+  (``worst_case_survivor_indices`` / ``survivor_tables`` /
+  ``argsort``/``argmin``/…).  Thresholds and survivor adversaries must be
+  decided at float64; casting first reorders near-tie verdicts.
+* **P203** — implicit or explicit narrowing in precision-critical modules
+  (path contains ``/core/`` or the placement kernel files, or the module
+  carries a ``# repro-lint: precision-critical`` pragma):
+  ``jnp.asarray``/``jnp.array`` without an explicit ``dtype=`` (silently
+  float32 under default jax config), or array constructors with an explicit
+  float32 dtype.  Analysis taint is intraprocedural and assignment-based.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from ..engine import Finding, ModuleContext
+from . import call_name, dotted_name, is_float32_dtype
+
+RULES = {
+    "P201": "float equality comparison (== / != on float-valued operands)",
+    "P202": "float32-cast value reaches a threshold comparison or survivor selection",
+    "P203": "dtype narrowing in a precision-critical module",
+}
+
+_PRECISION_PATH_RE = re.compile(
+    r"(/|^)core(/|$)|kernels/(placement_step|ref|ops)\.py$"
+)
+
+_FLOAT_CALLS = {"float", "float32", "float64", "fsum"}
+_SELECTION_CALLS = {
+    "worst_case_survivor_indices",
+    "survivor_tables",
+    "survivor_batch_tables",
+    "argsort",
+    "lexsort",
+    "argmin",
+    "argmax",
+    "searchsorted",
+}
+_ARRAY_CTORS = {
+    "zeros", "ones", "empty", "full", "asarray", "array",
+    "zeros_like", "ones_like", "empty_like", "full_like", "arange", "linspace",
+}
+
+
+def _is_floaty(node: ast.AST) -> bool:
+    """Is this expression float-valued on its face (literal / arithmetic)?"""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float)
+    if isinstance(node, ast.UnaryOp):
+        return _is_floaty(node.operand)
+    if isinstance(node, ast.BinOp):
+        if isinstance(node.op, ast.Div):  # true division is float-valued
+            return True
+        return _is_floaty(node.left) or _is_floaty(node.right)
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name is not None and name.split(".")[-1] in _FLOAT_CALLS:
+            return True
+    return False
+
+
+def _is_f32_cast(node: ast.AST) -> bool:
+    """``x.astype(float32-ish)``, ``np/jnp.float32(x)``, convert_element_type."""
+    if not isinstance(node, ast.Call):
+        return False
+    if isinstance(node.func, ast.Attribute) and node.func.attr == "astype":
+        return bool(node.args) and is_float32_dtype(node.args[0]) or any(
+            kw.arg == "dtype" and is_float32_dtype(kw.value)
+            for kw in node.keywords
+        )
+    name = call_name(node)
+    if name is None:
+        return False
+    leaf = name.split(".")[-1]
+    if leaf == "float32" and node.args:
+        return True
+    if leaf == "convert_element_type":
+        dtype_args = list(node.args[1:]) + [
+            kw.value for kw in node.keywords if kw.arg in ("new_dtype", "dtype")
+        ]
+        return any(is_float32_dtype(a) for a in dtype_args)
+    return False
+
+
+def _check_p201(ctx: ModuleContext) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        operands = [node.left, *node.comparators]
+        for i, op in enumerate(node.ops):
+            if not isinstance(op, (ast.Eq, ast.NotEq)):
+                continue
+            left, right = operands[i], operands[i + 1]
+            if _is_floaty(left) or _is_floaty(right):
+                yield Finding(
+                    "P201", ctx.path, node.lineno, node.col_offset + 1,
+                    "float equality comparison — use an integer/exact "
+                    "representation, a tolerance, or suppress with the "
+                    "bit-exactness argument written down",
+                )
+                break  # one finding per compare chain
+
+
+class _F32Flow(ast.NodeVisitor):
+    """Intra-function taint: names assigned from f32 casts -> comparisons/selection."""
+
+    def __init__(self, ctx: ModuleContext):
+        self.ctx = ctx
+        self.findings: list[Finding] = []
+        self.tainted: set[str] = set()
+
+    def _expr_tainted(self, node: ast.AST) -> bool:
+        if _is_f32_cast(node):
+            return True
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id in self.tainted:
+                return True
+            if sub is not node and _is_f32_cast(sub):
+                return True
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self._expr_tainted(node.value):
+            for tgt in node.targets:
+                for leaf in ast.walk(tgt):
+                    if isinstance(leaf, ast.Name):
+                        self.tainted.add(leaf.id)
+        self.generic_visit(node)
+
+    # Nested defs get their own _F32Flow pass (taint does not cross scopes);
+    # not descending here keeps findings single-reported.
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        pass
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        pass
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        pass
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        if all(
+            isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+            for op in node.ops
+        ):
+            # identity/membership tests are not float thresholds
+            self.generic_visit(node)
+            return
+        for operand in [node.left, *node.comparators]:
+            if self._expr_tainted(operand):
+                self.findings.append(
+                    Finding(
+                        "P202", self.ctx.path, node.lineno, node.col_offset + 1,
+                        "float32-cast value reaches a comparison — eq-7-style "
+                        "thresholds must be evaluated at float64",
+                    )
+                )
+                break
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = call_name(node)
+        leaf = name.split(".")[-1] if name else None
+        if leaf in _SELECTION_CALLS:
+            if any(self._expr_tainted(a) for a in node.args) or any(
+                self._expr_tainted(kw.value) for kw in node.keywords
+            ):
+                self.findings.append(
+                    Finding(
+                        "P202", self.ctx.path, node.lineno, node.col_offset + 1,
+                        f"float32-cast value feeds {leaf}() — survivor tables "
+                        f"and orderings must be selected at float64, before "
+                        f"any f32 cast",
+                    )
+                )
+        self.generic_visit(node)
+
+
+def _precision_scope(ctx: ModuleContext) -> bool:
+    return ctx.precision_critical or bool(_PRECISION_PATH_RE.search(ctx.path))
+
+
+def _check_p202(ctx: ModuleContext) -> Iterator[Finding]:
+    # The f32-flow contract is about the scheduling chain (eq-7 thresholds,
+    # survivor selection); ML model code routinely routes at f32 by design.
+    if not _precision_scope(ctx):
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            flow = _F32Flow(ctx)
+            for stmt in node.body:
+                flow.visit(stmt)
+            yield from flow.findings
+
+
+def _has_dtype(node: ast.Call, n_positional_before_dtype: int = 1) -> bool:
+    if len(node.args) > n_positional_before_dtype:
+        return True
+    return any(kw.arg == "dtype" for kw in node.keywords)
+
+
+def _check_p203(ctx: ModuleContext) -> Iterator[Finding]:
+    if not _precision_scope(ctx):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name is None:
+            continue
+        root, _, rest = name.partition(".")
+        leaf = name.split(".")[-1]
+        if root in ("jnp", "jax") and leaf in ("asarray", "array"):
+            if not _has_dtype(node):
+                yield Finding(
+                    "P203", ctx.path, node.lineno, node.col_offset + 1,
+                    f"{name}(...) without an explicit dtype narrows float64 "
+                    f"to float32 under default jax config — pass dtype=",
+                )
+        elif leaf in _ARRAY_CTORS:
+            dtype_args = [kw.value for kw in node.keywords if kw.arg == "dtype"]
+            if leaf in _ARRAY_CTORS and len(node.args) > 1:
+                dtype_args.append(node.args[1])
+            if any(is_float32_dtype(a) for a in dtype_args):
+                yield Finding(
+                    "P203", ctx.path, node.lineno, node.col_offset + 1,
+                    f"float32 allocation ({name}) in a precision-critical "
+                    f"module — the placement chain is float64; cast at the "
+                    f"kernel boundary only",
+                )
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    yield from _check_p201(ctx)
+    yield from _check_p202(ctx)
+    yield from _check_p203(ctx)

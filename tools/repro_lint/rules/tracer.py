@@ -1,0 +1,348 @@
+"""T3xx — jax tracer hygiene.
+
+Inside a traced context (a ``@jit``-decorated function, a function handed
+to ``jax.jit`` / ``vmap`` / ``shard_map`` / ``pl.pallas_call`` /
+``lax.while_loop``-family combinators, or any function nested in one),
+values derived from the function's array arguments are tracers: Python
+control flow or host synchronisation on them either raises a
+``TracerBoolConversionError`` at runtime or — worse — silently bakes a
+data-dependent decision into the compiled program.
+
+* **T301** — ``if`` / ``while`` / ``for``-over / ternary / ``assert`` /
+  ``bool()`` on a traced-derived value.  Use ``lax.cond`` / ``lax.select``
+  / ``jnp.where`` / ``lax.while_loop`` instead.
+* **T302** — host sync on a traced value: ``.item()`` / ``.tolist()`` /
+  ``float()`` / ``int()`` / ``np.asarray()`` / ``np.array()``.  These force
+  a device round-trip (or fail under jit) and break async dispatch.
+* **T303** — a jit-decorated function closes over mutable module state
+  (``global`` / ``nonlocal``, or reads a module-level name bound to a
+  list/dict/set).  The first trace freezes the value; later mutations are
+  silently ignored.
+
+Taint is seeded from the traced function's parameters minus any
+``static_argnames`` / ``static_argnums`` (static args are concrete), and
+propagates through assignments.  Shape-metadata reads (``.shape`` /
+``.ndim`` / ``.dtype`` / ``.size``), ``len()``, and identity tests
+(``is`` / ``is not``) are concrete under tracing and do not taint.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..engine import Finding, ModuleContext
+from . import call_name, dotted_name
+
+RULES = {
+    "T301": "Python control flow on a traced value inside a jit/shard_map/pallas body",
+    "T302": "host synchronisation on a traced value inside a traced context",
+    "T303": "jit-decorated function closes over mutable state",
+}
+
+# Entry points whose function-valued arguments are traced.
+_TRACING_CALLS = {
+    "jit", "vmap", "pmap", "shard_map", "pallas_call", "while_loop",
+    "scan", "cond", "fori_loop", "switch", "grad", "value_and_grad",
+    "checkpoint", "remat", "custom_vjp", "custom_jvp",
+}
+
+# Attribute reads that are concrete (not tracers) even on traced values.
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "weak_type", "sharding"}
+
+# Builtins whose result is concrete regardless of argument taint.
+_UNTAINTING_CALLS = {"len", "isinstance", "type", "id", "repr", "str", "format"}
+
+_HOST_SYNC_METHODS = {"item", "tolist", "numpy", "block_until_ready"}
+_HOST_SYNC_FUNCS = {"float", "int", "complex"}
+_HOST_SYNC_NP = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+
+
+def _leaf(name: str | None) -> str | None:
+    return name.split(".")[-1] if name else None
+
+
+def _jit_decorator_info(dec: ast.AST) -> tuple[bool, set[str], set[int]]:
+    """(is_jit, static_argnames, static_argnums) for one decorator node."""
+    static_names: set[str] = set()
+    static_nums: set[int] = set()
+    if isinstance(dec, ast.Call):
+        callee = _leaf(dotted_name(dec.func))
+        inner = None
+        if callee == "partial" and dec.args:
+            inner = _leaf(dotted_name(dec.args[0]))
+        if callee in ("jit", "pjit") or inner in ("jit", "pjit"):
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    for sub in ast.walk(kw.value):
+                        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                            static_names.add(sub.value)
+                elif kw.arg == "static_argnums":
+                    for sub in ast.walk(kw.value):
+                        if isinstance(sub, ast.Constant) and isinstance(sub.value, int):
+                            static_nums.add(sub.value)
+            return True, static_names, static_nums
+        return False, static_names, static_nums
+    return _leaf(dotted_name(dec)) in ("jit", "pjit"), static_names, static_nums
+
+
+def _collect_traced(tree: ast.Module):
+    """Map function name -> (def node, static names, static nums) for traced defs."""
+    defs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+
+    traced: dict[str, tuple[ast.AST, set[str], set[int]]] = {}
+    jitted: set[str] = set()
+
+    for name, fn in defs.items():
+        for dec in fn.decorator_list:
+            is_jit, s_names, s_nums = _jit_decorator_info(dec)
+            if is_jit:
+                traced[name] = (fn, s_names, s_nums)
+                jitted.add(name)
+            elif _leaf(dotted_name(dec)) in _TRACING_CALLS or (
+                isinstance(dec, ast.Call)
+                and _leaf(dotted_name(dec.func)) in _TRACING_CALLS
+            ):
+                traced.setdefault(name, (fn, set(), set()))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _leaf(call_name(node)) not in _TRACING_CALLS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name) and arg.id in defs:
+                traced.setdefault(arg.id, (defs[arg.id], set(), set()))
+                if _leaf(call_name(node)) in ("jit", "pjit"):
+                    jitted.add(arg.id)
+    return traced, jitted
+
+
+def _mutable_module_names(tree: ast.Module) -> set[str]:
+    out: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            val = node.value
+            mutable = isinstance(val, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(val, ast.Call)
+                and _leaf(call_name(val)) in ("list", "dict", "set", "defaultdict",
+                                              "OrderedDict", "deque")
+            )
+            if mutable:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.add(tgt.id)
+    return out
+
+
+class _TaintChecker(ast.NodeVisitor):
+    """Walk one traced function body, flagging T301/T302 on tainted values."""
+
+    def __init__(self, ctx: ModuleContext, fn: ast.AST,
+                 static_names: set[str], static_nums: set[int]):
+        self.ctx = ctx
+        self.findings: list[Finding] = []
+        self.tainted: set[str] = set()
+        args = fn.args
+        ordered = [a.arg for a in args.posonlyargs + args.args]
+        for i, name in enumerate(ordered):
+            if name in static_names or i in static_nums or name == "self":
+                continue
+            self.tainted.add(name)
+        for a in args.kwonlyargs:
+            if a.arg not in static_names:
+                self.tainted.add(a.arg)
+        if args.vararg:
+            self.tainted.add(args.vararg.arg)
+
+    # -- expression taint ---------------------------------------------------
+
+    def _tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self._tainted(node.value)
+        if isinstance(node, ast.Call):
+            fname = call_name(node)
+            leaf = _leaf(fname)
+            if leaf in _UNTAINTING_CALLS:
+                return False
+            if isinstance(node.func, ast.Attribute) and node.func.attr == "shape":
+                return False
+            return any(self._tainted(a) for a in node.args) or any(
+                self._tainted(kw.value) for kw in node.keywords
+            ) or self._tainted(node.func)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False  # identity tests are concrete under tracing
+            return any(
+                self._tainted(x) for x in [node.left, *node.comparators]
+            )
+        if isinstance(node, (ast.BinOp,)):
+            return self._tainted(node.left) or self._tainted(node.right)
+        if isinstance(node, ast.BoolOp):
+            return any(self._tainted(v) for v in node.values)
+        if isinstance(node, ast.UnaryOp):
+            return self._tainted(node.operand)
+        if isinstance(node, ast.Subscript):
+            return self._tainted(node.value)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self._tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self._tainted(node.test) or self._tainted(node.body)
+                    or self._tainted(node.orelse))
+        if isinstance(node, ast.Starred):
+            return self._tainted(node.value)
+        return False
+
+    def _taint_targets(self, target: ast.AST) -> None:
+        for leaf in ast.walk(target):
+            if isinstance(leaf, ast.Name):
+                self.tainted.add(leaf.id)
+
+    # -- statements ---------------------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        if self._tainted(node.value):
+            for tgt in node.targets:
+                self._taint_targets(tgt)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if self._tainted(node.value):
+            self._taint_targets(node.target)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self.generic_visit(node)
+        if node.value is not None and self._tainted(node.value):
+            self._taint_targets(node.target)
+
+    def _flag(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(
+            Finding(rule, self.ctx.path, node.lineno, node.col_offset + 1, message)
+        )
+
+    def visit_If(self, node: ast.If) -> None:
+        if self._tainted(node.test):
+            self._flag("T301", node,
+                       "`if` on a traced value — use lax.cond / jnp.where")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if self._tainted(node.test):
+            self._flag("T301", node,
+                       "`while` on a traced value — use lax.while_loop")
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        if self._tainted(node.iter):
+            self._flag("T301", node,
+                       "Python `for` over a traced value — use lax.scan / "
+                       "lax.fori_loop")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        if self._tainted(node.test):
+            self._flag("T301", node,
+                       "ternary on a traced value — use jnp.where / lax.select")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if self._tainted(node.test):
+            self._flag("T301", node,
+                       "`assert` on a traced value — use checkify or a "
+                       "shape/static check")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fname = call_name(node)
+        leaf = _leaf(fname)
+        args_tainted = any(self._tainted(a) for a in node.args)
+        if leaf == "bool" and fname == "bool" and args_tainted:
+            self._flag("T301", node,
+                       "bool() on a traced value — concretisation fails under jit")
+        elif fname in _HOST_SYNC_FUNCS and args_tainted:
+            self._flag("T302", node,
+                       f"{fname}() on a traced value forces a host sync "
+                       f"(or fails under jit)")
+        elif fname in _HOST_SYNC_NP and args_tainted:
+            self._flag("T302", node,
+                       f"{fname}() materialises a traced value on the host — "
+                       f"keep the computation in jnp")
+        elif (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr in _HOST_SYNC_METHODS
+            and self._tainted(node.func.value)
+        ):
+            self._flag("T302", node,
+                       f".{node.func.attr}() on a traced value forces a host "
+                       f"sync inside a traced context")
+        self.generic_visit(node)
+
+    # nested defs inherit the parent's taint via a fresh checker in check();
+    # don't descend into them here (their params shadow scope).
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        pass
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        pass
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        pass
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    traced, jitted = _collect_traced(ctx.tree)
+    mutable_globals = _mutable_module_names(ctx.tree)
+
+    seen: set[int] = set()
+    for name, (fn, s_names, s_nums) in traced.items():
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        checker = _TaintChecker(ctx, fn, s_names, s_nums)
+        for stmt in fn.body:
+            checker.visit(stmt)
+        yield from checker.findings
+
+        # nested defs inside a traced context are traced too: their params
+        # come from the traced caller, so seed them fully tainted.
+        for sub in ast.walk(fn):
+            if sub is fn or not isinstance(sub, (ast.FunctionDef,
+                                                 ast.AsyncFunctionDef)):
+                continue
+            if id(sub) in seen:
+                continue
+            seen.add(id(sub))
+            subchecker = _TaintChecker(ctx, sub, set(), set())
+            for stmt in sub.body:
+                subchecker.visit(stmt)
+            yield from subchecker.findings
+
+        # T303: mutable-state closure for jit-compiled functions.
+        if name in jitted:
+            for sub in ast.walk(fn):
+                if isinstance(sub, (ast.Global, ast.Nonlocal)):
+                    yield Finding(
+                        "T303", ctx.path, sub.lineno, sub.col_offset + 1,
+                        f"jit-compiled {name}() mutates enclosing state "
+                        f"({'global' if isinstance(sub, ast.Global) else 'nonlocal'} "
+                        f"{', '.join(sub.names)}) — tracing freezes it",
+                    )
+                elif (
+                    isinstance(sub, ast.Name)
+                    and isinstance(sub.ctx, ast.Load)
+                    and sub.id in mutable_globals
+                ):
+                    yield Finding(
+                        "T303", ctx.path, sub.lineno, sub.col_offset + 1,
+                        f"jit-compiled {name}() reads mutable module state "
+                        f"{sub.id!r} — the first trace freezes its value; "
+                        f"pass it as an argument instead",
+                    )
