@@ -31,7 +31,15 @@
   unconstrained baseline recorded as ``resilience_k*`` rows plus a
   ``resilience`` JSON section, and the guarantee verified by replaying
   seeded failure traces through the fault-injection simulator
-  (``repro.service.faultsim``).
+  (``repro.service.faultsim``);
+* churn (warm removals + live state): the deep-rank instance's warm
+  task-exit and device-failure replans vs cold ``schedule()`` of the
+  post-event instance (bit-identity asserted, >= 4x target), plus a
+  200-event seeded arrival/exit/failure/recovery trace through a live
+  ``SchedulerService`` with the staleness-bounded re-record policy —
+  warm-hit rate, per-event-kind latency, and solved-events/s vs an
+  all-cold baseline, recorded as ``churn_*`` rows plus a ``churn``
+  JSON section.
 
 CLI (the CI benchmark-smoke job):
 
@@ -53,6 +61,7 @@ import sys
 import numpy as np
 
 from repro.core import (
+    DeviceProfile,
     FleetSpec,
     PADPSFRScheduler,
     Task,
@@ -78,6 +87,7 @@ __all__ = [
     "bench_replan",
     "bench_fleet_parallel",
     "bench_resilience",
+    "bench_churn",
     "main",
 ]
 
@@ -708,6 +718,289 @@ def bench_resilience(quick: bool = False) -> tuple[list[Row], dict]:
     return rows, summary
 
 
+def _churn_identical(a, b) -> bool:
+    """Bit-identity between one warm and one cold schedule result."""
+    return (
+        a.feasible == b.feasible
+        and a.chosen_rank == b.chosen_rank
+        and a.n_placement_rejects == b.n_placement_rejects
+        and a.total_power == b.total_power
+        and (
+            not b.feasible
+            or (
+                a.combo.variant_idx == b.combo.variant_idx
+                and str(a.plan) == str(b.plan)
+            )
+        )
+    )
+
+
+def _churn_task(rng, name: str) -> Task:
+    """A small random arrival for the churn trace.
+
+    Shares fall near-affinely with power (the ``_band_tasks`` recipe,
+    scaled to the trace fleet's t_slr=35): cheap variants are tempting
+    but tight, so once several tasks are alive the cold walk rejects a
+    band of low-power combos before its first placeable rank — exactly
+    the regime where a warm re-rank of recorded rows pays off.
+    """
+    nv = int(rng.integers(2, 5))
+    pws = np.sort(rng.uniform(3.0, 9.0, nv))
+    shr = np.maximum(31.0 - 2.8 * pws + rng.uniform(0.0, 1.5, nv), 4.0)
+    period = float(rng.uniform(20, 60))
+    data = 1.0
+    ths = data * 35.0 / (period * shr)
+    return Task(
+        name=name,
+        period=period,
+        data=data,
+        init_interval=float(rng.uniform(2.0, 8.0)),
+        variants=tuple(
+            TaskVariant(cu=j + 1, throughput=float(t), power=float(p))
+            for j, (t, p) in enumerate(zip(ths, pws, strict=True))
+        ),
+    )
+
+
+def _eps_task(t_slr: float, name: str = "eps") -> Task:
+    """One-variant task with negligible share and power.
+
+    Appended *last* and exhaustively recorded, it makes every recorded
+    reject die among the real tasks (primary-sweep depth < n-1), so a
+    warm exit that drops it transfers every reject verdict and re-finds
+    the deep-rank winner without dispatching a single placement.
+    """
+    period, share = 50.0, 1e-6
+    th = t_slr / (period * share)
+    return Task(
+        name=name,
+        period=period,
+        data=1.0,
+        init_interval=1.0,
+        variants=(TaskVariant(cu=1, throughput=th, power=1e-6),),
+    )
+
+
+def _churn_deep_instance(quick: bool) -> tuple[list[Task], FleetSpec]:
+    """The churn legs' deep-rank instance.
+
+    Quick mode reuses :func:`_deep_instance`; full mode widens the band
+    (``base=83``) so the winner lands ~58k rows deep — still inside the
+    warm exit's phase-1 parent cap, so both removal legs measure the
+    steady-state warm path rather than the full-band fallback.
+    """
+    if quick:
+        return _deep_instance(True)
+    return (
+        _band_tasks(10, 4, base=83.0),
+        FleetSpec(n_f=6, t_slr=100.0, t_cfg=0.0),
+    )
+
+
+def bench_churn(quick: bool = False) -> tuple[list[Row], dict]:
+    """Warm removals + a long churn trace vs all-cold solving.
+
+    Two measurements land in the ``churn`` JSON section:
+
+    * **deep removals** — the deep-rank instance is exhaustively
+      recorded once, then (a) an appended epsilon task exits, leaving
+      exactly the deep instance, and (b) the last device of a fleet
+      extended by one tiny device fails, leaving the deep fleet; each
+      warm ``replan()`` is asserted bit-identical to a cold
+      ``schedule()`` of the post-event instance and timed against it
+      (acceptance: >= 4x).  Both legs transfer every recorded reject
+      (prefix-death depths for the exit, survivor-prefix monotonicity
+      for the failure), so the warm path is pure projection;
+    * **churn trace** — a 200-event seeded arrival/exit/failure/recovery
+      mix replayed through a live ``SchedulerService`` (numpy engine,
+      staleness-bounded re-record policy on), reporting the warm-hit
+      rate over solved events (acceptance: >= 0.80), mean latency per
+      event kind, and solved-events/s against an all-cold baseline that
+      re-solves every post-event task set from scratch.
+    """
+    from repro.service import SchedulerService
+
+    rows: list[Row] = []
+
+    # --- deep-instance warm removals -------------------------------------
+    tasks, fleet = _churn_deep_instance(quick)
+    sched = PADPSFRScheduler(fleet, exhaustive=False)
+
+    # Exit leg: record tasks + eps exhaustively, then eps exits and the
+    # survivors are the deep instance itself — the warm projection must
+    # re-find its deep-rank winner from transferred verdicts alone.
+    eps = _eps_task(fleet.t_slr)
+    state = sched.schedule(
+        [*tasks, eps], record_state=True, record_exhaustive=True
+    ).plan_state
+    warm_exit = sched.replan(state, tasks)
+    cold_exit = sched.schedule(tasks)
+    assert _churn_identical(warm_exit, cold_exit), "warm exit diverged"
+    us_exit_warm = timeit(
+        lambda: sched.replan(state, tasks), repeat=3, warmup=0
+    )
+    us_exit_cold = timeit(lambda: sched.schedule(tasks), repeat=3, warmup=0)
+
+    # Failure leg: record on the deep fleet extended by one tiny device
+    # (heterogeneous form, so the drop is a survivor-prefix: recorded
+    # rejects transfer), then the tiny device dies and the survivor
+    # fleet is the deep fleet — warm re-rank vs the deep cold walk.
+    dev = DeviceProfile(t_slr=fleet.t_slr, t_cfg=fleet.t_cfg)
+    tiny = DeviceProfile(t_slr=0.5, t_cfg=fleet.t_cfg)
+    big_fleet = FleetSpec.heterogeneous(
+        [dev] * fleet.n_f + [tiny], name="churn-het"
+    )
+    small_fleet = FleetSpec.heterogeneous([dev] * fleet.n_f, name="churn-het")
+    big_sched = PADPSFRScheduler(big_fleet, exhaustive=False)
+    small_sched = PADPSFRScheduler(small_fleet, exhaustive=False)
+    big_state = big_sched.schedule(
+        tasks, record_state=True, record_exhaustive=True
+    ).plan_state
+    warm_fail = big_sched.replan(big_state, tasks, fleet=small_fleet)
+    cold_fail = small_sched.schedule(tasks)
+    assert _churn_identical(warm_fail, cold_fail), "warm failure diverged"
+    us_fail_warm = timeit(
+        lambda: big_sched.replan(big_state, tasks, fleet=small_fleet),
+        repeat=3, warmup=0,
+    )
+    us_fail_cold = timeit(
+        lambda: small_sched.schedule(tasks), repeat=3, warmup=0
+    )
+
+    tag = f"{len(tasks)}t{fleet.n_f}f"
+    rows.append(
+        Row(
+            f"churn_exit_cold_{tag}",
+            us_exit_cold,
+            f"rank={cold_exit.chosen_rank};from-scratch schedule()",
+        )
+    )
+    rows.append(
+        Row(
+            f"churn_exit_warm_{tag}",
+            us_exit_warm,
+            f"rank={warm_exit.chosen_rank}"
+            f";speedup={us_exit_cold / us_exit_warm:.1f}x;bit_identical=True",
+        )
+    )
+    rows.append(
+        Row(
+            f"churn_failure_cold_{tag}",
+            us_fail_cold,
+            f"rank={cold_fail.chosen_rank};from-scratch schedule()",
+        )
+    )
+    rows.append(
+        Row(
+            f"churn_failure_warm_{tag}",
+            us_fail_warm,
+            f"rank={warm_fail.chosen_rank}"
+            f";speedup={us_fail_cold / us_fail_warm:.1f}x;bit_identical=True",
+        )
+    )
+
+    # --- 200-event churn trace -------------------------------------------
+    n_events = 200
+    rng = np.random.default_rng(11)
+    svc = SchedulerService(
+        FleetSpec(n_f=4, t_slr=35.0, t_cfg=1.0), engine="numpy", max_stale=5
+    )
+    solved: list[tuple] = []  # (kind, tasks, fleet) per solved event
+    kinds: list[str] = []
+    counter = 0
+    for _ in range(n_events):
+        roll = float(rng.random())
+        n_alive = len(svc.tasks)
+        # Exits only fire at >= 2 alive tasks: draining the service to
+        # empty would force a cold arrival-from-nothing on the next
+        # submit, which measures restart cost rather than churn.
+        if (roll < 0.55 and n_alive < 8) or n_alive < 2:
+            kind = "arrival"
+            counter += 1
+            tel = svc.submit(_churn_task(rng, f"c{counter}"))
+        elif roll < 0.80 and n_alive:
+            kind = "exit"
+            victim = svc.tasks[int(rng.integers(0, n_alive))]
+            tel = svc.remove(victim.name)
+        elif roll < 0.90 and svc.fleet.n_f > 1:
+            kind = "failure"
+            tel = svc.fail_device()
+        else:
+            kind = "recovery"
+            tel = svc.recover_device()
+        kinds.append(kind)
+        if tel.path not in ("admission", "noop") and svc.tasks:
+            solved.append((kind, svc.tasks, svc.fleet, tel))
+    warm_hits = [
+        tel
+        for _, _, _, tel in solved
+        if tel.path in ("cache", "warm", "warm_exit", "warm_failure")
+    ]
+    hit_rate = len(warm_hits) / max(1, len(solved))
+    per_kind_us: dict[str, float] = {}
+    per_kind_n: dict[str, int] = {}
+    for kind, _, _, tel in solved:
+        per_kind_us[kind] = per_kind_us.get(kind, 0.0) + tel.latency_s * 1e6
+        per_kind_n[kind] = per_kind_n.get(kind, 0) + 1
+    per_kind_us = {
+        k: v / per_kind_n[k] for k, v in sorted(per_kind_us.items())
+    }
+    warm_total_us = sum(tel.latency_s for _, _, _, tel in solved) * 1e6
+
+    # All-cold baseline: one from-scratch schedule() per solved event's
+    # post-event instance (what the pre-warm service had to pay).
+    cold_scheds: dict = {}
+    def cold_loop() -> None:
+        for _, ts, fl, _ in solved:
+            if fl not in cold_scheds:
+                cold_scheds[fl] = PADPSFRScheduler(fl, engine="numpy")
+            cold_scheds[fl].schedule(ts)
+
+    cold_total_us = timeit(cold_loop, repeat=1, warmup=1)
+    rows.append(
+        Row(
+            f"churn_trace_{n_events}ev",
+            warm_total_us,
+            f"solved={len(solved)};warm_hit_rate={hit_rate:.2f}"
+            f";rerecords={svc.rerecord_count}"
+            f";cold_us={cold_total_us:.0f}"
+            f";speedup={cold_total_us / warm_total_us:.1f}x",
+        )
+    )
+
+    churn = {
+        "deep_instance": tag,
+        "exit": {
+            "chosen_rank": int(cold_exit.chosen_rank),
+            "cold_us": us_exit_cold,
+            "warm_us": us_exit_warm,
+            "speedup": us_exit_cold / us_exit_warm,
+            "bit_identical": True,
+        },
+        "failure": {
+            "chosen_rank": int(cold_fail.chosen_rank),
+            "cold_us": us_fail_cold,
+            "warm_us": us_fail_warm,
+            "speedup": us_fail_cold / us_fail_warm,
+            "bit_identical": True,
+        },
+        "trace": {
+            "n_events": n_events,
+            "n_solved": len(solved),
+            "event_mix": {k: kinds.count(k) for k in sorted(set(kinds))},
+            "warm_hit_rate": hit_rate,
+            "rerecords": svc.rerecord_count,
+            "per_kind_mean_us": per_kind_us,
+            "warm_total_us": warm_total_us,
+            "cold_total_us": cold_total_us,
+            "events_per_s_warm": len(solved) / warm_total_us * 1e6,
+            "events_per_s_cold": len(solved) / cold_total_us * 1e6,
+            "speedup": cold_total_us / warm_total_us,
+        },
+    }
+    return rows, churn
+
+
 def _assert_instancewise_identical(ref, got, what: str) -> None:
     """Per-instance bit-identity between two lists of schedule results."""
     assert len(ref) == len(got), f"{what}: result count mismatch"
@@ -816,6 +1109,7 @@ def main(argv: list[str] | None = None) -> int:
     replan_summary: dict = {}
     fleet_parallel: dict = {}
     resilience_summary: dict = {}
+    churn_summary: dict = {}
     if args.sweep_only:
         rows = []
     else:
@@ -832,6 +1126,8 @@ def main(argv: list[str] | None = None) -> int:
         rows.extend(fleet_rows)
         res_rows, resilience_summary = bench_resilience(quick=args.quick)
         rows.extend(res_rows)
+        churn_rows, churn_summary = bench_churn(quick=args.quick)
+        rows.extend(churn_rows)
     sweep_rows, sweep = bench_backend_sweep(quick=args.quick, backends=backends)
     rows.extend(sweep_rows)
     for row in rows:
@@ -851,6 +1147,7 @@ def main(argv: list[str] | None = None) -> int:
                     "replan": replan_summary,
                     "fleet_parallel": fleet_parallel,
                     "resilience": resilience_summary,
+                    "churn": churn_summary,
                 },
                 fh,
                 indent=2,

@@ -125,6 +125,27 @@ def trend(datas: list[dict], labels: list[str]) -> dict:
             lb for lb, d in zip(labels, datas, strict=True) if not d.get("resilience")
         ],
     }
+    # Service churn (warm exit/failure + trace): the section only exists
+    # in artifacts recorded after the warm-removal paths landed — older
+    # files get None cells and a render-time note, never an exception.
+    churn_speedup: dict[str, list[float | None]] = {
+        leg: [] for leg in ("exit", "failure", "trace")
+    }
+    churn_hit_rate: list[float | None] = []
+    for d in datas:
+        c = d.get("churn") or {}
+        for leg, series in churn_speedup.items():
+            sp = (c.get(leg) or {}).get("speedup")
+            series.append(float(sp) if sp is not None else None)
+        hr = (c.get("trace") or {}).get("warm_hit_rate")
+        churn_hit_rate.append(float(hr) if hr is not None else None)
+    churn = {
+        "speedup": churn_speedup,
+        "warm_hit_rate": churn_hit_rate,
+        "missing_files": [
+            lb for lb, d in zip(labels, datas, strict=True) if not d.get("churn")
+        ],
+    }
     return {
         "files": labels,
         "rows": rows,
@@ -133,6 +154,7 @@ def trend(datas: list[dict], labels: list[str]) -> dict:
         "replan": replan,
         "fleet_parallel": fleet_parallel,
         "resilience": resilience,
+        "churn": churn,
     }
 
 
@@ -249,6 +271,37 @@ def render(t: dict) -> str:
         out.append(
             "k-fault tolerance: no artifact carries resilience rows yet "
             "(all predate the resilience benchmark) — skipped"
+        )
+    ch = t.get("churn") or {}
+    if any(
+        v is not None for series in ch.get("speedup", {}).values() for v in series
+    ):
+        out.append("")
+        out.append("service churn (warm removals vs cold, speedup):")
+        for leg in ("exit", "failure", "trace"):
+            series = ch["speedup"].get(leg) or []
+            cells = " ".join(
+                f"{_fmt(v, 'x'):>14}" if v is not None else f"{'-':>14}"
+                for v in series
+            )
+            out.append(f"{'churn ' + leg:<24} {cells}")
+        cells = " ".join(
+            f"{_fmt(v * 100.0, '%'):>14}" if v is not None else f"{'-':>14}"
+            for v in ch.get("warm_hit_rate", [])
+        )
+        out.append(f"{'churn warm-hit rate':<24} {cells}")
+        if ch.get("missing_files"):
+            out.append(
+                "note: no churn section in "
+                + ", ".join(ch["missing_files"])
+                + " (artifact predates the churn benchmark; "
+                "re-run benchmarks.scheduler_scale to record it)"
+            )
+    elif ch.get("missing_files"):
+        out.append("")
+        out.append(
+            "service churn: no artifact carries churn rows yet "
+            "(all predate the churn benchmark) — skipped"
         )
     return "\n".join(out)
 

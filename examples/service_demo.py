@@ -4,9 +4,10 @@ A data center doesn't call ``schedule()`` once — it sees a continuous
 stream of task arrivals, exits, and device failures.  This demo drives
 :class:`repro.service.SchedulerService` through such a trace and prints
 the per-event telemetry: which latency tier handled each event
-(``admission`` filter / plan ``cache`` / ``warm`` delta replan /
-``general`` re-solve), how long it took, and what the live plan looks
-like afterwards.
+(``admission`` filter / plan ``cache`` / ``warm`` arrival replan /
+``warm_exit`` and ``warm_failure`` projections / ``general`` re-solve),
+how long it took, and what the live plan looks like afterwards, plus a
+closing per-path breakdown with the state re-record count.
 
 The service records exhaustive replan state on each solve, so a task
 arrival warm-starts the Alg-1 walk from the previous plan (surviving
@@ -65,6 +66,9 @@ def main() -> int:
               f"{tel.latency_s * 1e3:>8.2f}  {outcome}")
 
     print()
+    paths = [t.path for t in svc.telemetry]
+    breakdown = ", ".join(f"{p}={paths.count(p)}" for p in sorted(set(paths)))
+    print(f"path breakdown: {breakdown}; rerecords={svc.rerecord_count}")
     print(f"final fleet: {svc.fleet.n_f} device(s); "
           f"tasks: {[t.name for t in svc.tasks]}")
     if svc.plan is not None and svc.plan.feasible:

@@ -1,9 +1,10 @@
 """Delta replanning: warm-start the Alg 1+2 walk from a previous plan.
 
-A long-running fleet (:mod:`repro.service`) sees task arrivals and exits
-continuously; re-running the full power-sorted TFS walk from scratch on
-every event is wasted work when almost everything about the instance is
-unchanged.  This module makes one ``schedule()`` pay for the next:
+A long-running fleet (:mod:`repro.service`) sees task arrivals, task
+exits and device failures continuously; re-running the full power-sorted
+TFS walk from scratch on every event is wasted work when almost
+everything about the instance is unchanged.  This module makes one
+``schedule()`` pay for the events that follow it:
 
 * :func:`schedule_recorded` runs the normal streaming walk but snapshots
   a :class:`PlanState` — every emitted TFS row (power, folded eq-7 share
@@ -11,68 +12,99 @@ unchanged.  This module makes one ``schedule()`` pay for the next:
   resolved, and the live :class:`~repro.core.feasibility.BlockEnumerator`
   (the surviving branch-and-bound frontier) at the point the walk
   stopped.
-* :func:`replan` reschedules a new task tuple from that state.  A single
-  appended **arrival** takes the warm path below; everything else
-  (exits, fleet edits, bulk changes) falls back to a fresh recorded walk
-  that still seeds the projected previous winner as an *incumbent* upper
-  power bound (:meth:`BlockEnumerator.prune_above`).
+* :func:`replan` reschedules a new task tuple / fleet from that state.
+  Three deltas take a warm path — an **arrival** (tasks appended to the
+  state's root task tuple), an **exit** (one task removed) and a
+  **device failure** (one device dropped, reference ``t_slr``
+  preserved); anything else falls back to a fresh recorded walk that
+  still seeds the projected previous winner as an *incumbent* upper
+  power bound.
 
-Warm arrival path
------------------
+Every warm path reduces the event to the same shape: build the exact
+set of new-TFS rows with total power at or below an incumbent bound
+``P_inc`` (each row carrying the bit-exact left-to-right float64 folds a
+cold enumeration would produce), order them by the cold emission key
+``(total_power, TSS flat index)``, transfer recorded placement verdicts
+where provably sound, and walk the ordered candidates through the
+backend dispatching only the unknowns.  The first placeable row is the
+cold winner at the cold rank with the cold plan — bit-identical,
+including under ``resilience=k`` (`tests/test_service_replay.py` pins
+this over randomized event traces, engines and k).
 
-Let the old task set be ``T`` (``n`` tasks) and ``T' = T + [j]``.  Three
-facts make the old walk's work reusable bit-for-bit:
+Soundness facts per delta
+-------------------------
 
-1. **TFS projection.**  Appending a task only shrinks the eq-7 budget
-   (``n_f*t_slr - (n+2)*t_cfg``) and only grows the heterogeneous
-   config-overhead bound, so every eq-7-workable row of ``T'`` restricts
-   to a workable row of ``T``.  The new TFS is therefore exactly
-   ``{(r, v) : r in TFS(T), v a variant of j, eq7'(sum_shr(r)+shr_jv)}``
-   — a filtered cross product of *already enumerated* rows with the new
-   task's variants.  Because :class:`~repro.core.feasibility.ComboBlock`
-   carries each row's left-to-right folded share sum (``sum_shr``), the
-   filter re-applies eq. 7 with the identical float64 operations a cold
-   enumeration of ``T'`` would fold — same bits, same verdicts.  With
-   ``resilience=k`` the same argument holds against the worst-case
-   survivor fleet's budget: the survivor set is a function of the fleet
-   alone (never the task set), so it is unchanged across arrivals.
-2. **Reject monotonicity.**  The placement simulator
-   (:func:`repro.core.placement.place_shares`) walks tasks strictly in
-   order, so a row that failed placement for ``T`` fails for every
-   extension ``(r, v)``: recorded *reject* verdicts transfer to the new
-   instance and those candidates skip backend dispatch entirely — they
-   only count toward the winner's rank.
-3. **Incumbent bound.**  The old winner extended with the cheapest
-   placeable variant of ``j`` is a feasible plan of ``T'``; its power
-   ``P_inc`` caps the search.  Candidates above ``P_inc`` are discarded
-   and the resumed frontier walk (:meth:`BlockEnumerator.clone` +
-   :meth:`~BlockEnumerator.prune_above`) only pulls old-TFS rows that
-   could still beat it — typically none when the old walk ran deep.
+**Arrival** (``T' = root + appended``): eq-7's budget shrinks and the
+heterogeneous overhead bound grows as tasks are appended, so every
+workable row of ``T'`` restricts to a workable row of the root — the new
+TFS is a filtered cross product of already-enumerated root rows with the
+appended tasks' variants.  Recorded *rejects* transfer to every
+extension (the placement simulator walks tasks in order, so a failing
+prefix fails forever); placeable verdicts do not.
 
-The surviving candidates are sorted by the cold emission key — ``(total
-power, TSS flat index)``, realised as a lexsort over ``(power, parent
-variant columns, new-variant index)`` — and walked through the backend
-in order.  The first placeable candidate is *provably* the same row a
-cold ``schedule(T')`` would choose, at the same rank, with the same
-scalar plan.  ``tests/test_service_replay.py`` asserts this bit-identity
-property over randomized event sequences and engines.
+**Exit** (task at position ``p`` removed): the budget *grows*, so the
+new TFS is the recorded rows projected onto the surviving columns
+(dedup over the dropped variant axis) **plus** a gap: rows whose every
+extension broke the old budget and were therefore never enumerated.
+The gap walk is a fresh enumeration of the shrunken task set whose
+subtrees are pruned whenever provably *covered* by the recording —
+covered means some extension passed the old eq-7, and because the eq-7
+pass is antitone in the folded share sum (heterogeneous overhead is
+monotone), it suffices to test the removed task's minimum-share variant.
+Recorded placeable verdicts transfer to the projection only when ``p``
+is the last position (the simulator's first ``n-1`` steps are exactly
+the shrunken instance's walk).  Rejects transfer through the recorded
+**death depth**: the placement simulator walks tasks in order, so its
+primary sweep dying at depth ``d`` (``d`` tasks fully placed, task
+``d`` unplaceable) is a fact about tasks ``0..d`` and the fleet alone
+— a recorded row that died at ``d < p`` rejects on the shrunken
+instance too, whatever sits after position ``p``.  Rows that died at
+or past ``p`` (or whose reject came from the resilience survivor
+sweep, which reports depth ``n``) never transfer.
 
-The warm path returns a *thin* state (no recorded rows, no frontier):
-replanning again from it silently takes the incumbent-seeded fresh-walk
-path, which re-records and restores full warmth.  The
-:class:`repro.service.SchedulerService` layers a plan cache on top so
-steady-state churn (a task leaving and returning) skips even that.
+**Failure** (device dropped, same reference ``t_slr`` so recorded share
+folds keep their meaning): task set and variants are unchanged, so
+candidates are the recorded rows re-checked against the shrunken
+fleet's eq-7.  On a homogeneous fleet the budget is float-monotone in
+``n_f`` so the new TFS is a subset of the old (no gap walk) and the
+smaller fleet is a device-prefix of the old — recorded rejects transfer
+for any ``k``.  On a heterogeneous fleet rejects transfer only when the
+*last* device dropped with ``k=0`` (survivor prefix), and a covered-gap
+walk against the old fleet's eq-7 recovers rows the old enumeration
+pruned.
+
+State carry-over
+----------------
+
+Each warm replan emits a *live* state, not a thin one: the ordered
+candidate band with its learned verdicts becomes the new ``rec_*``
+arrays, ``complete_below`` records the band's coverage bound (``P_inc``,
+or ``inf`` when the source state was exhaustive and no incumbent
+bounded the walk), and arrival states keep a one-hop ``base`` pointer
+to the exhaustive root so consecutive arrivals re-run the cross product
+against the root's full recording (``appended`` grows by one task per
+event) instead of going cold.  ``origin`` tags the path that built the
+state (``cold`` / ``warm_arrival`` / ``warm_exit`` / ``warm_failure``)
+— :class:`repro.service.SchedulerService` maps it to telemetry and
+bounds chain staleness with a background re-record policy keyed on
+:attr:`PlanState.frontier_coverage`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Sequence
 
 import numpy as np
 
-from .feasibility import BlockEnumerator, config_overhead_lower_bound
-from .placement import place_combo
+from .feasibility import (
+    BlockEnumerator,
+    _emission_order,
+    _suffix_max_bounds,
+    config_overhead_lower_bound,
+)
+from .placement import place_combo, place_shares
 from .placement_backends import PlacementBackend, PlacementOptions
 from .scheduler import (
     ScheduleResult,
@@ -92,28 +124,42 @@ __all__ = [
     "replan",
 ]
 
-# Per-row placement verdicts recorded by the walk.  Only REJECT is
-# exploitable across arrivals (reject monotonicity); PLACEABLE children
-# still need dispatch — a feasible row's extension may well not place.
+# Per-row placement verdicts recorded by the walk.  A recorded verdict is
+# always a *truth* about (tasks, fleet, options) — transfers across
+# events only happen where the soundness facts above allow, so chained
+# warm states never launder a guess into a fact.
 VERDICT_REJECT = 0
 VERDICT_PLACEABLE = 1
 VERDICT_UNKNOWN = 2
 
 _WARM_BLOCK = 4096  # dispatch block size for the candidate mini-walk
+_WARM_PROBE = 6  # scalar-oracle prefix probes before block dispatch
+_EXIT_CAP = 65536  # phase-1 parent-row cap for the exit projection
+
+# Adaptive guard for the arrival cross product: candidate generation
+# touches prod(appended variant counts) * recorded-rows floats; past
+# this, a fresh bounded walk is cheaper than the projection.
+_APPEND_CELL_CAP = 64_000_000
 
 
 @dataclasses.dataclass
 class PlanState:
     """Everything a later :func:`replan` can reuse from one walk.
 
-    ``rec_*`` arrays hold the first ``R`` rows of the instance's
-    power-ordered TFS exactly as emitted (power and eq-7 share sum are
-    the enumerator's own left-to-right folds); ``enum`` resumes emission
-    at row ``R``.  Together they cover every TFS row with total power
-    ``<= complete_below`` (``inf`` for an unbounded cold walk; the
-    incumbent bound when one pruned the walk; ``-inf`` for the thin
-    state a warm replan returns).  ``enum`` is private mutable state —
-    replanners only ever touch a :meth:`BlockEnumerator.clone` of it.
+    ``rec_*`` arrays hold rows of the instance's power-ordered TFS
+    exactly as emitted (power and eq-7 share sum are the enumerator's
+    own left-to-right folds).  Together with ``enum`` (which resumes
+    emission where the recording stopped; ``None`` once drained or for
+    warm states) they cover every TFS row with total power ``<=
+    complete_below`` — ``inf`` for an exhaustive or unbounded cold walk,
+    the incumbent band for warm states, ``-inf`` for a thin state with
+    no coverage claim.  ``enum`` is private mutable state — replanners
+    only ever touch a :meth:`BlockEnumerator.clone` of it.
+
+    ``origin`` names the path that built the state; ``base`` points a
+    warm-arrival state back at the exhaustive root it projected from
+    (one hop, never a chain) with ``appended`` holding the tasks beyond
+    the root's tuple.
     """
 
     tasks: tuple[Task, ...]
@@ -125,12 +171,39 @@ class PlanState:
     rec_sumshr: np.ndarray = dataclasses.field(repr=False)  # (R,) float64
     rec_chosen: np.ndarray = dataclasses.field(repr=False)  # (R, n_t) int64
     rec_verdict: np.ndarray = dataclasses.field(repr=False)  # (R,) int8
+    # (R,) int16 — tasks the *primary* placement sweep fully placed when
+    # the row was dispatched (-1 = never dispatched / fleet changed since).
+    # A row that died at depth d rejects on every instance sharing tasks
+    # 0..d on the same fleet — the exit path's reject-transfer key.
+    rec_depth: np.ndarray = dataclasses.field(repr=False)
     enum: BlockEnumerator | None = dataclasses.field(repr=False)
     complete_below: float = np.inf
+    origin: str = "cold"
+    base: "PlanState | None" = dataclasses.field(default=None, repr=False)
+    appended: tuple[Task, ...] = ()
 
     @property
     def n_recorded(self) -> int:
         return int(self.rec_pow.size)
+
+    @property
+    def frontier_coverage(self) -> float:
+        """How much of a fresh exhaustive recording this state retains,
+        in [0, 1].  Chain states inherit their root's coverage (the root
+        is what their replans consume); a banded state is worth at most
+        half an exhaustive one (band reuse works, appends from it
+        usually cannot), scaled by its known-verdict fraction.  The
+        service's re-record policy triggers below a threshold."""
+        if self.base is not None:
+            return self.base.frontier_coverage
+        if self.complete_below == -np.inf:
+            return 0.0
+        if self.complete_below == np.inf:
+            return 1.0
+        if not self.n_recorded:
+            return 0.0
+        known = float((self.rec_verdict != VERDICT_UNKNOWN).mean())
+        return 0.5 * known
 
 
 class _Recorder:
@@ -140,6 +213,7 @@ class _Recorder:
         self._n_t = n_t
         self._chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
         self._verdicts: dict[int, np.ndarray] = {}  # rank_base -> int8 block
+        self._depths: dict[int, np.ndarray] = {}  # rank_base -> int16 block
         self._bases: list[int] = []
         self._total = 0
 
@@ -148,18 +222,24 @@ class _Recorder:
         self._bases.append(self._total)
         self._total += len(blk)
 
-    def on_verdict(self, base: int, feasible: np.ndarray) -> None:
+    def on_verdict(
+        self, base: int, feasible: np.ndarray, placed: np.ndarray
+    ) -> None:
         self._verdicts[base] = np.where(
             feasible, VERDICT_PLACEABLE, VERDICT_REJECT
         ).astype(np.int8)
+        self._depths[base] = placed.astype(np.int16)
 
-    def arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    def arrays(
+        self,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         if not self._chunks:
             return (
                 np.empty(0),
                 np.empty(0),
                 np.empty((0, self._n_t), dtype=np.int64),
                 np.empty(0, dtype=np.int8),
+                np.empty(0, dtype=np.int16),
             )
         pow_ = np.concatenate([c[0] for c in self._chunks])
         sumshr = np.concatenate([c[1] for c in self._chunks])
@@ -167,7 +247,10 @@ class _Recorder:
         verdict = np.full(self._total, VERDICT_UNKNOWN, dtype=np.int8)
         for base, v in self._verdicts.items():
             verdict[base : base + v.size] = v
-        return pow_, sumshr, chosen, verdict
+        depth = np.full(self._total, -1, dtype=np.int16)
+        for base, d in self._depths.items():
+            depth[base : base + d.size] = d
+        return pow_, sumshr, chosen, verdict, depth
 
 
 def _eq7_leaf_mask(
@@ -274,7 +357,7 @@ def schedule_recorded(
         n_placement_rejects=rejects,
         total_power=combo.total_power if combo else float("inf"),
     )
-    rec_pow, rec_sumshr, rec_chosen, rec_verdict = rec.arrays()
+    rec_pow, rec_sumshr, rec_chosen, rec_verdict, rec_depth = rec.arrays()
     res.plan_state = PlanState(
         tasks=tasks,
         fleet=fleet,
@@ -285,6 +368,7 @@ def schedule_recorded(
         rec_sumshr=rec_sumshr,
         rec_chosen=rec_chosen,
         rec_verdict=rec_verdict,
+        rec_depth=rec_depth,
         enum=enum,
         complete_below=complete_below,
     )
@@ -299,16 +383,30 @@ def replan(
     fleet: FleetSpec | None = None,
     block_size: int | None = None,
     walk_stats: WalkStats | None = None,
+    record_exhaustive: bool = False,
     **placement_kw,
 ) -> ScheduleResult:
-    """Reschedule ``tasks`` reusing whatever ``state`` makes sound.
+    """Reschedule ``tasks`` (on ``fleet``) reusing whatever ``state``
+    makes sound.
 
-    Dispatches to the warm arrival path when ``tasks`` appends exactly
-    one task to ``state.tasks`` on an unchanged fleet (and
-    backend/options match, so recorded verdicts are meaningful);
-    otherwise runs an incumbent-seeded fresh recorded walk against
-    ``fleet`` (default: the state's fleet).  Always bit-identical to a
-    cold ``schedule(tasks)`` on that fleet.
+    Warm dispatch, in preference order (backend/options must match the
+    state's, so recorded verdicts and folds are meaningful):
+
+    * ``tasks`` extends the state's *root* task tuple on an unchanged
+      fleet — cross-product arrival path (consecutive arrivals chain
+      through the root via :attr:`PlanState.base`, so the second and
+      later arrivals stay warm too);
+    * ``tasks`` removes exactly one of ``state.tasks`` on an unchanged
+      fleet — projection exit path;
+    * ``tasks`` unchanged but ``fleet`` drops one device of
+      ``state.fleet`` (same reference ``t_slr``) — failure path.
+
+    Anything else — or a warm path declining because the state's band
+    cannot cover the event — falls back to an incumbent-seeded fresh
+    recorded walk (``record_exhaustive=True`` makes that walk drain the
+    enumerator so the fallback restores full warmth, the service
+    layer's choice).  Always bit-identical to a cold ``schedule(tasks)``
+    on the target fleet.
     """
     tasks = tuple(tasks)
     if fleet is None:
@@ -316,21 +414,122 @@ def replan(
     if tasks == state.tasks and fleet == state.fleet:
         return state.result
     compatible = (
-        fleet == state.fleet
-        and backend.name == state.engine
-        and dict(placement_kw) == state.placement_kw
+        backend.name == state.engine and dict(placement_kw) == state.placement_kw
     )
-    if (
-        compatible
-        and len(tasks) == len(state.tasks) + 1
-        and tasks[:-1] == state.tasks
-    ):
-        out = _replan_arrival(
-            state, tasks[-1], backend=backend, walk_stats=walk_stats,
-            **placement_kw,
-        )
-        if out is not None:
-            return out
+    if compatible and fleet == state.fleet:
+        root = state.base if state.base is not None else state
+        nb = len(root.tasks)
+        if root.fleet == fleet and len(tasks) >= nb and tasks[:nb] == root.tasks:
+            if len(tasks) == nb:
+                return root.result
+            out = _replan_append(
+                root,
+                tasks[nb:],
+                cur_tasks=state.tasks,
+                cur_result=state.result,
+                backend=backend,
+                walk_stats=walk_stats,
+                **placement_kw,
+            )
+            if out is not None:
+                return out
+        if tasks and len(tasks) == len(state.tasks) - 1:
+            p = _removed_position(state.tasks, tasks)
+            if p is not None:
+                out = _replan_exit(
+                    state, p, backend=backend, walk_stats=walk_stats, **placement_kw
+                )
+                if out is not None:
+                    return out
+                # Arrival-chained state losing a *root* task: the chain
+                # state's band rarely covers the exit horizon, but the
+                # (usually exhaustive) root does.  Project the exit out
+                # of the root, then re-append the chain's arrivals —
+                # both hops warm, both exact.
+                if state.base is not None and p < nb and nb >= 2 and state.appended:
+                    # Band headroom for the re-append hop: its incumbent
+                    # is at most the current winner minus the exiting
+                    # task's chosen variant, and its band reaches down
+                    # by the appended tasks' cheapest variants.
+                    mb = None
+                    if state.result.feasible:
+                        tot = state.result.total_power
+                        pw_p = float(
+                            state.tasks[p].powers()[
+                                state.result.combo.variant_idx[p]
+                            ]
+                        )
+                        min_app = sum(
+                            float(t.powers().min()) for t in state.appended
+                        )
+                        mb = tot - pw_p - min_app + 1e-6 * max(1.0, abs(tot))
+                    mid = _replan_exit(
+                        root,
+                        p,
+                        backend=backend,
+                        walk_stats=walk_stats,
+                        min_band=mb,
+                        **placement_kw,
+                    )
+                    if mid is not None and mid.plan_state is not None:
+                        out = _replan_append(
+                            mid.plan_state,
+                            state.appended,
+                            cur_tasks=state.tasks,
+                            cur_result=state.result,
+                            backend=backend,
+                            walk_stats=walk_stats,
+                            origin="warm_exit",
+                            **placement_kw,
+                        )
+                        if out is not None:
+                            return out
+    elif compatible and tasks == state.tasks:
+        dropped = _dropped_device(state.fleet, fleet)
+        if dropped is not None:
+            out = _replan_failure(
+                state,
+                fleet,
+                dropped,
+                backend=backend,
+                walk_stats=walk_stats,
+                **placement_kw,
+            )
+            if out is not None:
+                return out
+            # Same two-hop rescue as the exit chain: replay the failure
+            # against the exhaustive root, then re-append the chain's
+            # arrivals on the shrunken fleet.
+            if state.base is not None and state.appended:
+                mb = None
+                if state.result.feasible:
+                    tot = state.result.total_power
+                    min_app = sum(
+                        float(t.powers().min()) for t in state.appended
+                    )
+                    mb = tot - min_app + 1e-6 * max(1.0, abs(tot))
+                mid = _replan_failure(
+                    state.base,
+                    fleet,
+                    dropped,
+                    backend=backend,
+                    walk_stats=walk_stats,
+                    min_band=mb,
+                    **placement_kw,
+                )
+                if mid is not None and mid.plan_state is not None:
+                    out = _replan_append(
+                        mid.plan_state,
+                        state.appended,
+                        cur_tasks=state.tasks,
+                        cur_result=state.result,
+                        backend=backend,
+                        walk_stats=walk_stats,
+                        origin="warm_failure",
+                        **placement_kw,
+                    )
+                    if out is not None:
+                        return out
     return _replan_general(
         state,
         tasks,
@@ -338,8 +537,77 @@ def replan(
         backend=backend,
         block_size=block_size,
         walk_stats=walk_stats,
+        exhaustive=record_exhaustive,
         **placement_kw,
     )
+
+
+def _removed_position(
+    old: tuple[Task, ...], new: tuple[Task, ...]
+) -> int | None:
+    """Position ``p`` with ``old`` minus ``old[p]`` == ``new``, else None."""
+    p = len(new)
+    for i, (a, b) in enumerate(zip(old, new, strict=False)):
+        if a != b:
+            p = i
+            break
+    return p if old[:p] + old[p + 1 :] == new else None
+
+
+def _dropped_device(old: FleetSpec, new: FleetSpec) -> int | None:
+    """Index of the single device whose removal turns ``old`` into
+    ``new``, or None when the edit is not a one-device drop (or changes
+    the reference ``t_slr`` — recorded share folds would be meaningless).
+
+    On a homogeneous fleet every device is interchangeable, so the
+    *last* index is reported; ties in a heterogeneous fleet also prefer
+    the last matching index (it is the one position whose drop keeps the
+    survivor set a prefix, enabling reject transfer at ``k=0``)."""
+    if new.n_f != old.n_f - 1 or new.n_f < 1 or new.t_slr != old.t_slr:
+        return None
+    if not old.is_heterogeneous:
+        if not new.is_heterogeneous and (
+            dataclasses.replace(old, n_f=new.n_f, name=new.name) == new
+        ):
+            return new.n_f
+        return None
+    if not new.is_heterogeneous:
+        return None
+    devs = old.devices
+    for i in range(old.n_f - 1, -1, -1):
+        if new.devices != devs[:i] + devs[i + 1 :]:
+            continue
+        # The scalar t_cfg must also be what a pure drop recomputes.
+        if FleetSpec.heterogeneous(new.devices, name=new.name) == new:
+            return i
+        return None
+    return None
+
+
+def _probe_row(
+    shares_row: np.ndarray,
+    tasks: Sequence[Task],
+    fleet: FleetSpec,
+    opts: PlacementOptions,
+) -> tuple[bool, int]:
+    """Scalar-oracle placement probe: ``(feasible, primary death depth)``.
+
+    Depth counts the tasks the *primary* sweep fully placed — ``n_t``
+    when placement walked past the last task (whatever the resilience
+    survivor sweep then said), matching the block backends'
+    ``placed_tasks`` semantics.
+    """
+    plan = place_shares(
+        [float(s) for s in shares_row],
+        [t.init_interval for t in tasks],
+        fleet,
+        t_capture=opts.t_capture,
+        t_store=opts.t_store,
+        repay_init=opts.repay_init,
+        resilience=opts.resilience,
+    )
+    depth = min(plan.unplaced) if plan.unplaced else len(tasks)
+    return bool(plan.feasible), depth
 
 
 def _row_placeable(
@@ -349,14 +617,18 @@ def _row_placeable(
     backend: PlacementBackend,
     opts: PlacementOptions,
 ) -> bool:
-    bp = backend.place_block(
-        shares_row[None, :],
-        [t.init_interval for t in tasks],
-        fleet.t_slr_arr,
-        fleet.t_cfg_arr,
-        opts,
-    )
-    return bool(bp.feasible[0])
+    """Single-row placement probe via the scalar oracle.
+
+    Every backend must agree bit-for-bit with ``place_shares`` (the
+    engine contract, asserted in ``tests/test_placement_backends.py``),
+    so a one-row probe can skip the vectorized block sweep — whose
+    per-iteration numpy overhead dwarfs the work at B=1 — and ask the
+    oracle directly.  ``backend`` stays in the signature: probes are
+    backend-truths the verdict arrays record, and a future engine with a
+    cheaper resident probe would hook in here.
+    """
+    del backend
+    return _probe_row(shares_row, tasks, fleet, opts)[0]
 
 
 def _replan_general(
@@ -367,20 +639,25 @@ def _replan_general(
     backend: PlacementBackend,
     block_size: int | None,
     walk_stats: WalkStats | None,
+    exhaustive: bool = False,
     **placement_kw,
 ) -> ScheduleResult:
-    """Exits / fleet edits / bulk deltas: fresh recorded walk, seeded with
-    the old winner projected onto the new task tuple as an incumbent.
+    """Bulk deltas and declined warm paths: fresh recorded walk, seeded
+    with the old winner projected onto the new task tuple as an
+    incumbent.
 
     The projection keeps each surviving task's previous variant choice;
     it is only a *bound*, verified from scratch (eq. 7 + a placement
     probe) against the new instance and fleet, so no monotonicity
-    assumption about removals is needed — if the probe fails, the walk
+    assumption about the delta is needed — if the probe fails, the walk
     simply runs unbounded and the replan degrades to a plain cold
-    recorded walk.
+    recorded walk.  ``exhaustive`` skips the incumbent bound entirely:
+    the point is then a full re-recording (the service's re-anchoring
+    fallback), and a pruned walk could not claim ``complete_below=inf``.
     """
     incumbent = None
-    if state.result.feasible:
+    k_res = int(placement_kw.get("resilience", 0))
+    if not exhaustive and state.result.feasible and k_res < fleet.n_f:
         prev = {
             t.name: j
             for t, j in zip(state.tasks, state.result.combo.variant_idx, strict=True)
@@ -391,7 +668,6 @@ def _replan_general(
             idx = [prev[t.name] for t in tasks]
             combo = _combo_from_idx(idx, share_vecs, power_vecs)
             w = np.asarray([float(sum(combo.shares))])
-            k_res = int(placement_kw.get("resilience", 0))
             if _eq7_leaf_mask(fleet, len(tasks), w, k_res)[0] and _row_placeable(
                 np.asarray(combo.shares),
                 tasks,
@@ -407,6 +683,7 @@ def _replan_general(
         block_size=block_size,
         walk_stats=walk_stats,
         incumbent_power=incumbent,
+        exhaustive=exhaustive,
         **placement_kw,
     )
 
@@ -417,6 +694,7 @@ def _thin_state(
     backend: PlacementBackend,
     placement_kw: dict,
     res: ScheduleResult,
+    origin: str = "cold",
 ) -> PlanState:
     """State with no recording/frontier (``complete_below = -inf``): the
     next replan from it silently takes the general fresh-walk path."""
@@ -430,80 +708,29 @@ def _thin_state(
         rec_sumshr=np.empty(0),
         rec_chosen=np.empty((0, len(tasks)), dtype=np.int64),
         rec_verdict=np.empty(0, dtype=np.int8),
+        rec_depth=np.empty(0, dtype=np.int16),
         enum=None,
         complete_below=-np.inf,
+        origin=origin,
     )
 
 
-def _count_lex_less(rows: np.ndarray, ref: np.ndarray) -> int:
-    """How many ``rows`` sort lexicographically before ``ref`` (all rows
-    are assumed distinct from ``ref``)."""
-    if not rows.size:
-        return 0
-    neq = rows != ref[None, :]
-    first = np.argmax(neq, axis=1)
-    r = np.arange(rows.shape[0])
-    return int((rows[r, first] < ref[first]).sum())
+def _drain_band(
+    state: PlanState, band_hi: float
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Recorded rows plus the snapshot frontier drained through
+    ``band_hi`` (power-inclusive), as one emission-ordered array set.
 
-
-def _replan_arrival(
-    state: PlanState,
-    new_task: Task,
-    *,
-    backend: PlacementBackend,
-    walk_stats: WalkStats | None,
-    **placement_kw,
-) -> ScheduleResult | None:
-    """Warm path for one appended arrival; None means *fall back*.
-
-    See the module docstring for the three soundness facts this leans
-    on.  Every comparison against recorded folds uses the exact float64
-    values a cold enumeration of the extended set would produce, so the
-    winner, its rank, and its plan are bit-identical to cold.
-    """
-    if not state.result.feasible:
-        return None
-    fleet = state.fleet
-    tasks2 = state.tasks + (new_task,)
-    n2 = len(tasks2)
-    shr_j = new_task.shares(fleet.t_slr)
-    pow_j = new_task.powers()
-    opts = PlacementOptions(**placement_kw)
-    prev = state.result.combo
-    prev_sumshr = float(sum(prev.shares))
-
-    # --- incumbent: old winner ⊕ cheapest placeable variant of the new
-    # task.  Variants probed in ascending power; eq. 7 first (cheap),
-    # then one single-row backend dispatch.  A failed probe does NOT
-    # force a fallback: the walk below simply runs unbounded — the
-    # common shape of an arrival the saturated fleet cannot admit, where
-    # the recorded rejects let us prove infeasibility almost for free.
-    P_inc = np.inf
-    for vv in np.argsort(pow_j, kind="stable"):
-        vv = int(vv)
-        w = np.asarray([prev_sumshr + shr_j[vv]])
-        if not _eq7_leaf_mask(fleet, n2, w, opts.resilience)[0]:
-            continue
-        row = np.asarray(list(prev.shares) + [float(shr_j[vv])])
-        if _row_placeable(row, tasks2, fleet, backend, opts):
-            P_inc = float(prev.total_power + pow_j[vv])
-            break
-
-    # Parent rows that could extend into a candidate at or below P_inc.
-    # Over-inclusive margin: the exact per-candidate filter is below.
-    if np.isfinite(P_inc):
-        band_hi = P_inc - float(pow_j.min()) + 1e-9 * max(1.0, abs(P_inc))
-    else:
-        band_hi = np.inf
-    if band_hi > state.complete_below:
-        return None  # recording + frontier don't cover the band: fall back
-
-    # --- band rows: resume the snapshot frontier for old-TFS rows the
-    # previous walk never emitted (usually none when it ran deep).
+    Sound whenever ``band_hi <= state.complete_below`` — the recording
+    and the frontier then jointly cover every TFS row in the band.  The
+    drain touches only a :meth:`BlockEnumerator.clone`; drained rows get
+    UNKNOWN verdicts and ``-1`` depths (the original walk never
+    dispatched them)."""
     chunks_pow = [state.rec_pow]
     chunks_sumshr = [state.rec_sumshr]
     chunks_chosen = [state.rec_chosen]
     chunks_verdict = [state.rec_verdict]
+    chunks_depth = [state.rec_depth]
     if state.enum is not None and not state.enum.exhausted:
         resume = state.enum.clone()
         if np.isfinite(band_hi):
@@ -515,160 +742,764 @@ def _replan_arrival(
             chunks_pow.append(blk.total_power)
             chunks_sumshr.append(blk.sum_shr)
             chunks_chosen.append(blk.variant_idx)
-            chunks_verdict.append(
-                np.full(len(blk), VERDICT_UNKNOWN, dtype=np.int8)
-            )
+            chunks_verdict.append(np.full(len(blk), VERDICT_UNKNOWN, dtype=np.int8))
+            chunks_depth.append(np.full(len(blk), -1, dtype=np.int16))
+
     def _cat(chunks, axis=0):  # skip the full copy when nothing was drained
         return chunks[0] if len(chunks) == 1 else np.concatenate(chunks, axis=axis)
 
-    all_pow = _cat(chunks_pow)
-    all_sumshr = _cat(chunks_sumshr)
-    all_chosen = _cat(chunks_chosen, axis=0)
-    all_verdict = _cat(chunks_verdict)
-    n_t = len(state.tasks)
-    nv_j = new_task.nv
+    return (
+        _cat(chunks_pow),
+        _cat(chunks_sumshr),
+        _cat(chunks_chosen),
+        _cat(chunks_verdict),
+        _cat(chunks_depth),
+    )
 
-    # --- dispatch candidates: extensions of non-reject parents (reject
-    # parents can't place — reject monotonicity — and only count toward
-    # rank).  Exact filters: cold's eq-7 fold and the incumbent bound.
-    disp = np.flatnonzero(all_verdict != VERDICT_REJECT)
-    rej = np.flatnonzero(all_verdict == VERDICT_REJECT)
-    cand_parent: list[np.ndarray] = []
-    cand_v: list[np.ndarray] = []
-    for v in range(nv_j):
-        cp = all_pow[disp] + pow_j[v]
-        cs = all_sumshr[disp] + shr_j[v]
-        keep = (cp <= P_inc) & _eq7_leaf_mask(fleet, n2, cs, opts.resilience)
-        sel = disp[keep]
-        cand_parent.append(sel)
-        cand_v.append(np.full(sel.size, v, dtype=np.int64))
-    parent = np.concatenate(cand_parent)
-    vcol = np.concatenate(cand_v)
-    cpow = all_pow[parent] + pow_j[vcol]
-    # Cold emission order is (total_power, TSS flat index).  Power alone
-    # determines the winner's *power* (the walk below goes block-by-block
-    # in nondecreasing power), so sort on that single cheap key; the flat
-    # -index tie-break is resolved exactly, but only among the handful of
-    # candidates that share the winner's power.
-    order = np.argsort(cpow, kind="stable")
-    parent, vcol, cpow = parent[order], vcol[order], cpow[order]
 
-    # --- mini-walk: the power-ordered candidates through the backend.
-    share_vecs = tuple(t.shares(fleet.t_slr) for t in tasks2)
-    power_vecs = tuple(t.powers() for t in tasks2)
-    iis2 = [t.init_interval for t in tasks2]
-    t_slr_arr, t_cfg_arr = fleet.t_slr_arr, fleet.t_cfg_arr
+def _walk_candidates(
+    cand_chosen: np.ndarray,
+    cand_verdict: np.ndarray,
+    cand_depth: np.ndarray,
+    tasks: tuple[Task, ...],
+    fleet: FleetSpec,
+    backend: PlacementBackend,
+    opts: PlacementOptions,
+    walk_stats: WalkStats | None,
+) -> tuple[int, np.ndarray, np.ndarray]:
+    """Walk emission-ordered candidate rows to the first placeable one.
 
-    def dispatch(sel_parent, sel_v):
-        shares = np.empty((sel_parent.size, n2))
-        ch = all_chosen[sel_parent]
-        for k in range(n_t):
-            shares[:, k] = share_vecs[k][ch[:, k]]
-        shares[:, n_t] = shr_j[sel_v]
-        bp = backend.place_block(shares, iis2, t_slr_arr, t_cfg_arr, opts)
-        if walk_stats is not None:
-            walk_stats.rows += sel_parent.size
-            walk_stats.block_sizes.append(sel_parent.size)
-        return bp
+    Every verdict in ``cand_verdict`` is a *truth* about this exact
+    (tasks, fleet, options) instance, so the walk can stop at the first
+    known-PLACEABLE row without dispatching it and skip every
+    known-REJECT row (they only count toward the winner's rank by
+    position).  UNKNOWN rows before the stop point are dispatched in
+    power order, exactly the rows a cold walk would have dispatched.
 
-    win = -1
-    for lo in range(0, parent.size, _WARM_BLOCK):
-        hi = min(lo + _WARM_BLOCK, parent.size)
-        r = dispatch(parent[lo:hi], vcol[lo:hi]).first_feasible()
-        if r >= 0:
-            win = lo + r
+    Returns ``(win, verdicts, depths)``: the winner's candidate index
+    (``-1`` when nothing places) plus the verdict and death-depth arrays
+    updated with everything the walk learned.
+    """
+    n_t = len(tasks)
+    out = cand_verdict.copy()
+    dep = cand_depth.copy()
+    kp = np.flatnonzero(cand_verdict == VERDICT_PLACEABLE)
+    stop = int(kp[0]) if kp.size else cand_chosen.shape[0]
+    win = stop if stop < cand_chosen.shape[0] else -1
+    todo = np.flatnonzero(cand_verdict[:stop] == VERDICT_UNKNOWN)
+    if not todo.size:
+        return win, out, dep
+    share_vecs = tuple(t.shares(fleet.t_slr) for t in tasks)
+    iis = [t.init_interval for t in tasks]
+    # Scalar prefix probe: most warm walks settle within a handful of
+    # rows, where the scalar oracle (bit-identical by the engine
+    # contract) costs a fraction of a vectorized sweep's fixed overhead.
+    # Only if the prefix does not settle it does the block path below
+    # take over for the remaining rows.
+    head = todo[: min(_WARM_PROBE, todo.size)]
+    probed = 0
+    for i in head:
+        probed += 1
+        row = np.array([share_vecs[c][cand_chosen[i, c]] for c in range(n_t)])
+        ok, d = _probe_row(row, tasks, fleet, opts)
+        dep[i] = d
+        if ok:
+            out[i] = VERDICT_PLACEABLE
+            win = int(i)
             break
+        out[i] = VERDICT_REJECT
+    if walk_stats is not None and probed:
+        walk_stats.rows += probed
+        walk_stats.block_sizes.append(probed)
+    if probed and out[head[probed - 1]] == VERDICT_PLACEABLE:
+        return win, out, dep
+    todo = todo[probed:]
+    if not todo.size:
+        return win, out, dep
+    t_slr_arr, t_cfg_arr = fleet.t_slr_arr, fleet.t_cfg_arr
+    for lo in range(0, todo.size, _WARM_BLOCK):
+        sel = todo[lo : lo + _WARM_BLOCK]
+        shares = np.empty((sel.size, n_t))
+        ch = cand_chosen[sel]
+        for c in range(n_t):
+            shares[:, c] = share_vecs[c][ch[:, c]]
+        bp = backend.place_block(shares, iis, t_slr_arr, t_cfg_arr, opts)
+        if walk_stats is not None:
+            walk_stats.rows += sel.size
+            walk_stats.block_sizes.append(sel.size)
+        r = int(bp.first_feasible())
+        if r >= 0:
+            out[sel[:r]] = VERDICT_REJECT
+            out[sel[r]] = VERDICT_PLACEABLE
+            dep[sel[: r + 1]] = bp.placed_tasks[: r + 1].astype(np.int16)
+            win = int(sel[r])
+            break
+        out[sel] = VERDICT_REJECT
+        dep[sel] = bp.placed_tasks.astype(np.int16)
+    return win, out, dep
+
+
+def _finish_warm(
+    tasks: tuple[Task, ...],
+    fleet: FleetSpec,
+    backend: PlacementBackend,
+    placement_kw: dict,
+    cand_pow: np.ndarray,
+    cand_sumshr: np.ndarray,
+    cand_chosen: np.ndarray,
+    cand_verdict: np.ndarray,
+    cand_depth: np.ndarray,
+    win: int,
+    P_inc: float,
+    origin: str,
+    base: PlanState | None,
+    appended: tuple[Task, ...],
+    share_vecs: Sequence[np.ndarray],
+    power_vecs: Sequence[np.ndarray],
+) -> ScheduleResult:
+    """Result + carried-over state shared by all three warm paths.
+
+    The candidates are the *exact* new TFS restricted to total power
+    ``<= P_inc`` in exact emission order, so: winner index == cold rank
+    == cold stop-at-winner reject count, and when nothing places the
+    candidate count equals the full |TFS| a cold infeasible walk would
+    have dispatched (``P_inc`` is infinite then — a finite incumbent's
+    own row is always among the candidates, so feasibility cannot be
+    lost; that invariant is asserted).  The candidate band with its
+    learned verdicts *is* the new state (state carry-over): coverage
+    holds below ``P_inc`` — below everything, when the source state was
+    exhaustive and the walk unbounded.
+    """
     if win < 0:
-        # No extension places.  Cold would have dispatched every row of
-        # the new TFS (dispatchable + reject-parent candidates) and
-        # returned infeasible with that many rejects — bit-identical.
-        # The incumbent row is always among the candidates, so a finite
-        # P_inc guarantees a winner; reaching here without one is a
-        # soundness bug worth failing loudly on.
         assert not np.isfinite(P_inc), "warm replan lost its incumbent row"
-        n_rej_cand = 0
-        for v in range(nv_j):
-            cp = all_pow[rej] + pow_j[v]
-            cs = all_sumshr[rej] + shr_j[v]
-            n_rej_cand += int(
-                ((cp <= P_inc) & _eq7_leaf_mask(fleet, n2, cs, opts.resilience)).sum()
-            )
         res = ScheduleResult(
             feasible=False,
             combo=None,
             plan=None,
             chosen_rank=-1,
-            n_tss=combo_count(tasks2),
+            n_tss=combo_count(tasks),
             n_tfs=-1,
             n_tnfs=-1,
-            n_placement_rejects=int(parent.size) + n_rej_cand,
+            n_placement_rejects=int(cand_pow.size),
             total_power=float("inf"),
         )
-        res.plan_state = _thin_state(tasks2, fleet, backend, placement_kw, res)
-        return res
-
-    # --- exact winner among the candidates sharing the winning power:
-    # cold breaks power ties by TSS flat index, i.e. lexicographically on
-    # (parent variant columns, new-variant index).  Re-dispatch the tie
-    # group (tiny; usually size 1) and keep the lex-least feasible row.
-    win_pow = float(cpow[win])
-    t_lo = int(np.searchsorted(cpow, win_pow, side="left"))
-    t_hi = int(np.searchsorted(cpow, win_pow, side="right"))
-    if t_hi - t_lo > 1:
-        ties = np.arange(t_lo, t_hi)
-        bp = dispatch(parent[ties], vcol[ties])
-        feas = np.flatnonzero(np.asarray(bp.feasible))
-        tie_keys = np.concatenate(
-            [all_chosen[parent[ties]], vcol[ties][:, None]], axis=1
+    else:
+        combo = _combo_from_idx(cand_chosen[win], share_vecs, power_vecs)
+        plan = place_combo(combo, tasks, fleet, **placement_kw)
+        res = ScheduleResult(
+            feasible=True,
+            combo=combo,
+            plan=plan,
+            chosen_rank=win,
+            n_tss=combo_count(tasks),
+            n_tfs=-1,
+            n_tnfs=-1,
+            n_placement_rejects=win,
+            total_power=combo.total_power,
         )
-        fk = tie_keys[feas]
-        best = feas[
-            np.lexsort(tuple(fk[:, c] for c in range(fk.shape[1] - 1, -1, -1)))[0]
-        ]
-        win = t_lo + int(best)
-
-    # --- global rank: candidates strictly cheaper than the winner, plus
-    # equal-power candidates that sort lexicographically before it —
-    # counting both dispatched and reject-parent extensions.
-    win_parent_row = all_chosen[parent[win]]
-    win_key = np.append(win_parent_row, vcol[win])
-    rank = t_lo
-    if t_hi - t_lo > 1:
-        rank += _count_lex_less(tie_keys, win_key)
-    for v in range(nv_j):
-        cp = all_pow[rej] + pow_j[v]
-        cs = all_sumshr[rej] + shr_j[v]
-        ok = (cp <= win_pow) & _eq7_leaf_mask(fleet, n2, cs, opts.resilience)
-        sel = rej[ok]
-        cps = cp[ok]
-        rank += int((cps < win_pow).sum())
-        ties = sel[cps == win_pow]
-        if ties.size:
-            tie_keys = np.concatenate(
-                [
-                    all_chosen[ties],
-                    np.full((ties.size, 1), v, dtype=np.int64),
-                ],
-                axis=1,
-            )
-            rank += _count_lex_less(tie_keys, win_key)
-
-    # --- materialise the winner exactly like the cold walk does.
-    idx_full = list(int(j) for j in win_parent_row) + [int(vcol[win])]
-    combo = _combo_from_idx(idx_full, share_vecs, power_vecs)
-    plan = place_combo(combo, tasks2, fleet, **placement_kw)
-    res = ScheduleResult(
-        feasible=True,
-        combo=combo,
-        plan=plan,
-        chosen_rank=rank,
-        n_tss=combo_count(tasks2),
-        n_tfs=-1,
-        n_tnfs=-1,
-        n_placement_rejects=rank,
-        total_power=combo.total_power,
+    res.plan_state = PlanState(
+        tasks=tasks,
+        fleet=fleet,
+        engine=backend.name,
+        placement_kw=dict(placement_kw),
+        result=res,
+        rec_pow=cand_pow,
+        rec_sumshr=cand_sumshr,
+        rec_chosen=cand_chosen,
+        rec_verdict=cand_verdict,
+        rec_depth=cand_depth,
+        enum=None,
+        complete_below=float(P_inc) if np.isfinite(P_inc) else np.inf,
+        origin=origin,
+        base=base,
+        appended=appended,
     )
-    # Thin state: correct for cache/inspection; the next replan from it
-    # takes the general path (which restores a full recording).
-    res.plan_state = _thin_state(tasks2, fleet, backend, placement_kw, res)
     return res
+
+
+def _replan_append(
+    root: PlanState,
+    appended: tuple[Task, ...],
+    *,
+    cur_tasks: tuple[Task, ...],
+    cur_result: ScheduleResult,
+    backend: PlacementBackend,
+    walk_stats: WalkStats | None,
+    origin: str = "warm_arrival",
+    **placement_kw,
+) -> ScheduleResult | None:
+    """Warm path for arrivals: ``tasks = root.tasks + appended``; None
+    means *fall back*.
+
+    Generalises the single-arrival cross product to any number of
+    appended tasks so consecutive arrivals replay against the same
+    exhaustive root (``cur_tasks``/``cur_result`` — the live state the
+    service holds, usually ``root + appended[:-1]`` — only seed the
+    incumbent).  Every comparison uses the exact float64 folds a cold
+    enumeration of the extended set would produce, so winner, rank and
+    plan are bit-identical to cold.  ``origin`` tags the emitted state
+    (the exit chain re-enters here and wants ``"warm_exit"``).
+    """
+    fleet = root.fleet
+    tasks2 = root.tasks + appended
+    n2 = len(tasks2)
+    nb = len(root.tasks)
+    opts = PlacementOptions(**placement_kw)
+    k = opts.resilience
+    share_vecs = tuple(t.shares(fleet.t_slr) for t in tasks2)
+    power_vecs = tuple(t.powers() for t in tasks2)
+    shr_app = share_vecs[nb:]
+    pow_app = power_vecs[nb:]
+
+    # --- incumbent: the current winner, extended with the cheapest
+    # placeable variant of the (at most one) task it does not cover.
+    # Variants probed in ascending power; eq. 7 first (cheap), then one
+    # single-row backend dispatch.  A failed probe does NOT force a
+    # fallback: the walk below simply runs unbounded when the root is
+    # exhaustive — the common shape of an arrival the saturated fleet
+    # cannot admit, where the recorded rejects prove infeasibility
+    # almost for free.
+    P_inc = np.inf
+    if cur_result.feasible:
+        prev = {
+            t.name: int(j)
+            for t, j in zip(cur_tasks, cur_result.combo.variant_idx, strict=True)
+        }
+        missing = [
+            i
+            for i, t in enumerate(tasks2)
+            if t.name not in prev or prev[t.name] >= t.nv
+        ]
+        if len(missing) <= 1:
+            idx = [prev.get(t.name, 0) for t in tasks2]
+            probe_vs = (
+                np.argsort(power_vecs[missing[0]], kind="stable")
+                if missing
+                else np.zeros(1, dtype=np.int64)
+            )
+            for vv in probe_vs:
+                if missing:
+                    idx[missing[0]] = int(vv)
+                combo = _combo_from_idx(idx, share_vecs, power_vecs)
+                w = np.asarray([float(sum(combo.shares))])
+                if not _eq7_leaf_mask(fleet, n2, w, k)[0]:
+                    continue
+                if _row_placeable(
+                    np.asarray(combo.shares), tasks2, fleet, backend, opts
+                ):
+                    P_inc = combo.total_power
+                    break
+
+    # Root rows that could extend into a candidate at or below P_inc.
+    # Over-inclusive margin: the exact per-candidate filter is below.
+    min_app = sum(float(p.min()) for p in pow_app)
+    if np.isfinite(P_inc):
+        band_hi = P_inc - min_app + 1e-9 * max(1.0, abs(P_inc))
+    else:
+        band_hi = np.inf
+    if band_hi > root.complete_below:
+        return None  # recording + frontier don't cover the band: fall back
+    all_pow, all_sumshr, all_chosen, all_verdict, all_depth = _drain_band(
+        root, band_hi
+    )
+    n_ext = 1
+    for t in appended:
+        n_ext *= t.nv
+    if n_ext * max(all_pow.size, 1) > _APPEND_CELL_CAP:
+        return None  # deep chain over a huge recording: fresh walk wins
+
+    # --- candidates: every recorded/drained root row crossed with every
+    # appended-variant tuple, filtered by the exact eq-7 fold and the
+    # incumbent bound.  Reject parents transfer (reject monotonicity);
+    # everything else dispatches as UNKNOWN.
+    cps: list[np.ndarray] = []
+    css: list[np.ndarray] = []
+    cch: list[np.ndarray] = []
+    cvd: list[np.ndarray] = []
+    cdp: list[np.ndarray] = []
+    for vt in itertools.product(*(range(t.nv) for t in appended)):
+        cp = all_pow
+        cs = all_sumshr
+        for m, v in enumerate(vt):
+            cp = cp + pow_app[m][v]
+            cs = cs + shr_app[m][v]
+        keep = (cp <= P_inc) & _eq7_leaf_mask(fleet, n2, cs, k)
+        sel = np.flatnonzero(keep)
+        if not sel.size:
+            continue
+        vt_cols = np.repeat(
+            np.asarray(vt, dtype=np.int64)[None, :], sel.size, axis=0
+        )
+        cps.append(cp[sel])
+        css.append(cs[sel])
+        cch.append(np.concatenate([all_chosen[sel], vt_cols], axis=1))
+        pv = all_verdict[sel]
+        cvd.append(
+            np.where(pv == VERDICT_REJECT, VERDICT_REJECT, VERDICT_UNKNOWN).astype(
+                np.int8
+            )
+        )
+        # A death inside the shared prefix (tasks are appended at the
+        # end) stays a death for every extension; depths at or past the
+        # root's length describe completed prefixes, not facts here.
+        pd = all_depth[sel]
+        cdp.append(np.where((pd >= 0) & (pd < nb), pd, -1).astype(np.int16))
+    if cps:
+        cand_pow = np.concatenate(cps)
+        cand_sumshr = np.concatenate(css)
+        cand_chosen = np.concatenate(cch, axis=0)
+        cand_verdict = np.concatenate(cvd)
+        cand_depth = np.concatenate(cdp)
+    else:
+        cand_pow = np.empty(0)
+        cand_sumshr = np.empty(0)
+        cand_chosen = np.empty((0, n2), dtype=np.int64)
+        cand_verdict = np.empty(0, dtype=np.int8)
+        cand_depth = np.empty(0, dtype=np.int16)
+    order = _emission_order(cand_pow, cand_chosen)
+    cand_pow = cand_pow[order]
+    cand_sumshr = cand_sumshr[order]
+    cand_chosen = cand_chosen[order]
+    cand_verdict = cand_verdict[order]
+    cand_depth = cand_depth[order]
+    win, verd, dep = _walk_candidates(
+        cand_chosen,
+        cand_verdict,
+        cand_depth,
+        tasks2,
+        fleet,
+        backend,
+        opts,
+        walk_stats,
+    )
+    return _finish_warm(
+        tasks2,
+        fleet,
+        backend,
+        placement_kw,
+        cand_pow,
+        cand_sumshr,
+        cand_chosen,
+        verd,
+        dep,
+        win,
+        P_inc,
+        origin,
+        root,
+        appended,
+        share_vecs,
+        power_vecs,
+    )
+
+def _replan_exit(
+    state: PlanState,
+    p: int,
+    *,
+    backend: PlacementBackend,
+    walk_stats: WalkStats | None,
+    min_band: float | None = None,
+    **placement_kw,
+) -> ScheduleResult | None:
+    """Warm path for one task exit (position ``p``); None means fall back.
+
+    Projects the recorded rows onto the surviving task axes — drop
+    column ``p``, re-fold power and eq-7 share sums left-to-right over
+    the surviving columns (the exact association a cold enumeration of
+    the shrunken set uses), dedup over the dropped variant axis — then
+    closes the enumeration *gap* (shrunken-TFS rows none of whose
+    extensions fit the old budget) with a covered-subtree-pruned fresh
+    walk.  Recorded placeable verdicts transfer to projections only when
+    the exiting task was last in placement order; rejects transfer
+    whenever the recorded row's primary sweep died *before* position
+    ``p`` (prefix death — see the module docstring).
+
+    ``min_band`` widens the candidate band past the incumbent (the exit
+    chain asks for enough headroom that re-appending the chain's
+    arrivals finds its band already recorded); extra rows sort after the
+    winner, so the result is unaffected — only the emitted state grows.
+    """
+    fleet = state.fleet
+    n = len(state.tasks)
+    tasks2 = state.tasks[:p] + state.tasks[p + 1 :]
+    n2 = n - 1
+    if n2 == 0:
+        return None  # empty survivor set has no walk to warm-start
+    opts = PlacementOptions(**placement_kw)
+    k = opts.resilience
+    removed = state.tasks[p]
+    share_vecs = tuple(t.shares(fleet.t_slr) for t in tasks2)
+    power_vecs = tuple(t.powers() for t in tasks2)
+    pow_p = removed.powers()
+    shr_min = float(removed.shares(fleet.t_slr).min())
+
+    # --- incumbent: the old winner minus the exiting task, re-verified
+    # from scratch (the greedy simulator is not monotone under removals).
+    P_inc = np.inf
+    if state.result.feasible:
+        prev = state.result.combo
+        idx2 = [int(j) for i, j in enumerate(prev.variant_idx) if i != p]
+        combo = _combo_from_idx(idx2, share_vecs, power_vecs)
+        w = np.asarray([float(sum(combo.shares))])
+        if _eq7_leaf_mask(fleet, n2, w, k)[0] and _row_placeable(
+            np.asarray(combo.shares), tasks2, fleet, backend, opts
+        ):
+            P_inc = combo.total_power
+    band = P_inc if min_band is None else max(P_inc, float(min_band))
+
+    # Horizon: every extension of an in-band projected row — and of any
+    # gap row's covering extension — has total power at most the band
+    # plus the exiting task's costliest variant.  Recording coverage
+    # through H decides band membership *and* gap coverage exactly.
+    pmax = float(pow_p.max())
+    if np.isfinite(band):
+        H = band + pmax + 1e-9 * max(1.0, abs(band) + pmax)
+    else:
+        H = np.inf
+    if H > state.complete_below:
+        return None
+    all_pow, all_sumshr, all_chosen, all_verdict, all_depth = _drain_band(
+        state, H
+    )
+
+    # --- projection: coarse power prefilter, then exact per-column
+    # refolds over the surviving axes, then the exact eq-7 and incumbent
+    # filters, then dedup over the dropped variant axis.  The prefilter
+    # compares each row's total minus its dropped variant's power — that
+    # differs from the exact refolded survivor sum only by fold
+    # association (ulps), so padding the threshold by a relative 1e-7
+    # guarantees no row the exact ``keep`` filter would accept is lost.
+    #
+    # Banded phases: the post-exit winner usually sits far below the
+    # incumbent band (a removal frees capacity), while the band's width
+    # exists to seed the carry-over state.  Projecting and deduping the
+    # whole band on every event would dwarf the walk itself on large
+    # recordings, so phase 1 caps the candidate set at the ``_EXIT_CAP``
+    # cheapest recorded parents; every candidate left out has a strictly
+    # higher survivor power than any phase-1 winner, so a winner found
+    # in phase 1 is the global one with the exact cold rank.  Only a
+    # winnerless phase 1 falls through to the full band.  The emitted
+    # ``complete_below`` is the band the returning phase actually
+    # covered, so the carry-over state stays honest either way.
+    approx2 = None
+    tol_max = 0.0
+    if np.isfinite(band) and all_pow.size:
+        if removed.nv == 1:
+            approx2 = all_pow - float(pow_p[0])  # no per-row gather needed
+        else:
+            approx2 = all_pow - pow_p[all_chosen[:, p]]
+        tol_max = 1e-7 * max(1.0, float(np.max(np.abs(all_pow))))
+    phases: list[tuple[float, float]] = []
+    if approx2 is not None and approx2.size > _EXIT_CAP:
+        b_sel = float(np.partition(approx2, _EXIT_CAP)[_EXIT_CAP])
+        b_cov = b_sel - tol_max
+        if min_band is not None and b_cov < float(min_band):
+            b_cov = float(min_band)
+            b_sel = b_cov + tol_max
+        if b_cov < band:
+            phases.append((b_sel, b_cov))
+    phases.append((np.inf, band))
+
+    # --- gap walk: shrunken-set rows whose every extension broke the old
+    # budget.  A subtree is covered (pruned) when even its largest
+    # completion, extended with the exiting task's *minimum*-share
+    # variant, passes the old eq-7 — the pass is antitone in the folded
+    # sum, so that one variant decides the existential.  Survivor leaves
+    # get the exact insert-fold test below.
+    _, shr_hi2 = _suffix_max_bounds(share_vecs) if n2 else (None, np.zeros(1))
+
+    def covered(d: int, pshr: np.ndarray) -> np.ndarray:
+        u = pshr + shr_hi2[d] + shr_min
+        u = u + (np.abs(u) + 1.0) * 1e-12
+        return _eq7_leaf_mask(fleet, n, u, k)
+
+    for b_sel, b_cov in phases:
+        last_phase = b_cov >= band or not np.isfinite(band)
+        if approx2 is None:
+            idxc = np.arange(all_pow.size)
+        elif last_phase:
+            tol = 1e-7 * np.maximum(1.0, np.abs(all_pow))
+            idxc = np.flatnonzero(approx2 <= band + tol)
+        else:
+            idxc = np.flatnonzero(approx2 <= b_sel)
+        ch2 = all_chosen[idxc][:, [c for c in range(n) if c != p]]
+        pw2 = np.zeros(idxc.size)
+        w2 = np.zeros(idxc.size)
+        for m in range(n2):
+            col = ch2[:, m]
+            pw2 = pw2 + power_vecs[m][col]
+            w2 = w2 + share_vecs[m][col]
+        keep = (pw2 <= b_cov) & _eq7_leaf_mask(fleet, n2, w2, k)
+        sel = idxc[keep]
+        ch2 = ch2[keep]
+        pw2 = pw2[keep]
+        w2 = w2[keep]
+        if removed.nv == 1:
+            # One dropped variant => distinct parents stay distinct on
+            # the surviving axes: the dedup is the identity.
+            uniq = first = inv = np.arange(ch2.shape[0])
+        elif ch2.shape[0]:
+            flat = np.ravel_multi_index(
+                tuple(ch2[:, m] for m in range(n2)), tuple(t.nv for t in tasks2)
+            )
+            uniq, first, inv = np.unique(
+                flat, return_index=True, return_inverse=True
+            )
+        else:
+            uniq = first = inv = np.empty(0, dtype=np.int64)
+        proj_pow = pw2[first]
+        proj_sumshr = w2[first]
+        proj_chosen = ch2[first]
+        proj_depth = np.full(uniq.size, -1, dtype=np.int16)
+        if uniq.size:
+            # Verdict transfer, best-of-group over the dropped variant
+            # axis (rows in a dedup group agree on every surviving
+            # column, hence share the whole placement prefix):
+            #   0  PLACEABLE — only when the exiting task was last (the
+            #      simulator's first n-1 steps are exactly the shrunken
+            #      instance's walk);
+            #   1  REJECT — the recorded primary sweep died at depth
+            #      d < p, a fact about the unchanged prefix alone;
+            #   2  UNKNOWN.
+            # 0 and 1 cannot collide within a group (the shared prefix
+            # cannot both place fully and die before p).
+            dsel = all_depth[sel]
+            dep_rej = (dsel >= 0) & (dsel < p)
+            code = np.where(dep_rej, 1, 2).astype(np.int8)
+            if p == n - 1:
+                code[all_verdict[sel] == VERDICT_PLACEABLE] = 0
+            best = np.full(uniq.size, 2, dtype=np.int8)
+            np.minimum.at(best, inv, code)
+            proj_verdict = np.where(
+                best == 0,
+                VERDICT_PLACEABLE,
+                np.where(best == 1, VERDICT_REJECT, VERDICT_UNKNOWN),
+            ).astype(np.int8)
+            if dep_rej.any():
+                acc = np.full(uniq.size, np.iinfo(np.int16).max, dtype=np.int16)
+                np.minimum.at(acc, inv[dep_rej], dsel[dep_rej])
+                proj_depth = np.where(best == 1, acc, -1).astype(np.int16)
+        else:
+            proj_verdict = np.full(uniq.size, VERDICT_UNKNOWN, dtype=np.int8)
+
+        genum = BlockEnumerator(
+            tasks2,
+            fleet,
+            resilience=k,
+            incumbent_power=float(b_cov) if np.isfinite(b_cov) else None,
+            cover_prune=covered,
+        )
+        gpow: list[np.ndarray] = []
+        gsum: list[np.ndarray] = []
+        gch: list[np.ndarray] = []
+        while True:
+            blk = genum.next_block(65536)
+            if blk is None:
+                break
+            acc = np.zeros(len(blk))
+            for m in range(p):
+                acc = acc + share_vecs[m][blk.variant_idx[:, m]]
+            acc = acc + shr_min
+            for m in range(p, n2):
+                acc = acc + share_vecs[m][blk.variant_idx[:, m]]
+            g = ~_eq7_leaf_mask(fleet, n, acc, k)
+            if g.any():
+                gpow.append(blk.total_power[g])
+                gsum.append(blk.sum_shr[g])
+                gch.append(blk.variant_idx[g])
+        if gpow:
+            cand_pow = np.concatenate([proj_pow] + gpow)
+            cand_sumshr = np.concatenate([proj_sumshr] + gsum)
+            cand_chosen = np.concatenate([proj_chosen] + gch, axis=0)
+            cand_verdict = np.concatenate(
+                [proj_verdict]
+                + [np.full(a.size, VERDICT_UNKNOWN, dtype=np.int8) for a in gpow]
+            )
+            cand_depth = np.concatenate(
+                [proj_depth]
+                + [np.full(a.size, -1, dtype=np.int16) for a in gpow]
+            )
+        else:
+            cand_pow, cand_sumshr = proj_pow, proj_sumshr
+            cand_chosen, cand_verdict = proj_chosen, proj_verdict
+            cand_depth = proj_depth
+        order = _emission_order(cand_pow, cand_chosen)
+        cand_pow = cand_pow[order]
+        cand_sumshr = cand_sumshr[order]
+        cand_chosen = cand_chosen[order]
+        cand_verdict = cand_verdict[order]
+        cand_depth = cand_depth[order]
+        win, verd, dep = _walk_candidates(
+            cand_chosen,
+            cand_verdict,
+            cand_depth,
+            tasks2,
+            fleet,
+            backend,
+            opts,
+            walk_stats,
+        )
+        if win < 0 and not last_phase:
+            continue  # winner above the phase-1 band: run the full band
+        return _finish_warm(
+            tasks2,
+            fleet,
+            backend,
+            placement_kw,
+            cand_pow,
+            cand_sumshr,
+            cand_chosen,
+            verd,
+            dep,
+            win,
+            b_cov,
+            "warm_exit",
+            None,
+            (),
+            share_vecs,
+            power_vecs,
+        )
+    return None  # unreachable: the full-band phase always returns
+
+
+def _replan_failure(
+    state: PlanState,
+    new_fleet: FleetSpec,
+    dropped: int,
+    *,
+    backend: PlacementBackend,
+    walk_stats: WalkStats | None,
+    min_band: float | None = None,
+    **placement_kw,
+) -> ScheduleResult | None:
+    """Warm path for one dropped device; None means fall back.
+
+    Task set and variants are unchanged, so the recorded rows — powers,
+    folds, variant choices — describe the new instance verbatim; only
+    the eq-7 membership test moves to the shrunken fleet.  Homogeneous
+    fleets need no gap walk (the budget is float-monotone in ``n_f``,
+    so the new TFS is a subset of the old) and keep every recorded
+    reject (the smaller fleet is a device prefix — with ``resilience=k``
+    its worst-case survivors are a prefix of the old survivors too).
+    Heterogeneous drops keep rejects only for the last device at
+    ``k=0`` and recover old-eq-7-pruned rows with a covered gap walk.
+    """
+    old = state.fleet
+    tasks = state.tasks
+    n = len(tasks)
+    opts = PlacementOptions(**placement_kw)
+    k = opts.resilience
+    if k >= new_fleet.n_f:
+        return None  # shrunken below the guarantee: general path answers
+    share_vecs = tuple(t.shares(new_fleet.t_slr) for t in tasks)
+    power_vecs = tuple(t.powers() for t in tasks)
+
+    # --- incumbent: the old winner re-verified against the new fleet.
+    P_inc = np.inf
+    if state.result.feasible:
+        combo = state.result.combo
+        w = np.asarray([float(sum(combo.shares))])
+        if _eq7_leaf_mask(new_fleet, n, w, k)[0] and _row_placeable(
+            np.asarray(combo.shares), tasks, new_fleet, backend, opts
+        ):
+            P_inc = combo.total_power
+    # The failure chain widens the band past the incumbent so the
+    # re-append of the chain's arrivals finds its rows recorded; extra
+    # rows sort after the winner and cannot change the result.
+    band = P_inc if min_band is None else max(P_inc, float(min_band))
+    if band > state.complete_below:
+        return None
+    all_pow, all_sumshr, all_chosen, all_verdict, _ = _drain_band(state, band)
+
+    mask = _eq7_leaf_mask(new_fleet, n, all_sumshr, k)
+    if np.isfinite(band):
+        mask &= all_pow <= band
+    sel = np.flatnonzero(mask)
+    cand_pow = all_pow[sel]
+    cand_sumshr = all_sumshr[sel]
+    cand_chosen = all_chosen[sel]
+    # Recorded death depths describe the *old* fleet's sweep — a fleet
+    # change invalidates them, so every carried row restarts at -1.
+    cand_depth = np.full(sel.size, -1, dtype=np.int16)
+    transfer = (not old.is_heterogeneous) or (dropped == old.n_f - 1 and k == 0)
+    if transfer:
+        cand_verdict = np.where(
+            all_verdict[sel] == VERDICT_REJECT, VERDICT_REJECT, VERDICT_UNKNOWN
+        ).astype(np.int8)
+    else:
+        cand_verdict = np.full(sel.size, VERDICT_UNKNOWN, dtype=np.int8)
+
+    if old.is_heterogeneous:
+        # --- gap walk: rows the *old* fleet's tighter eq-7 pruned but the
+        # new fleet admits (device mixes can tighten non-monotonically).
+        # A subtree is covered when even its largest completion passes
+        # the old eq-7; survivor leaves get the exact old-fold test.
+        _, shr_hi = _suffix_max_bounds(share_vecs)
+
+        def covered(d: int, pshr: np.ndarray) -> np.ndarray:
+            u = pshr + shr_hi[d]
+            u = u + (np.abs(u) + 1.0) * 1e-12
+            return _eq7_leaf_mask(old, n, u, k)
+
+        genum = BlockEnumerator(
+            tasks,
+            new_fleet,
+            resilience=k,
+            incumbent_power=float(band) if np.isfinite(band) else None,
+            cover_prune=covered,
+        )
+        gpow: list[np.ndarray] = []
+        gsum: list[np.ndarray] = []
+        gch: list[np.ndarray] = []
+        while True:
+            blk = genum.next_block(65536)
+            if blk is None:
+                break
+            g = ~_eq7_leaf_mask(old, n, blk.sum_shr, k)
+            if g.any():
+                gpow.append(blk.total_power[g])
+                gsum.append(blk.sum_shr[g])
+                gch.append(blk.variant_idx[g])
+        if gpow:
+            cand_pow = np.concatenate([cand_pow] + gpow)
+            cand_sumshr = np.concatenate([cand_sumshr] + gsum)
+            cand_chosen = np.concatenate([cand_chosen] + gch, axis=0)
+            cand_verdict = np.concatenate(
+                [cand_verdict]
+                + [np.full(a.size, VERDICT_UNKNOWN, dtype=np.int8) for a in gpow]
+            )
+            cand_depth = np.full(cand_pow.size, -1, dtype=np.int16)
+            order = _emission_order(cand_pow, cand_chosen)
+            cand_pow = cand_pow[order]
+            cand_sumshr = cand_sumshr[order]
+            cand_chosen = cand_chosen[order]
+            cand_verdict = cand_verdict[order]
+    # (No merge -> no reorder: recorded rows are already emission-ordered
+    # and filtering preserves that.)
+    win, verd, dep = _walk_candidates(
+        cand_chosen,
+        cand_verdict,
+        cand_depth,
+        tasks,
+        new_fleet,
+        backend,
+        opts,
+        walk_stats,
+    )
+    return _finish_warm(
+        tasks,
+        new_fleet,
+        backend,
+        placement_kw,
+        cand_pow,
+        cand_sumshr,
+        cand_chosen,
+        verd,
+        dep,
+        win,
+        band,
+        "warm_failure",
+        None,
+        (),
+        share_vecs,
+        power_vecs,
+    )

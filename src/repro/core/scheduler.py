@@ -273,8 +273,9 @@ def _walk_tfs_blocks(
     sweeps overlap.  Blocks resolve strictly in rank order, so the
     bookkeeping is identical to the synchronous walk.
 
-    ``on_verdict(rank_base, feasible)`` — when given — is called with
-    every resolved block's boolean verdict vector (including the winning
+    ``on_verdict(rank_base, feasible, placed_tasks)`` — when given — is
+    called with every resolved block's boolean verdict vector and the
+    primary sweep's per-row placed-task counts (including the winning
     block's, before the walk stops).  Blocks enqueued but abandoned once
     the winner is known never reach it: the delta replanner
     (:mod:`repro.core.replan`) records those rows as *unknown* rather
@@ -312,7 +313,7 @@ def _walk_tfs_blocks(
         bp = resolve()
         stats.sync_us += (now() - t0) * 1e6
         if on_verdict is not None:
-            on_verdict(base, bp.feasible)
+            on_verdict(base, bp.feasible, bp.placed_tasks)
         if winner is None:
             r = bp.first_feasible()
             if r >= 0:
@@ -1053,6 +1054,8 @@ class PADPSFRScheduler:
         state,
         tasks: Sequence[Task],
         *,
+        fleet: FleetSpec | None = None,
+        record_exhaustive: bool = False,
         walk_stats: WalkStats | None = None,
         **placement_kw,
     ) -> ScheduleResult:
@@ -1060,15 +1063,23 @@ class PADPSFRScheduler:
 
         ``state`` is the :class:`repro.core.replan.PlanState` recorded by
         ``schedule(..., record_state=True)`` (or by a previous
-        :meth:`replan`).  A single task *arrival* (``tasks`` extends
-        ``state.tasks`` by one appended task) reuses the recorded rows and
-        the surviving branch-and-bound frontier; any other delta (exits,
-        fleet changes, multiple arrivals) falls back to a fresh recorded
-        walk seeded with the previous winner as an incumbent power bound.
-        Either way the returned plan is bit-identical to a cold
-        :meth:`schedule` of the same task tuple — only the latency
-        differs.  See :mod:`repro.core.replan` for the mechanism and the
-        soundness argument.
+        :meth:`replan`).  Three deltas take a warm path: task *arrivals*
+        (``tasks`` extends the recorded root's tasks) reuse the recorded
+        rows and the surviving branch-and-bound frontier; a single task
+        *exit* projects the recorded rows onto the surviving task axes
+        and walks only the thin power band the projection cannot cover;
+        a single *device failure* (``fleet`` shrinks by one device)
+        re-checks the recorded rows against the shrunken fleet's eq-7
+        budget, transferring recorded reject verdicts where monotonicity
+        makes that sound.  Every warm path emits a fresh carry-over
+        ``PlanState``, so consecutive warm events chain.  Any other delta
+        falls back to a fresh recorded walk seeded with the previous
+        winner as an incumbent power bound; ``record_exhaustive=True``
+        makes that fallback a full exhaustive re-record.  Either way the
+        returned plan is bit-identical to a cold :meth:`schedule` of the
+        same task tuple on the same fleet — only the latency differs.
+        See :mod:`repro.core.replan` for the mechanism and the soundness
+        argument.
 
         Example — continue from the :meth:`schedule` doctest's instance,
         with a third task arriving:
@@ -1100,8 +1111,9 @@ class PADPSFRScheduler:
             state,
             tuple(tasks),
             backend=self._backend,
-            fleet=self.fleet,
+            fleet=fleet if fleet is not None else self.fleet,
             block_size=self.block_size,
+            record_exhaustive=record_exhaustive,
             walk_stats=walk_stats,
             **placement_kw,
         )

@@ -6,6 +6,14 @@ reconfigure — of the energy-efficiency survey arXiv:2309.12884).  The
 service consumes a stream of these events and keeps a live plan; each
 event is a plain frozen dataclass so traces can be built, logged and
 replayed deterministically (``SchedulerService.replay``).
+
+Every event kind has a warm replanning path — arrivals cross-product
+against the recorded root (telemetry ``path="warm"``), exits project
+the recorded rows onto the surviving task axes (``"warm_exit"``), and
+device failures re-rank them against the shrunken fleet
+(``"warm_failure"``) — so a long mixed trace mostly reuses one
+recording (the churn benchmark in ``benchmarks/scheduler_scale.py``
+measures the hit rate).
 """
 
 from __future__ import annotations

@@ -33,7 +33,6 @@ telemetry and a degraded (``None``) plan until exits free capacity.
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Iterable, Sequence
 
@@ -43,6 +42,22 @@ from .events import DeviceFailure, DeviceRecovery, Event, TaskArrival, TaskExit
 
 __all__ = ["ReplanTelemetry", "SchedulerService"]
 
+# PlanState.origin -> telemetry path: which replan machinery produced the
+# event's result.  Anything the replanner solved fresh (origin "cold")
+# reports as "general"; the three warm paths are distinguished so traces
+# show *which* event kinds actually reuse work.
+_ORIGIN_PATH = {
+    "cold": "general",
+    "warm_arrival": "warm",
+    "warm_exit": "warm_exit",
+    "warm_failure": "warm_failure",
+}
+
+# Telemetry paths that reused previous work: a solve that skipped the
+# fresh branch-and-bound.  (Admission/noop rows never solved at all and
+# count separately.)
+_WARM_PATHS = ("cache", "warm", "warm_exit", "warm_failure")
+
 
 @dataclasses.dataclass(frozen=True)
 class ReplanTelemetry:
@@ -50,7 +65,9 @@ class ReplanTelemetry:
 
     event: str  # e.g. "arrival(decode-7b)"
     admitted: bool  # did the fleet state actually change?
-    path: str  # "admission" | "cache" | "warm" | "general" | "noop"
+    # "admission" | "cache" | "warm" | "warm_exit" | "warm_failure"
+    # | "general" | "noop"
+    path: str
     latency_s: float
     n_tasks: int  # tasks in service after the event
     feasible: bool  # is there a live plan after the event?
@@ -75,6 +92,20 @@ class SchedulerService:
     and the admission filter tightens to the worst-case survivor fleet's
     eq-7 budget.  The guarantee is verified empirically by
     :mod:`repro.service.faultsim`.
+
+    **Staleness-bounded re-recording.**  Warm replans carry state
+    forward, but each hop narrows it (banded removal states, arrival
+    chains against an aging root).  After ``max_stale`` consecutive
+    warm-path events, or whenever the live state's
+    :attr:`~repro.core.replan.PlanState.frontier_coverage` drops below
+    ``min_coverage`` (full roots report 1.0; incumbent-banded removal
+    states at most 0.5, so the 0.6 default re-roots after every warm
+    removal), the service schedules a *background* re-record —
+    a full exhaustive ``record_state=True`` solve of the current tasks,
+    run after the event's telemetry row is closed (so it never inflates
+    event latency), checked bit-identical to the live plan, and swapped
+    in as the new root.  ``rerecord_count`` tallies how often the
+    policy fired.
     """
 
     def __init__(
@@ -84,12 +115,16 @@ class SchedulerService:
         engine: str = "numpy",
         record_exhaustive: bool = True,
         cache_plans: bool = True,
+        max_stale: int = 8,
+        min_coverage: float = 0.6,
         **placement_kw,
     ) -> None:
         self.fleet = fleet
         self.engine = engine
         self.record_exhaustive = record_exhaustive
         self.cache_plans = cache_plans
+        self.max_stale = int(max_stale)
+        self.min_coverage = float(min_coverage)
         self.placement_kw = dict(placement_kw)
         k = self.placement_kw.get("resilience", 0)
         if isinstance(k, bool) or not isinstance(k, int) or k < 0:
@@ -106,6 +141,8 @@ class SchedulerService:
         # homogeneous ones (identical devices need no identity).
         self._failed: list[tuple[int, DeviceProfile] | tuple[None, None]] = []
         self.telemetry: list[ReplanTelemetry] = []
+        self._stale = 0  # consecutive warm-path events since a fresh root
+        self.rerecord_count = 0
 
     # -- public state ---------------------------------------------------
     @property
@@ -304,14 +341,17 @@ class SchedulerService:
             return self._cache[key], "cache"
         state = self._result.plan_state if self._result is not None else None
         if state is not None:
-            res = self._sched.replan(state, target, **self.placement_kw)
-            # thin state (complete_below == -inf) marks the warm path;
-            # the general path re-records and returns a full state.
+            res = self._sched.replan(
+                state,
+                target,
+                record_exhaustive=self.record_exhaustive,
+                **self.placement_kw,
+            )
+            # Every replan tags the state it emits with the path that
+            # built it; "cold" covers the general fresh-walk fallback.
             st = res.plan_state
-            # the warm path marks its thin state with a -inf sentinel
-            # (assigned, never computed — see replan's thin-state contract)
-            thin = st is not None and math.isinf(st.complete_below) and st.complete_below < 0
-            path = "warm" if thin else "general"
+            origin = st.origin if st is not None else "cold"
+            path = _ORIGIN_PATH.get(origin, "general")
         else:
             res = self._sched.schedule(
                 target,
@@ -346,4 +386,60 @@ class SchedulerService:
             reason=reason,
         )
         self.telemetry.append(row)
+        if admitted and path in _WARM_PATHS:
+            self._stale += 1
+        elif admitted and path == "general":
+            self._stale = 0
+        self._maybe_rerecord(path)
         return row
+
+    def _maybe_rerecord(self, path: str) -> None:
+        """Swap in a fresh exhaustive root when the live state is stale.
+
+        Runs *after* the event's telemetry row is closed, so the re-record
+        cost never shows up in per-event latency.  The fresh solve must be
+        bit-identical to the live plan — anything else means the warm
+        paths drifted from cold ``schedule()``, which is a bug worth
+        crashing on.
+        """
+        res = self._result
+        if (
+            path not in _WARM_PATHS
+            or not self._tasks
+            or res is None
+            or not res.feasible
+            or res.plan_state is None
+        ):
+            return
+        st = res.plan_state
+        root = st.base if st.base is not None else st
+        # A sub-2-task root cannot serve future removals (the exit chain
+        # needs a survivor), so a grown service on a tiny root re-roots.
+        need = (
+            self._stale >= self.max_stale
+            or st.frontier_coverage < self.min_coverage
+            or len(root.tasks) < 2 <= len(st.tasks)
+        )
+        if not need:
+            return
+        fresh = self._sched.schedule(
+            self._tasks,
+            record_state=True,
+            record_exhaustive=True,
+            **self.placement_kw,
+        )
+        if (
+            fresh.feasible != res.feasible
+            or fresh.total_power != res.total_power
+            or fresh.chosen_rank != res.chosen_rank
+            or str(fresh.plan) != str(res.plan)
+        ):
+            raise RuntimeError(
+                "re-record produced a different plan than the live warm "
+                f"result for {len(self._tasks)} tasks on {self.fleet.name}"
+            )
+        self._result = fresh
+        if self.cache_plans:
+            self._cache[self._cache_key(self._tasks)] = fresh
+        self._stale = 0
+        self.rerecord_count += 1

@@ -51,7 +51,8 @@ def test_serve_cli():
 
 
 def _bench_artifact(
-    us_by_name, rows_per_s=None, crossover=None, replan=None, resilience=None
+    us_by_name, rows_per_s=None, crossover=None, replan=None, resilience=None,
+    churn=None,
 ):
     doc = {
         "benchmark": "scheduler_scale",
@@ -68,6 +69,8 @@ def _bench_artifact(
         doc["replan"] = replan
     if resilience is not None:
         doc["resilience"] = resilience
+    if churn is not None:
+        doc["churn"] = churn
     return doc
 
 
@@ -158,6 +161,43 @@ def test_trend_report_resilience_rows_graceful(tmp_path):
     proc = _run(["benchmarks.trend_report", str(old), str(old2)])
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "no artifact carries resilience rows" in proc.stdout
+
+
+def test_trend_report_churn_rows_graceful(tmp_path):
+    """Artifacts predating the churn benchmark must not crash the trend
+    report — same contract as the replan/resilience sections."""
+    old = tmp_path / "BENCH_old.json"
+    new = tmp_path / "BENCH_new.json"
+    old.write_text(json.dumps(_bench_artifact({"alg2_batched_tfs4096": 1000.0})))
+    new.write_text(json.dumps(_bench_artifact(
+        {"alg2_batched_tfs4096": 900.0, "churn_exit_warm_10t": 250.0},
+        churn={
+            "deep_instance": "10t",
+            "exit": {"chosen_rank": 58045, "cold_us": 3.1e5,
+                     "warm_us": 2.5e4, "speedup": 12.4, "bit_identical": True},
+            "failure": {"chosen_rank": 58045, "cold_us": 3.2e5,
+                        "warm_us": 3.2e4, "speedup": 10.0,
+                        "bit_identical": True},
+            "trace": {"n_events": 200, "n_solved": 156,
+                      "warm_hit_rate": 0.95, "rerecords": 60,
+                      "speedup": 0.7},
+        },
+    )))
+
+    # old + new: churn trend renders, with a note about the older file
+    proc = _run(["benchmarks.trend_report", str(old), str(new)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "service churn" in proc.stdout
+    assert "12.4x" in proc.stdout
+    assert "95.0%" in proc.stdout
+    assert "predates the churn benchmark" in proc.stdout
+
+    # two pre-churn artifacts: skipped with a message, still exit 0
+    old2 = tmp_path / "BENCH_old2.json"
+    old2.write_text(json.dumps(_bench_artifact({"alg2_batched_tfs4096": 950.0})))
+    proc = _run(["benchmarks.trend_report", str(old), str(old2)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "no artifact carries churn rows" in proc.stdout
 
 
 @pytest.mark.slow

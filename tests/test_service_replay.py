@@ -14,7 +14,7 @@ import random
 
 import pytest
 
-from repro.core import FleetSpec, PADPSFRScheduler, Task, TaskVariant
+from repro.core import FleetSpec, PADPSFRScheduler, Task, TaskVariant, WalkStats
 from repro.core.placement_backends import available_backends
 from repro.service import (
     DeviceFailure,
@@ -48,7 +48,9 @@ def _assert_matches_cold(svc):
     if not svc.tasks:
         assert svc.plan is None
         return
-    cold = PADPSFRScheduler(svc.fleet, engine=svc.engine).schedule(svc.tasks)
+    cold = PADPSFRScheduler(svc.fleet, engine=svc.engine).schedule(
+        svc.tasks, **svc.placement_kw
+    )
     live = svc.plan
     assert live is not None
     assert live.feasible == cold.feasible
@@ -124,6 +126,60 @@ def test_warm_arrival_levels_match_cold():
         if cold.feasible:
             assert warm.combo.variant_idx == cold.combo.variant_idx
             assert str(warm.plan) == str(cold.plan)
+
+
+def test_warm_exit_transfers_reject_depths_zero_dispatch():
+    """Death-depth transfer, pinned directly: every recorded reject dies
+    among the surviving tasks, so the warm exit re-finds the winner
+    without dispatching a single placement row.
+
+    Construction: 2 devices x 30 slots, t_cfg=0 (the eq-7 budget is
+    then task-count independent, so the gap walk is empty).  The
+    all-cheap combo's shares sum to 59 — inside the eq-7 budget of 60,
+    but placing it needs two splits and each split re-pays II=2, so the
+    primary sweep dies on the third task (depth 2).  A near-zero eps
+    task appended *last* is exhaustively recorded; dropping it leaves
+    the reject's death depth (2) strictly below the dropped position
+    (3), and the winner's PLACEABLE verdict survives verbatim — the
+    warm walk should consume only transferred verdicts.
+    """
+    fleet = FleetSpec(n_f=2, t_slr=30.0, t_cfg=0.0)
+    # share = data * t_slr / (period * th) = 3 / th
+    def task(name, shr_cheap, p_cheap, p_exp):
+        return Task(name, period=10.0, data=1.0, init_interval=2.0,
+                    variants=(TaskVariant(cu=1, throughput=3.0 / shr_cheap,
+                                          power=p_cheap),
+                              TaskVariant(cu=1, throughput=3.0 / 13.0,
+                                          power=p_exp)))
+
+    tasks = [task("a", 21.0, 1.0, 5.0), task("b", 21.0, 2.0, 6.0),
+             task("c", 17.0, 3.0, 7.0)]
+    eps = Task("eps", period=50.0, data=1.0, init_interval=1.0,
+               variants=(TaskVariant(cu=1, throughput=30.0 / (50.0 * 1e-6),
+                                     power=1e-6),))
+    sched = PADPSFRScheduler(fleet, engine="numpy")
+
+    rec = sched.schedule([*tasks, eps], record_state=True,
+                         record_exhaustive=True)
+    assert rec.feasible
+    # the recording saw real placement rejects, all dying at depth 2
+    depths = rec.plan_state.rec_depth
+    n = len(tasks) + 1
+    died = depths[(depths >= 0) & (depths < n)]
+    assert died.size > 0 and died.max() == 2
+
+    stats = WalkStats()
+    warm = sched.replan(rec.plan_state, tasks, walk_stats=stats)
+    cold = sched.schedule(tasks)
+    assert cold.chosen_rank > 0  # the transferred rejects are load-bearing
+    assert warm.feasible and cold.feasible
+    assert warm.chosen_rank == cold.chosen_rank
+    assert warm.n_placement_rejects == cold.n_placement_rejects
+    assert warm.total_power == cold.total_power
+    assert warm.combo.variant_idx == cold.combo.variant_idx
+    assert str(warm.plan) == str(cold.plan)
+    # the whole point: no placement row was probed or dispatched
+    assert stats.rows == 0
 
 
 def _v(th, pw):
@@ -226,13 +282,13 @@ def test_telemetry_trace_is_complete():
 
 
 def test_solve_path_telemetry_classifies_warm_and_general():
-    """The warm/general telemetry label keys off replan's thin-state
-    sentinel (``complete_below == -inf``).  Regression for the sentinel
-    check in ``SchedulerService._solve``: the first arrival cold-solves
-    (general), the second replans warm from the recorded state, and the
-    third — replanning from the warm path's *thin* state — falls back to
-    the general fresh walk.  The live plan stays bit-identical to cold
-    throughout."""
+    """The telemetry label keys off :attr:`PlanState.origin`: the first
+    arrival cold-solves (general) and every later arrival chains warm
+    through the recorded root.  Regression for the
+    ``record_exhaustive=True`` carry-over bug: the warm path used to emit
+    a thin state that forced the *third* arrival cold — now two (and
+    three) consecutive arrivals all take the warm path.  The live plan
+    stays bit-identical to cold throughout."""
     fleet = FleetSpec(n_f=3, t_slr=30.0, t_cfg=1.0)
 
     def mk(name, power):
@@ -246,7 +302,89 @@ def test_solve_path_telemetry_classifies_warm_and_general():
 
     svc = SchedulerService(fleet, engine="numpy")
     rows = [svc.submit(mk("a", 2.0)), svc.submit(mk("b", 3.0)),
-            svc.submit(mk("c", 1.0))]
+            svc.submit(mk("c", 1.0)), svc.submit(mk("d", 2.5))]
     assert all(r.admitted for r in rows)
-    assert [r.path for r in rows] == ["general", "warm", "general"]
+    assert [r.path for r in rows] == ["general", "warm", "warm", "warm"]
+    _assert_matches_cold(svc)
+
+
+def test_warm_exit_and_failure_telemetry_paths():
+    """Exits of root tasks classify as ``warm_exit`` and device failures
+    as ``warm_failure``; both stay bit-identical to cold.  (An exit of a
+    task the state *appended* legitimately rides the arrival projection
+    and reports plain ``warm``.)  ``max_stale=1`` keeps the root fresh so
+    every removal replans against a full exhaustive recording."""
+    a, b, c = _abc()
+    svc = SchedulerService(FleetSpec(n_f=3, t_slr=30.0, t_cfg=1.0), max_stale=1)
+    svc.submit(a)
+    svc.submit(b)
+    svc.submit(c)
+    assert svc.rerecord_count >= 1
+    _assert_matches_cold(svc)
+
+    tel = svc.remove("a")  # root task: projection path
+    assert tel.path == "warm_exit"
+    _assert_matches_cold(svc)
+
+    tel = svc.fail_device()
+    assert tel.path == "warm_failure"
+    _assert_matches_cold(svc)
+
+
+def _mixed_trace(rng, svc, n_events):
+    """Drive ``svc`` through ``n_events`` mixed events, checking the live
+    plan against a cold solve after every prefix."""
+    counter = 0
+    paths = []
+    for _ in range(n_events):
+        roll = rng.random()
+        n_alive = len(svc.tasks)
+        if (roll < 0.45 and n_alive < 4) or n_alive == 0:
+            counter += 1
+            tel = svc.submit(_rand_task(rng, f"t{counter}", int_powers=True))
+        elif roll < 0.80 and n_alive:
+            tel = svc.remove(rng.choice(svc.tasks).name)
+        elif roll < 0.90 and svc.fleet.n_f > svc.resilience + 1:
+            tel = svc.fail_device()
+        else:
+            tel = svc.recover_device()
+        paths.append(tel.path)
+        _assert_matches_cold(svc)
+    return paths
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("resilience", [0, 1])
+def test_churn_trace_prefix_equivalence(engine, resilience):
+    """Every prefix of a 100+-event mixed arrival/exit/failure/recovery
+    trace yields plans bit-identical to cold ``schedule()`` — per engine
+    and for resilience k=0 and k=1.  The staleness-bounded re-record
+    policy runs live inside the trace (it raises on any warm/cold
+    divergence, so it doubles as an equivalence oracle)."""
+    rng = random.Random(4242 + 17 * ENGINES.index(engine) + resilience)
+    svc = SchedulerService(
+        FleetSpec(n_f=3, t_slr=35.0, t_cfg=1.0),
+        engine=engine,
+        resilience=resilience,
+        max_stale=5,
+    )
+    n_events = 60 if engine == "scalar" else 110
+    paths = _mixed_trace(rng, svc, n_events)
+    assert len(svc.telemetry) == n_events
+    # the trace must actually exercise the warm machinery
+    solved = [p for p in paths if p not in ("admission", "noop")]
+    assert any(p in ("warm", "warm_exit", "warm_failure", "cache")
+               for p in solved)
+
+
+def test_rerecord_policy_fires_and_preserves_plan():
+    """With a tight ``max_stale`` the re-record policy swaps in a fresh
+    exhaustive root mid-trace; the plan is unchanged (the policy raises
+    on any mismatch) and later arrivals keep hitting the warm path."""
+    rng = random.Random(99)
+    svc = SchedulerService(
+        FleetSpec(n_f=3, t_slr=35.0, t_cfg=1.0), max_stale=2
+    )
+    _mixed_trace(rng, svc, 40)
+    assert svc.rerecord_count >= 1
     _assert_matches_cold(svc)
